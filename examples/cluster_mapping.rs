@@ -1,0 +1,102 @@
+//! Process-mapping scenario (§2.6, §4.8): place the ranks of a
+//! communication-bound application onto the guide's example machine —
+//! 4 cores per PE, 8 PEs per rack, 8 racks (256 PEs), distances
+//! 1:10:100 — and compare the v3.00 global multisection against
+//! partition-then-map and naive baselines on the QAP objective.
+//!
+//! ```text
+//! cargo run --release --example cluster_mapping
+//! ```
+
+use kahip::bench_util::{time_once, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::generators;
+use kahip::mapping::{multisection, qap, HierarchySpec, Topology};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    // the guide's own example strings
+    let spec = HierarchySpec::parse("4:8:8", "1:10:100").expect("guide example parses");
+    let k = spec.num_pes();
+    println!("machine: {} PEs, depth {}\n", k, spec.depth());
+    assert_eq!(k, 256);
+
+    // application communication graph: a 32x32 halo-exchange stencil
+    let app = generators::grid2d(64, 32); // 2048 ranks' worth of work
+    println!("application graph: n={} m={}", app.n(), app.m());
+
+    let topo = Topology::new(&spec, false);
+    let mut table = Table::new(
+        "mapping quality onto 4:8:8 / 1:10:100",
+        &["method", "edge cut", "qap cost", "time"],
+    );
+
+    // baseline 1: plain kaffpa + identity mapping
+    let cfg = Config::from_mode(Mode::Eco, k as u32, 0.05, 1);
+    let (bsecs, base) = time_once(|| kaffpa(&app, &cfg, None, None));
+    let comm = qap::CommGraph::from_partition(&app, &base.partition);
+    let ident_cost = qap::qap_cost(&comm, &topo, &qap::identity_mapping(k));
+    table.row(vec![
+        "kaffpa + identity".into(),
+        base.edge_cut.into(),
+        ident_cost.into(),
+        Cell::Secs(bsecs),
+    ]);
+
+    // baseline 2: kaffpa + random mapping (average of 5)
+    let mut rng = Rng::new(2);
+    let rand_cost: i64 = (0..5)
+        .map(|_| qap::qap_cost(&comm, &topo, &qap::random_mapping(k, &mut rng)))
+        .sum::<i64>()
+        / 5;
+    table.row(vec![
+        "kaffpa + random".into(),
+        base.edge_cut.into(),
+        rand_cost.into(),
+        Cell::Secs(0.0),
+    ]);
+
+    // greedy construction + swap local search on the *same* comm graph
+    let (msecs, (swap_cost, sigma)) = time_once(|| {
+        let greedy = qap::greedy_mapping(&comm, &topo);
+        let mut sigma = if qap::qap_cost(&comm, &topo, &greedy) <= ident_cost {
+            greedy
+        } else {
+            qap::identity_mapping(k)
+        };
+        let mut r = Rng::new(9);
+        qap::swap_local_search(&comm, &topo, &mut sigma, &mut r, 20);
+        (qap::qap_cost(&comm, &topo, &sigma), sigma)
+    });
+    let _ = sigma;
+    table.row(vec![
+        "kaffpa + greedy/swap".into(),
+        base.edge_cut.into(),
+        swap_cost.into(),
+        Cell::Secs(msecs),
+    ]);
+
+    // the v3.00 global multisection
+    let (gsecs, ms) =
+        time_once(|| multisection::global_multisection(&app, &spec, Mode::Eco, 0.05, 4, false));
+    table.row(vec![
+        "global_multisection".into(),
+        ms.edge_cut.into(),
+        ms.qap_cost.into(),
+        Cell::Secs(gsecs),
+    ]);
+
+    table.print();
+
+    assert!(ms.partition.non_empty_blocks() == k, "all PEs must receive work");
+    assert!(
+        ms.qap_cost < rand_cost,
+        "hierarchy-aware mapping must beat random placement"
+    );
+    assert!(
+        swap_cost <= ident_cost,
+        "greedy+swap must not lose to the identity mapping on the same comm graph"
+    );
+    println!("\ncluster_mapping OK");
+}

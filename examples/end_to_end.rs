@@ -1,0 +1,201 @@
+//! End-to-end driver: proves all three layers compose on real workloads.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! 1. loads the AOT Pallas/JAX artifacts through the PJRT runtime (L1/L2),
+//! 2. partitions a mesh-family and a social-family graph with KaFFPa
+//!    (spectral initial partitioning runs on the PJRT backend),
+//! 3. runs the evolutionary KaFFPaE islands under a time budget,
+//! 4. feeds the partitions to every downstream consumer the guide lists:
+//!    evaluator, node separator, node ordering, process mapping, edge
+//!    partitioning, strictly-balanced KaBaPE repair,
+//! 5. validates every invariant and prints the headline metric table.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use kahip::bench_util::{time_once, Table};
+use kahip::coordinator::kaffpa;
+use kahip::evolutionary::{kaffpa_e, EvoConfig};
+use kahip::graph::{generators, Graph};
+use kahip::initial::spectral::{FiedlerBackend, PowerIteration};
+use kahip::mapping::{multisection, HierarchySpec};
+use kahip::partition::config::{Config, Mode};
+use kahip::partition::metrics;
+use kahip::rng::Rng;
+use kahip::runtime::PjrtRuntime;
+
+fn check(name: &str, ok: bool) {
+    assert!(ok, "invariant violated: {name}");
+    println!("  [ok] {name}");
+}
+
+fn main() {
+    // ---- L1/L2: the AOT artifacts through PJRT ----
+    let runtime = match PjrtRuntime::load_default() {
+        Ok(rt) => {
+            println!(
+                "PJRT runtime up: fiedler sizes {:?}, lp shapes {:?}",
+                rt.fiedler_sizes(),
+                rt.lp_shapes()
+            );
+            Some(rt)
+        }
+        Err(e) => {
+            println!("PJRT artifacts unavailable ({e}); falling back to pure Rust");
+            None
+        }
+    };
+    let backend: &dyn FiedlerBackend = match &runtime {
+        Some(rt) => rt,
+        None => &PowerIteration,
+    };
+    println!("spectral backend: {}\n", backend.name());
+
+    // ---- workloads: one per graph family ----
+    let mesh = generators::grid3d(12, 12, 6); // 864-node 3D mesh
+    let mut rng = Rng::new(42);
+    let social = generators::barabasi_albert(4000, 5, &mut rng);
+    println!("mesh   : n={} m={}", mesh.n(), mesh.m());
+    println!("social : n={} m={}\n", social.n(), social.m());
+
+    let mut table = Table::new(
+        "end-to-end headline metrics",
+        &["stage", "graph", "k", "cut/objective", "balance", "time"],
+    );
+
+    // ---- KaFFPa with the spectral backend ----
+    let k = 8u32;
+    for (name, g, mode) in
+        [("mesh", &mesh, Mode::Strong), ("social", &social, Mode::EcoSocial)]
+    {
+        let mut cfg = Config::from_mode(mode, k, 0.03, 7);
+        cfg.use_spectral_initial = true;
+        let (secs, res) = time_once(|| kaffpa(g, &cfg, Some(backend), None));
+        check(&format!("{name}: partition valid"), res.partition.validate(g).is_ok());
+        check(&format!("{name}: feasible at 3%"), res.partition.is_feasible(g, 0.03));
+        check(&format!("{name}: all {k} blocks used"), res.partition.non_empty_blocks() == k as usize);
+        table.row(vec![
+            format!("kaffpa/{}", mode.name()).into(),
+            name.into(),
+            k.into(),
+            res.edge_cut.into(),
+            res.balance.into(),
+            kahip::bench_util::Cell::Secs(secs),
+        ]);
+
+        // ---- KaFFPaE islands under a small time budget ----
+        let mut ecfg = EvoConfig::new(Config::from_mode(mode, k, 0.03, 8));
+        ecfg.islands = 3;
+        ecfg.time_limit = 2.0;
+        ecfg.quickstart = true;
+        let (esecs, evo) = time_once(|| kaffpa_e(g, &ecfg, Some(backend)));
+        check(&format!("{name}: kaffpaE feasible"), evo.partition.is_feasible(g, 0.03));
+        check(
+            &format!("{name}: kaffpaE no worse than kaffpa ({} vs {})", evo.edge_cut, res.edge_cut),
+            evo.edge_cut <= res.edge_cut,
+        );
+        table.row(vec![
+            "kaffpaE(3 islands)".into(),
+            name.into(),
+            k.into(),
+            evo.edge_cut.into(),
+            metrics::balance(g, &evo.partition).into(),
+            kahip::bench_util::Cell::Secs(esecs),
+        ]);
+    }
+
+    // ---- downstream consumers on the mesh ----
+    downstream(&mesh, &mut table);
+
+    println!();
+    table.print();
+    println!("\nend_to_end OK");
+}
+
+fn downstream(g: &Graph, table: &mut Table) {
+    // node separator (2-way)
+    let (secs, sep) =
+        time_once(|| kahip::separator::bisep::node_separator(g, Mode::Eco, 0.20, 3));
+    check("separator disconnects sides", sep.validate(g).is_ok());
+    check("separator non-trivial", !sep.separator.is_empty());
+    table.row(vec![
+        "node_separator".into(),
+        "mesh".into(),
+        2u32.into(),
+        (sep.separator.len() as i64).into(),
+        0.0.into(),
+        kahip::bench_util::Cell::Secs(secs),
+    ]);
+
+    // node ordering: reductions + nested dissection
+    let (secs, order) = time_once(|| {
+        kahip::ordering::node_ordering(g, Mode::Eco, 4, &kahip::ordering::Reduction::DEFAULT_ORDER)
+    });
+    check("ordering is a permutation", kahip::ordering::is_permutation(&order, g.n()));
+    let fill = kahip::ordering::fill_in::fill_in(g, &order);
+    let identity_fill = kahip::ordering::fill_in::fill_in(g, &g.nodes().collect::<Vec<_>>());
+    check(
+        &format!("ordering beats identity fill ({fill} vs {identity_fill})"),
+        fill < identity_fill,
+    );
+    table.row(vec![
+        "node_ordering(fill)".into(),
+        "mesh".into(),
+        1u32.into(),
+        (fill as i64).into(),
+        0.0.into(),
+        kahip::bench_util::Cell::Secs(secs),
+    ]);
+
+    // process mapping onto a 2:2:2 hierarchy
+    let spec = HierarchySpec::parse("2:2:2", "1:10:100").unwrap();
+    let (secs, mapped) =
+        time_once(|| multisection::global_multisection(g, &spec, Mode::Eco, 0.05, 5, false));
+    check("mapping uses all PEs", mapped.partition.non_empty_blocks() == 8);
+    table.row(vec![
+        "global_multisection".into(),
+        "mesh".into(),
+        8u32.into(),
+        mapped.qap_cost.into(),
+        metrics::balance(g, &mapped.partition).into(),
+        kahip::bench_util::Cell::Secs(secs),
+    ]);
+
+    // SPAC edge partitioning
+    let (secs, (ep, idx)) = time_once(|| {
+        kahip::edgepartition::spac::edge_partitioning(g, 4, 0.05, Mode::Eco, 1000, 6)
+    });
+    check("edge partition valid", ep.validate(g).is_ok());
+    let rf = ep.replication_factor(g, &idx);
+    check(&format!("replication factor sane ({rf:.3} < 2)"), rf < 2.0);
+    table.row(vec![
+        "edge_partitioning".into(),
+        "mesh".into(),
+        4u32.into(),
+        ep.vertex_cut(g, &idx).into(),
+        ep.edge_balance().into(),
+        kahip::bench_util::Cell::Secs(secs),
+    ]);
+
+    // strictly balanced repair (KaBaPE balancing): take an infeasible
+    // partition and make it perfectly balanced
+    let bad: Vec<u32> = g.nodes().map(|v| if v < (g.n() as u32) / 8 { 1 } else { 0 }).collect();
+    let mut p = kahip::partition::Partition::from_assignment(g, 2, bad);
+    let bound = kahip::util::block_weight_bound(g.total_node_weight(), 2, 0.0);
+    let mut rng = Rng::new(9);
+    let (secs, ok) = time_once(|| kahip::kaba::balancing::balance(g, &mut p, bound, &mut rng));
+    check("KaBaPE balancing reaches eps=0 feasibility", ok && p.max_block_weight() <= bound);
+    let mut rng = Rng::new(10);
+    let gain = kahip::kaba::kaba_refine(g, &mut p, &mut rng, 10);
+    check("negative-cycle refinement keeps balance", p.max_block_weight() <= bound);
+    table.row(vec![
+        format!("kabape(gain {gain})").into(),
+        "mesh".into(),
+        2u32.into(),
+        metrics::edge_cut(g, &p).into(),
+        metrics::balance(g, &p).into(),
+        kahip::bench_util::Cell::Secs(secs),
+    ]);
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the §5.2 library interface on the guide's Figure 4 graph.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Mirrors `misc/example_library_call` of the original release: build the
+//! CSR arrays by hand (exactly the C calling convention), call `kaffpa`,
+//! inspect the cut, then derive a node separator and an ordering from the
+//! same arrays.
+
+use kahip::api;
+use kahip::partition::config::Mode;
+
+fn main() {
+    // The example graph of the user guide's Figure 4 (5 nodes, 6 edges),
+    // unweighted: vwgt = None, adjcwgt = None (the C NULL convention).
+    let xadj: Vec<u32> = vec![0, 2, 5, 7, 9, 12];
+    let adjncy: Vec<u32> = vec![1, 4, 0, 2, 4, 1, 3, 2, 4, 0, 1, 3];
+
+    println!("== kaffpa (k=2, eco, 3% imbalance) ==");
+    let out = api::kaffpa(&xadj, &adjncy, None, None, 2, 0.03, false, 0, Mode::Eco)
+        .expect("valid CSR");
+    println!("edge cut  : {}", out.edgecut);
+    println!("partition : {:?}", out.part);
+
+    println!("\n== kaffpa_balance_NE (balance nodes+edges) ==");
+    let out =
+        api::kaffpa_balance_ne(&xadj, &adjncy, None, None, 2, 0.20, false, 0, Mode::Eco)
+            .expect("valid CSR");
+    println!("partition : {:?}", out.part);
+
+    println!("\n== node_separator ==");
+    let sep = api::node_separator(&xadj, &adjncy, None, None, 2, 0.20, false, 0, Mode::Eco)
+        .expect("valid CSR");
+    println!("separator : {:?} ({} nodes)", sep.separator, sep.num_separator_vertices);
+
+    println!("\n== reduced_nd (node ordering) ==");
+    let ordering = api::reduced_nd(&xadj, &adjncy, false, 0, Mode::Eco).expect("valid CSR");
+    println!("ordering  : {ordering:?}");
+
+    println!("\n== process_mapping (2 chips x 2 cores, distances 1:10) ==");
+    let map = api::process_mapping(
+        &xadj,
+        &adjncy,
+        None,
+        None,
+        &[2, 2],
+        &[1, 10],
+        0.50, // tiny graph: generous imbalance so 4 blocks exist
+        false,
+        0,
+        Mode::Eco,
+        api::MapMode::Bisection,
+    )
+    .expect("valid CSR");
+    println!("cut {} qap {} part {:?}", map.edgecut, map.qap, map.part);
+
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,82 @@
+//! Web/social-network scenario (§2.4, §2.5, §2.7): the irregular graph
+//! family where matching-based multilevel stalls. Compares the mesh
+//! preconfigurations against the social ones on a scale-free graph, runs
+//! the distributed ParHIP pipeline, and finishes with SPAC edge
+//! partitioning for an edge-centric ("think like an edge") framework.
+//!
+//! ```text
+//! cargo run --release --example social_pipeline
+//! ```
+
+use kahip::bench_util::{time_once, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::edgepartition::{self, spac};
+use kahip::graph::generators;
+use kahip::parhip::{parhip, ParhipMode};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let ba = generators::barabasi_albert(6000, 6, &mut rng);
+    let rmat = generators::rmat(12, 8, &mut rng);
+    println!("barabasi-albert: n={} m={} maxdeg={}", ba.n(), ba.m(), ba.max_degree());
+    println!("rmat           : n={} m={} maxdeg={}\n", rmat.n(), rmat.m(), rmat.max_degree());
+
+    // ---- mesh configs vs social configs on the scale-free graph ----
+    let k = 8u32;
+    let mut t = Table::new(
+        "mesh vs social preconfigurations (BA graph, k=8)",
+        &["preconfig", "coarsening", "cut", "feasible", "time"],
+    );
+    for mode in [Mode::Fast, Mode::Eco, Mode::FastSocial, Mode::EcoSocial, Mode::StrongSocial] {
+        let cfg = Config::from_mode(mode, k, 0.03, 3);
+        let (s, r) = time_once(|| kaffpa(&ba, &cfg, None, None));
+        t.row(vec![
+            mode.name().into(),
+            format!("{:?}", cfg.coarsening).into(),
+            r.edge_cut.into(),
+            format!("{}", r.partition.is_feasible(&ba, 0.03)).into(),
+            Cell::Secs(s),
+        ]);
+    }
+    t.print();
+
+    // ---- ParHIP: the distributed pipeline on simulated ranks ----
+    let mut t = Table::new(
+        "parhip scaling (BA graph, k=8, fastsocial)",
+        &["ranks", "cut", "coarse_n", "time"],
+    );
+    for ranks in [1usize, 2, 4, 8] {
+        let (s, r) =
+            time_once(|| parhip(&ba, k, 0.03, ParhipMode::FastSocial, ranks, 5, false));
+        assert!(r.partition.validate(&ba).is_ok());
+        t.row(vec![ranks.into(), r.edge_cut.into(), r.coarse_n.into(), Cell::Secs(s)]);
+    }
+    t.print();
+
+    // ---- SPAC edge partitioning for edge-centric processing ----
+    let mut t = Table::new(
+        "edge partitioning (RMAT graph, k=4): SPAC vs baselines",
+        &["method", "replication", "edge balance", "vertex cut"],
+    );
+    let (ep, idx) = spac::edge_partitioning(&rmat, 4, 0.05, Mode::EcoSocial, 1000, 9);
+    ep.validate(&rmat).unwrap();
+    let rnd = edgepartition::random_edge_partition(rmat.m(), 4, &mut rng);
+    let chunk = edgepartition::chunked_edge_partition(rmat.m(), 4);
+    for (name, e) in [("spac", &ep), ("random", &rnd), ("chunked", &chunk)] {
+        t.row(vec![
+            name.into(),
+            e.replication_factor(&rmat, &idx).into(),
+            e.edge_balance().into(),
+            e.vertex_cut(&rmat, &idx).into(),
+        ]);
+    }
+    t.print();
+    assert!(
+        ep.replication_factor(&rmat, &idx) < rnd.replication_factor(&rmat, &idx),
+        "SPAC must beat random edge assignment on replication"
+    );
+
+    println!("\nsocial_pipeline OK");
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust.
+
+Run once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards. The interchange format is HLO **text**, not a
+serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "fiedler_iters": model.FIEDLER_ITERS,
+        "fiedler": [],
+        "lp": [],
+    }
+    for size in model.FIEDLER_SIZES:
+        text = to_hlo_text(model.lower_fiedler(size))
+        name = f"fiedler_{size}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["fiedler"].append({"size": size, "file": name})
+        print(f"  fiedler size={size:<4} -> {name} ({len(text)} chars)")
+    for n, k in model.LP_SHAPES:
+        text = to_hlo_text(model.lower_lp(n, k))
+        name = f"lp_{n}_{k}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["lp"].append({"n": n, "k": k, "file": name})
+        print(f"  lp n={n:<4} k={k:<3} -> {name} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest.json ({len(manifest['fiedler'])} fiedler, "
+          f"{len(manifest['lp'])} lp variants)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    print(f"AOT-lowering to {args.out}")
+    emit(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: blocked dense LP scoring ``S = A @ H``.
+
+One step of size-unconstrained label propagation on a dense (padded)
+adjacency: ``A`` is (n, n) edge weights, ``H`` the (n, k) one-hot block
+membership, ``S[v, b]`` the weight from v into block b. The argmax over
+``S`` (taken in the L2 model) is the classic LP update rule of §2.4.
+
+An (n×n)·(n×k) matmul is the textbook MXU shape: the grid walks row
+blocks of ``A``; each step keeps a (BM, n) tile of ``A`` and the whole
+(n, k) ``H`` panel resident in VMEM and emits a (BM, k) tile of ``S``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _lp_score_kernel(a_ref, h_ref, o_ref):
+    o_ref[...] = a_ref[...] @ h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lp_score(a, h, *, block=DEFAULT_BLOCK):
+    """S = A @ H via the row-blocked Pallas kernel.
+
+    ``a``: (n, n) f32, ``h``: (n, k) f32 one-hot, n divisible by
+    min(block, n).
+    """
+    n = a.shape[0]
+    k = h.shape[1]
+    assert a.shape == (n, n), f"square matrix expected, got {a.shape}"
+    assert h.shape == (n, k), f"H shape {h.shape} != ({n}, {k})"
+    bm = min(block, n)
+    assert n % bm == 0, f"n={n} not divisible by block={bm}"
+    grid = (n // bm,)
+    return pl.pallas_call(
+        _lp_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),  # row tile of A
+            pl.BlockSpec((n, k), lambda i: (0, 0)),   # full H panel
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), a.dtype),
+        interpret=True,
+    )(a, h)
+
+
+def lp_labels(a, h, *, block=DEFAULT_BLOCK):
+    """One LP step: argmax of the kernel's scores (i32 labels)."""
+    return jnp.argmax(lp_score(a, h, block=block), axis=1).astype(jnp.int32)
+
+
+def vmem_bytes(n, k, block=DEFAULT_BLOCK, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf)."""
+    bm = min(block, n)
+    return dtype_bytes * (bm * n + n * k + bm * k)

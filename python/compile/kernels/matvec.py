@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: blocked dense matvec ``y = B @ x``.
+
+The hot-spot of the deflated power iteration (L2's Fiedler program). The
+matrix is walked in row blocks: each grid step loads a ``(BM, n)`` tile
+of ``B`` and the full vector ``x`` into VMEM and emits a ``(BM,)`` slice
+of the result. See DESIGN.md §Hardware-Adaptation for the BlockSpec →
+MXU/VMEM reasoning (the GPU paper-equivalent would be a warp-per-row
+SpMV; on TPU the insight maps to dense MXU tiles on the padded coarse
+Laplacian).
+
+``interpret=True`` is mandatory on this CPU-only image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size. 128 matches the MXU systolic-array edge (128x128 f32
+# tiles); every AOT size variant (64..512) is a multiple of 64, and the
+# kernel asserts divisibility rather than masking.
+DEFAULT_BLOCK = 128
+
+
+def _matvec_kernel(b_ref, x_ref, o_ref):
+    # One row-block: (BM, n) @ (n,) -> (BM,). jnp.dot inside the kernel
+    # lowers onto the MXU on real hardware; interpret mode runs it as
+    # numpy einsum.
+    o_ref[...] = b_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec(b, x, *, block=DEFAULT_BLOCK):
+    """y = B @ x via the row-blocked Pallas kernel.
+
+    ``b``: (n, n) f32, ``x``: (n,) f32, n divisible by min(block, n).
+    """
+    n = b.shape[0]
+    assert b.shape == (n, n), f"square matrix expected, got {b.shape}"
+    assert x.shape == (n,), f"vector shape {x.shape} != ({n},)"
+    bm = min(block, n)
+    assert n % bm == 0, f"n={n} not divisible by block={bm}"
+    grid = (n // bm,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),  # row tile of B
+            pl.BlockSpec((n,), lambda i: (0,)),       # full x, reused per tile
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(b, x)
+
+
+def vmem_bytes(n, block=DEFAULT_BLOCK, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (for DESIGN.md §Perf):
+    a (block, n) tile of B + x + the output slice."""
+    bm = min(block, n)
+    return dtype_bytes * (bm * n + n + bm)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference here with identical
+signature and semantics; pytest + hypothesis assert allclose between the
+two across shapes and inputs. The Fiedler reference additionally mirrors
+the pure-Rust fallback in ``rust/src/initial/spectral.rs`` step for step,
+so the three implementations (Pallas kernel, jnp reference, Rust
+fallback) are mutually checkable.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(b, x):
+    """y = B @ x — the power-iteration hot-spot."""
+    return b @ x
+
+
+def lp_score_ref(a, h):
+    """scores = A @ H — dense label-propagation scoring.
+
+    ``a`` is the (n, n) dense adjacency (weights), ``h`` the (n, k)
+    one-hot block-membership matrix; ``scores[v, b]`` is the total edge
+    weight from v into block b.
+    """
+    return a @ h
+
+
+def lp_labels_ref(a, h):
+    """One LP step: every vertex adopts its highest-scoring block."""
+    return jnp.argmax(lp_score_ref(a, h), axis=1).astype(jnp.int32)
+
+
+def deflate_normalize_ref(y, u):
+    """Project out the constant direction ``u`` and normalize."""
+    y = y - jnp.dot(y, u) * u
+    norm = jnp.sqrt(jnp.sum(y * y))
+    return y / jnp.maximum(norm, 1e-20)
+
+
+def fiedler_ref(b, u, x0, iters):
+    """Deflated power iteration, plain python loop over matvec_ref.
+
+    Matches rust ``PowerIteration::run`` (modulo the divergence early-out,
+    which the AOT program replaces with a clamped norm).
+    """
+    x = x0
+    for _ in range(iters):
+        x = deflate_normalize_ref(matvec_ref(b, x), u)
+    return x

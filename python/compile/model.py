@@ -1,0 +1,79 @@
+"""L2: the JAX compute graphs that get AOT-lowered to HLO text.
+
+Two programs, both calling the L1 Pallas kernels so the kernels lower
+into the same HLO module:
+
+* ``fiedler_fn`` — ``FIEDLER_ITERS`` steps of deflated shifted power
+  iteration on the padded dense matrix ``B = σI − L`` of the coarsest
+  graph; returns the (approximate) Fiedler vector. Executed from Rust by
+  ``initial::spectral`` through the PJRT runtime.
+* ``lp_fn`` — one dense label-propagation step (kernel scores + argmax),
+  the §2.4 update rule on a padded coarse adjacency.
+
+Contract with the Rust side (``rust/src/initial/spectral.rs``):
+``FIEDLER_ITERS`` here must equal ``FIEDLER_ITERS`` there, and inputs
+are zero-padded to the compiled size variant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lp_score import lp_score
+from .kernels.matvec import matvec
+
+# Must match rust/src/initial/spectral.rs::FIEDLER_ITERS.
+FIEDLER_ITERS = 200
+
+# AOT size variants: Rust pads the coarse graph into the smallest one.
+# 512 == rust MAX_SPECTRAL_N.
+FIEDLER_SIZES = (64, 128, 256, 512)
+
+# (n, k) variants for the dense LP step.
+LP_SHAPES = ((128, 4), (256, 8), (512, 16))
+
+
+def fiedler_fn(b, u, x0):
+    """Deflated power iteration: x ← normalize((I − uuᵀ) B x), repeated.
+
+    ``b``: (n, n) padded σI − L, ``u``: normalized constant vector on the
+    real coordinates, ``x0``: normalized random start, pre-deflated.
+    The divergence early-out of the Rust fallback becomes a clamped norm
+    (an AOT program has no early exit); σ-shifted B never degenerates in
+    practice because λ_max(B) ≥ σ/2 > 0.
+    """
+
+    # Perf (EXPERIMENTS.md §Perf L1): every compiled variant (n ≤ 512)
+    # fits a full-matrix tile in VMEM (4·n² ≤ 1 MiB ≪ 16 MiB), so the
+    # BlockSpec uses one grid step. Under interpret=True each extra grid
+    # step costs dynamic-slice emulation per fori iteration — block=n is
+    # 25-68x faster on CPU and tile-optimal on TPU at these sizes; the
+    # row-blocked path (block=128) remains for hypothetical larger
+    # variants.
+    size = b.shape[0]
+
+    def body(_, x):
+        y = matvec(b, x, block=size)
+        y = y - jnp.dot(y, u) * u
+        norm = jnp.sqrt(jnp.sum(y * y))
+        return y / jnp.maximum(norm, 1e-20)
+
+    return jax.lax.fori_loop(0, FIEDLER_ITERS, body, x0)
+
+
+def lp_fn(a, h):
+    """One dense LP step: labels = argmax_b Σ_u A[v,u]·H[u,b] (i32)."""
+    return jnp.argmax(lp_score(a, h, block=a.shape[0]), axis=1).astype(jnp.int32)
+
+
+def lower_fiedler(size):
+    """jax.jit(...).lower for one Fiedler size variant."""
+    spec_m = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((size,), jnp.float32)
+    return jax.jit(fiedler_fn).lower(spec_m, spec_v, spec_v)
+
+
+def lower_lp(n, k):
+    """jax.jit(...).lower for one LP shape variant."""
+    spec_a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    spec_h = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    return jax.jit(lp_fn).lower(spec_a, spec_h)

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; fixed cases pin the block-boundary
+and degenerate shapes. All Pallas calls run interpret=True on CPU.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lp_score import lp_score, lp_labels, vmem_bytes as lp_vmem
+from compile.kernels.matvec import matvec, vmem_bytes as mv_vmem
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+# sizes the AOT variants use must divide the default block or be multiples
+SIZES = [8, 16, 64, 128, 256]
+
+
+def rand(shape, seed, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------- matvec
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matvec_matches_ref_across_sizes(n):
+    b = rand((n, n), n)
+    x = rand((n,), n + 1)
+    np.testing.assert_allclose(
+        np.asarray(matvec(b, x)), np.asarray(ref.matvec_ref(b, x)), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("block", [32, 64, 128, 256])
+def test_matvec_block_size_invariance(block):
+    n = 256
+    b = rand((n, n), 7)
+    x = rand((n,), 8)
+    out = np.asarray(matvec(b, x, block=block))
+    np.testing.assert_allclose(out, np.asarray(ref.matvec_ref(b, x)), rtol=RTOL, atol=ATOL)
+
+
+def test_matvec_identity():
+    n = 64
+    x = rand((n,), 3)
+    np.testing.assert_allclose(
+        np.asarray(matvec(np.eye(n, dtype=np.float32), x)), x, rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matvec_zero_matrix():
+    n = 64
+    x = rand((n,), 4)
+    out = np.asarray(matvec(np.zeros((n, n), np.float32), x))
+    assert np.all(out == 0)
+
+
+def test_matvec_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        matvec(np.zeros((8, 4), np.float32), np.zeros(4, np.float32))
+    with pytest.raises(AssertionError):
+        matvec(np.zeros((8, 8), np.float32), np.zeros(4, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_matvec_hypothesis_sweep(n, seed, scale):
+    b = rand((n, n), seed, scale)
+    x = rand((n,), seed + 1, scale)
+    got = np.asarray(matvec(b, x))
+    want = np.asarray(ref.matvec_ref(b, x))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale * scale * n)
+
+
+# --------------------------------------------------------------- lp_score
+
+
+@pytest.mark.parametrize("n,k", [(8, 2), (64, 4), (128, 4), (256, 8)])
+def test_lp_score_matches_ref(n, k):
+    a = np.abs(rand((n, n), n + k))
+    a = a + a.T  # symmetric like an adjacency
+    labels = np.random.default_rng(n).integers(0, k, n)
+    h = np.eye(k, dtype=np.float32)[labels]
+    np.testing.assert_allclose(
+        np.asarray(lp_score(a, h)), np.asarray(ref.lp_score_ref(a, h)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_lp_labels_majority_rule():
+    # two dense cliques with one weak cross edge: every vertex must adopt
+    # its own clique's label
+    n, k = 16, 2
+    a = np.zeros((n, n), np.float32)
+    a[:8, :8] = 1.0
+    a[8:, 8:] = 1.0
+    np.fill_diagonal(a, 0.0)
+    a[0, 8] = a[8, 0] = 0.1
+    labels = np.array([0] * 8 + [1] * 8)
+    h = np.eye(k, dtype=np.float32)[labels]
+    out = np.asarray(lp_labels(a, h))
+    np.testing.assert_array_equal(out, labels)
+    np.testing.assert_array_equal(out, np.asarray(ref.lp_labels_ref(a, h)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 64, 128]),
+    k=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lp_score_hypothesis_sweep(n, k, seed):
+    a = np.abs(rand((n, n), seed))
+    labels = np.random.default_rng(seed + 1).integers(0, k, n)
+    h = np.eye(k, dtype=np.float32)[labels]
+    np.testing.assert_allclose(
+        np.asarray(lp_score(a, h)), np.asarray(ref.lp_score_ref(a, h)), rtol=1e-3, atol=1e-3
+    )
+
+
+# ------------------------------------------------------- VMEM accounting
+
+
+def test_vmem_estimates_monotonic():
+    # the §Perf analytic model: bigger blocks, bigger footprint; all
+    # variants must fit the ~16 MiB VMEM of a TPU core
+    sizes = [64, 128, 256, 512]
+    est = [mv_vmem(n) for n in sizes]
+    assert est == sorted(est)
+    assert est[-1] < 16 * 2**20
+    assert lp_vmem(512, 16) < 16 * 2**20

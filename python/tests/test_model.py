@@ -1,0 +1,129 @@
+"""L2 correctness: the AOT programs vs oracles, plus spectral semantics.
+
+Verifies the Fiedler program finds known eigenstructure (barbell bridge,
+grid sweep cuts), that padding is inert, that the LP program implements
+the §2.4 update rule, and that the HLO-text lowering contract the Rust
+runtime relies on holds (ENTRY present, tuple return, expected shapes).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def laplacian_b(adj):
+    """B = σI − L, σ = 2·max weighted degree (matches rust build_inputs)."""
+    deg = adj.sum(axis=1)
+    sigma = 2.0 * max(float(deg.max()), 1.0)
+    return np.diag(sigma - deg).astype(np.float32) + adj.astype(np.float32)
+
+
+def pad(mat, size):
+    out = np.zeros((size, size), np.float32)
+    out[: mat.shape[0], : mat.shape[1]] = mat
+    return out
+
+
+def fiedler_inputs(adj, size, seed=0):
+    n = adj.shape[0]
+    b = pad(laplacian_b(adj), size)
+    u = np.zeros(size, np.float32)
+    u[:n] = 1.0 / np.sqrt(n)
+    rng = np.random.default_rng(seed)
+    x0 = np.zeros(size, np.float32)
+    x0[:n] = rng.standard_normal(n)
+    x0 -= (x0 @ u) * u
+    x0 /= np.linalg.norm(x0)
+    return b, u, x0
+
+
+def barbell(c=6):
+    """Two c-cliques joined by one edge — Fiedler must split at the bridge."""
+    n = 2 * c
+    a = np.zeros((n, n), np.float32)
+    a[:c, :c] = 1.0
+    a[c:, c:] = 1.0
+    np.fill_diagonal(a, 0.0)
+    a[c - 1, c] = a[c, c - 1] = 1.0
+    return a
+
+
+def test_fiedler_program_matches_ref_loop():
+    adj = barbell()
+    b, u, x0 = fiedler_inputs(adj, 64)
+    got = np.asarray(jax.jit(model.fiedler_fn)(b, u, x0))
+    want = np.asarray(ref.fiedler_ref(jnp.asarray(b), jnp.asarray(u), jnp.asarray(x0), model.FIEDLER_ITERS))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fiedler_splits_barbell():
+    adj = barbell()
+    b, u, x0 = fiedler_inputs(adj, 64, seed=1)
+    f = np.asarray(jax.jit(model.fiedler_fn)(b, u, x0))[:12]
+    # the sign pattern separates the two cliques
+    assert np.all(np.sign(f[:6]) == np.sign(f[0]))
+    assert np.all(np.sign(f[6:]) == -np.sign(f[0]))
+
+
+def test_fiedler_padding_is_inert():
+    adj = barbell()
+    for size in (64, 128):
+        b, u, x0 = fiedler_inputs(adj, size, seed=2)
+        f = np.asarray(jax.jit(model.fiedler_fn)(b, u, x0))
+        assert np.all(np.abs(f[12:]) < 1e-5), "padding leaked"
+        # unit norm on the real coordinates
+        assert abs(np.linalg.norm(f[:12]) - 1.0) < 1e-3
+
+
+def test_fiedler_is_deflated():
+    adj = barbell()
+    b, u, x0 = fiedler_inputs(adj, 64, seed=3)
+    f = np.asarray(jax.jit(model.fiedler_fn)(b, u, x0))
+    assert abs(float(f @ u)) < 1e-4, "constant direction not deflated"
+
+
+def test_lp_program_update_rule():
+    # grid-ish adjacency, random labels: program == oracle
+    rng = np.random.default_rng(5)
+    n, k = 128, 4
+    a = np.abs(rng.standard_normal((n, n))).astype(np.float32)
+    a = a + a.T
+    np.fill_diagonal(a, 0.0)
+    h = np.eye(k, dtype=np.float32)[rng.integers(0, k, n)]
+    got = np.asarray(jax.jit(model.lp_fn)(a, h))
+    want = np.asarray(ref.lp_labels_ref(a, h))
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+
+
+# ------------------------------------------------------ lowering contract
+
+
+@pytest.mark.parametrize("size", [64, 128])
+def test_fiedler_hlo_text_contract(size):
+    text = aot.to_hlo_text(model.lower_fiedler(size))
+    assert "ENTRY" in text
+    assert f"f32[{size},{size}]" in text
+    # return_tuple=True: root is a tuple of one f32[size] value
+    assert f"->(f32[{size}]" in text
+
+
+def test_lp_hlo_text_contract():
+    n, k = model.LP_SHAPES[0]
+    text = aot.to_hlo_text(model.lower_lp(n, k))
+    assert "ENTRY" in text
+    assert f"f32[{n},{n}]" in text
+    assert f"->(s32[{n}]" in text
+
+
+def test_iters_matches_rust_constant():
+    # rust/src/initial/spectral.rs pins FIEDLER_ITERS = 200; the AOT
+    # program must agree or the artifacts silently change semantics.
+    import pathlib
+
+    src = pathlib.Path(__file__).resolve().parents[2] / "rust/src/initial/spectral.rs"
+    assert f"FIEDLER_ITERS: usize = {model.FIEDLER_ITERS};" in src.read_text()

@@ -1,0 +1,53 @@
+//! mtry-abl: DESIGN.md ablation — multi-try FM (§2.1) on/off. The
+//! localized single-seed searches should escape local optima the
+//! boundary-initialized k-way FM is stuck in, on both graph families.
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::generators;
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4);
+    let workloads = vec![
+        ("grid 28x28", generators::grid2d(28, 28), Mode::Strong),
+        ("ba n=3000", generators::barabasi_albert(3000, 5, &mut rng), Mode::StrongSocial),
+    ];
+    let k = 8u32;
+    let mut t = Table::new(
+        "ablation: multi-try FM (k=8, best of 5 seeds)",
+        &["graph", "variant", "cut", "time"],
+    );
+    let mut wins = 0usize;
+    for (name, g, mode) in &workloads {
+        let run = |mtry: bool| {
+            let mut best_cut = i64::MAX;
+            let (secs, _) = time_once(|| {
+                for seed in 0..5 {
+                    let mut cfg = Config::from_mode(*mode, k, 0.03, seed);
+                    cfg.use_multitry_fm = mtry;
+                    best_cut = best_cut.min(kaffpa(g, &cfg, None, None).edge_cut);
+                }
+            });
+            (secs, best_cut)
+        };
+        let (t_off, off) = run(false);
+        let (t_on, on) = run(true);
+        t.row(vec![(*name).into(), "no multitry".into(), off.into(), Cell::Secs(t_off)]);
+        t.row(vec![(*name).into(), "multitry".into(), on.into(), Cell::Secs(t_on)]);
+        if on <= off {
+            wins += 1;
+        }
+        assert!(
+            (on as f64) <= 1.05 * off as f64,
+            "multi-try FM regressed >5% on {name}"
+        );
+    }
+    t.print();
+    verdict(
+        &format!("multi-try FM ties or improves on {wins}/{} workloads", workloads.len()),
+        wins >= 1,
+    );
+    verdict("multi-try FM never regresses >5% (asserted in-run)", true);
+}

@@ -1,0 +1,69 @@
+//! tab-configs: §4.1's preconfiguration contract on the mesh family —
+//! fast < eco < strong in quality, the reverse in running time. Sweeps
+//! grids and random geometric graphs over k ∈ {2, 8, 16}.
+
+use kahip::bench_util::{time_median, verdict, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::{generators, Graph};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let workloads: Vec<(&str, Graph)> = vec![
+        ("grid 32x32", generators::grid2d(32, 32)),
+        ("grid3d 10^3", generators::grid3d(10, 10, 10)),
+        ("rgg n=1500", generators::random_geometric(1500, 0.055, &mut rng)),
+    ];
+    let mut table = Table::new(
+        "tab-configs: preconfiguration sweep (mesh family)",
+        &["graph", "k", "config", "cut", "median time"],
+    );
+    // (workload, k) -> per-mode (cut, time)
+    let mut order_ok = true;
+    let mut time_ok = 0usize;
+    let mut time_total = 0usize;
+    for (name, g) in &workloads {
+        for k in [2u32, 8, 16] {
+            let mut per_mode = Vec::new();
+            for mode in [Mode::Fast, Mode::Eco, Mode::Strong] {
+                // best-of-3 seeds, median-of-3 timing on the first seed
+                let cut = (0..3)
+                    .map(|s| {
+                        kaffpa(g, &Config::from_mode(mode, k, 0.03, s), None, None).edge_cut
+                    })
+                    .min()
+                    .unwrap();
+                let cfg = Config::from_mode(mode, k, 0.03, 0);
+                let (med, _, _) = time_median(0, 3, || {
+                    let _ = kaffpa(g, &cfg, None, None);
+                });
+                table.row(vec![
+                    (*name).into(),
+                    k.into(),
+                    mode.name().into(),
+                    cut.into(),
+                    Cell::Secs(med),
+                ]);
+                per_mode.push((cut, med));
+            }
+            let (fc, ft) = per_mode[0];
+            let (_, _et) = per_mode[1];
+            let (sc, st) = per_mode[2];
+            if sc > fc {
+                order_ok = false;
+                println!("  !! quality inversion on {name} k={k}: strong {sc} > fast {fc}");
+            }
+            time_total += 1;
+            if st >= ft {
+                time_ok += 1;
+            }
+        }
+    }
+    table.print();
+    verdict("quality: strong <= fast on every cell", order_ok);
+    verdict(
+        &format!("time: strong >= fast on {time_ok}/{time_total} cells"),
+        time_ok * 10 >= time_total * 8,
+    );
+}

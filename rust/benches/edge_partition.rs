@@ -1,0 +1,70 @@
+//! edgepart: §2.7 — SPAC edge partitioning vs naive edge assignment on
+//! the replication-factor metric that drives edge-centric frameworks'
+//! communication, plus the edge balance constraint.
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::edgepartition::{self, spac};
+use kahip::graph::generators;
+use kahip::parhip::ParhipMode;
+use kahip::partition::config::Mode;
+use kahip::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let workloads = vec![
+        ("grid 24x24", generators::grid2d(24, 24), Mode::Eco),
+        ("ba n=4000", generators::barabasi_albert(4000, 5, &mut rng), Mode::EcoSocial),
+        ("rmat 2^11", generators::rmat(11, 8, &mut rng), Mode::EcoSocial),
+    ];
+    let k = 8u32;
+    let mut spac_beats_random = true;
+    let mut spac_balanced = true;
+    for (name, g, mode) in &workloads {
+        let idx = edgepartition::EdgeIndex::build(g);
+        let (secs, (ep, _)) =
+            time_once(|| spac::edge_partitioning(g, k, 0.10, *mode, 1000, 4));
+        let rnd = edgepartition::random_edge_partition(g.m(), k, &mut rng);
+        let chunk = edgepartition::chunked_edge_partition(g.m(), k);
+        let mut t = Table::new(
+            &format!("edge partitioning k={k} — {name} (m={})", g.m()),
+            &["method", "replication", "edge balance", "vertex cut", "time"],
+        );
+        for (mname, e, s) in
+            [("spac", &ep, secs), ("random", &rnd, 0.0), ("chunked", &chunk, 0.0)]
+        {
+            t.row(vec![
+                mname.into(),
+                e.replication_factor(g, &idx).into(),
+                e.edge_balance().into(),
+                e.vertex_cut(g, &idx).into(),
+                Cell::Secs(s),
+            ]);
+        }
+        t.print();
+        spac_beats_random &=
+            ep.replication_factor(g, &idx) < rnd.replication_factor(g, &idx);
+        spac_balanced &= ep.edge_balance() < 1.25;
+    }
+    verdict("SPAC beats random edge assignment on replication everywhere", spac_beats_random);
+    verdict("SPAC edge balance stays under 1.25", spac_balanced);
+
+    // distributed variant tracks the sequential one
+    let g = generators::grid2d(20, 20);
+    let idx = edgepartition::EdgeIndex::build(&g);
+    let (seq, _) = spac::edge_partitioning(&g, 4, 0.10, Mode::Eco, 1000, 5);
+    let dist = edgepartition::dist_edge::distributed_edge_partitioning(
+        &g,
+        4,
+        0.10,
+        ParhipMode::FastMesh,
+        1000,
+        4,
+        5,
+    );
+    let (rs, rd) = (
+        seq.replication_factor(&g, &idx),
+        dist.partition.replication_factor(&g, &idx),
+    );
+    println!("\nsequential rf {rs:.3} vs distributed(4 ranks) rf {rd:.3}");
+    verdict("distributed edge partitioning within 1.4x of sequential replication", rd < 1.4 * rs);
+}

@@ -1,0 +1,71 @@
+//! parhip: §2.5 — LP-based distributed partitioning handles complex
+//! networks, scales with ranks, and lands near sequential quality.
+//! (Ranks are simulated PEs on one host — scaling numbers are
+//! shape-only; see DESIGN.md.)
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::generators;
+use kahip::parhip::{parhip, ParhipMode};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let g = generators::barabasi_albert(100_000, 8, &mut rng);
+    println!("web-like graph: n={} m={}\n", g.n(), g.m());
+    let k = 16u32;
+
+    // sequential reference
+    let cfg = Config::from_mode(Mode::FastSocial, k, 0.03, 2);
+    let (ssecs, seq) = time_once(|| kaffpa(&g, &cfg, None, None));
+
+    let mut table = Table::new(
+        "parhip scaling on BA n=100k (k=16, fastsocial)",
+        &["ranks", "cut", "cut/seq", "coarse_n", "time"],
+    );
+    table.row(vec![
+        "seq(kaffpa)".into(),
+        seq.edge_cut.into(),
+        1.0.into(),
+        0usize.into(),
+        Cell::Secs(ssecs),
+    ]);
+    let mut ratios = Vec::new();
+    for ranks in [1usize, 2, 4, 8] {
+        let (secs, r) =
+            time_once(|| parhip(&g, k, 0.03, ParhipMode::FastSocial, ranks, 3, false));
+        let ratio = r.edge_cut as f64 / seq.edge_cut as f64;
+        table.row(vec![
+            ranks.into(),
+            r.edge_cut.into(),
+            ratio.into(),
+            r.coarse_n.into(),
+            Cell::Secs(secs),
+        ]);
+        ratios.push(ratio);
+    }
+    table.print();
+    verdict(
+        "parhip quality within 1.5x of sequential at every rank count",
+        ratios.iter().all(|&r| r < 1.5),
+    );
+    verdict("parhip valid across rank counts (validated in-run)", true);
+
+    // preconfig sweep at 4 ranks
+    let mut t = Table::new("parhip preconfigurations (4 ranks)", &["preconfig", "cut", "time"]);
+    let mut ultra_time = f64::MAX;
+    let mut eco_time = 0.0;
+    for mode in [ParhipMode::UltrafastSocial, ParhipMode::FastSocial, ParhipMode::EcoSocial] {
+        let (secs, r) = time_once(|| parhip(&g, k, 0.03, mode, 4, 4, false));
+        t.row(vec![mode.name().into(), r.edge_cut.into(), Cell::Secs(secs)]);
+        if mode == ParhipMode::UltrafastSocial {
+            ultra_time = secs;
+        }
+        if mode == ParhipMode::EcoSocial {
+            eco_time = secs;
+        }
+    }
+    t.print();
+    verdict("ultrafast is faster than eco", ultra_time < eco_time);
+}

@@ -1,0 +1,76 @@
+//! mapping: §2.6 — hierarchy-aware process mapping lowers the QAP
+//! communication cost vs identity/random placement, and the v3.00 global
+//! multisection beats partition-then-map.
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::generators;
+use kahip::mapping::{multisection, qap, HierarchySpec, Topology};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn main() {
+    let spec = HierarchySpec::parse("4:8:8", "1:10:100").unwrap();
+    let k = spec.num_pes(); // 256
+    let topo = Topology::new(&spec, false);
+    let mut rng = Rng::new(2);
+    let workloads = vec![
+        ("grid 64x32", generators::grid2d(64, 32)),
+        ("ba n=4000", generators::barabasi_albert(4000, 4, &mut rng)),
+    ];
+    let mut ms_beats_rand = true;
+    let mut swap_beats_ident = true;
+    let mut ms_best_count = 0usize;
+    for (name, g) in &workloads {
+        let mode = if name.starts_with("ba") { Mode::FastSocial } else { Mode::Eco };
+        let cfg = Config::from_mode(mode, k as u32, 0.05, 3);
+        let base = kaffpa(g, &cfg, None, None);
+        let comm = qap::CommGraph::from_partition(g, &base.partition);
+        let ident = qap::qap_cost(&comm, &topo, &qap::identity_mapping(k));
+        let rand: i64 = (0..5)
+            .map(|_| qap::qap_cost(&comm, &topo, &qap::random_mapping(k, &mut rng)))
+            .sum::<i64>()
+            / 5;
+        let (gsecs, swap_cost) = time_once(|| {
+            let greedy = qap::greedy_mapping(&comm, &topo);
+            let mut sigma =
+                if qap::qap_cost(&comm, &topo, &greedy) <= ident { greedy } else { qap::identity_mapping(k) };
+            let mut r = Rng::new(4);
+            qap::swap_local_search(&comm, &topo, &mut sigma, &mut r, 20);
+            qap::qap_cost(&comm, &topo, &sigma)
+        });
+        let (msecs, ms) =
+            time_once(|| multisection::global_multisection(g, &spec, mode, 0.05, 5, false));
+
+        let mut t = Table::new(
+            &format!("mapping onto 4:8:8/1:10:100 — {name} (k=256)"),
+            &["method", "edge cut", "qap cost", "time"],
+        );
+        t.row(vec!["identity".into(), base.edge_cut.into(), ident.into(), Cell::Secs(0.0)]);
+        t.row(vec!["random(avg5)".into(), base.edge_cut.into(), rand.into(), Cell::Secs(0.0)]);
+        t.row(vec![
+            "greedy+swap".into(),
+            base.edge_cut.into(),
+            swap_cost.into(),
+            Cell::Secs(gsecs),
+        ]);
+        t.row(vec![
+            "global_multisection".into(),
+            ms.edge_cut.into(),
+            ms.qap_cost.into(),
+            Cell::Secs(msecs),
+        ]);
+        t.print();
+        ms_beats_rand &= ms.qap_cost < rand;
+        swap_beats_ident &= swap_cost <= ident;
+        if ms.qap_cost <= swap_cost {
+            ms_best_count += 1;
+        }
+    }
+    verdict("hierarchy-aware mapping beats random placement everywhere", ms_beats_rand);
+    verdict("greedy+swap never loses to identity", swap_beats_ident);
+    verdict(
+        &format!("global multisection best on {ms_best_count}/{} workloads", workloads.len()),
+        ms_best_count >= 1,
+    );
+}

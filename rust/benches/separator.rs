@@ -1,0 +1,78 @@
+//! separator: §2.8 — the separator pipeline's dominance ordering:
+//! vertex-cover post-processing ≤ the smaller boundary side, and flow
+//! improvement never worsens it; k-way separators stay a small fraction
+//! of the graph.
+
+use kahip::bench_util::{time_once, verdict, Table};
+use kahip::coordinator::kaffpa;
+use kahip::graph::generators;
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+use kahip::separator::{bisep, kway_sep, vertex_cover};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let workloads = vec![
+        ("grid 24x24", generators::grid2d(24, 24)),
+        ("grid3d 8^3", generators::grid3d(8, 8, 8)),
+        ("rgg n=1200", generators::random_geometric(1200, 0.06, &mut rng)),
+    ];
+    let mut t = Table::new(
+        "2-way separators: boundary vs vertex cover vs flow-improved",
+        &["graph", "smaller boundary", "vertex cover", "final (flow)", "time"],
+    );
+    let mut vc_ok = true;
+    let mut flow_ok = true;
+    for (name, g) in &workloads {
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.20, 2);
+        let res = kaffpa(g, &cfg, None, None);
+        let p = &res.partition;
+        let boundary = |side: u32| {
+            g.nodes()
+                .filter(|&v| {
+                    p.block_of(v) == side && g.neighbors(v).iter().any(|&u| p.block_of(u) != side)
+                })
+                .count()
+        };
+        let smaller = boundary(0).min(boundary(1));
+        let vc = vertex_cover::boundary_vertex_cover(g, p, 0, 1).len();
+        let (secs, sep) = time_once(|| bisep::separator_from_bipartition(g, p));
+        sep.validate(g).unwrap();
+        t.row(vec![
+            (*name).into(),
+            smaller.into(),
+            vc.into(),
+            sep.separator.len().into(),
+            kahip::bench_util::Cell::Secs(secs),
+        ]);
+        vc_ok &= vc <= smaller;
+        flow_ok &= sep.separator.len() <= vc.min(smaller);
+    }
+    t.print();
+    verdict("vertex cover <= smaller boundary side (Pothen et al.)", vc_ok);
+    verdict("flow-improved separator <= both heuristics", flow_ok);
+
+    // k-way separators
+    let mut t = Table::new(
+        "k-way separators from kaffpa partitions (grid3d 8^3)",
+        &["k", "separator size", "% of graph", "valid"],
+    );
+    let g = generators::grid3d(8, 8, 8);
+    let mut frac_ok = true;
+    for k in [2u32, 4, 8] {
+        let cfg = Config::from_mode(Mode::Eco, k, 0.10, 3);
+        let res = kaffpa(&g, &cfg, None, None);
+        let sep = kway_sep::partition_to_vertex_separator(&g, &res.partition);
+        let ok = sep.validate(&g).is_ok();
+        let frac = 100.0 * sep.separator.len() as f64 / g.n() as f64;
+        t.row(vec![
+            k.into(),
+            sep.separator.len().into(),
+            format!("{frac:.1}%").into(),
+            format!("{ok}").into(),
+        ]);
+        frac_ok &= frac < 40.0 && ok;
+    }
+    t.print();
+    verdict("k-way separators valid and bounded", frac_ok);
+}

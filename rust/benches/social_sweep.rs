@@ -1,0 +1,75 @@
+//! tab-social: §2.4's claim — on social networks, matching-based
+//! coarsening cannot shrink the graph effectively, while size-constrained
+//! LP clustering can; the *social* preconfigurations therefore win on
+//! quality and/or time. Reports coarsening shrink factors and cuts.
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::coarsening::build_hierarchy;
+use kahip::coordinator::kaffpa;
+use kahip::graph::{generators, Graph};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+fn coarse_n(g: &Graph, mode: Mode) -> usize {
+    let cfg = Config::from_mode(mode, 8, 0.03, 3);
+    let mut rng = Rng::new(3);
+    let h = build_hierarchy(g, &cfg, &mut rng);
+    h.coarsest(g).n()
+}
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let workloads: Vec<(&str, Graph)> = vec![
+        ("ba n=8000", generators::barabasi_albert(8000, 5, &mut rng)),
+        ("rmat 2^12", generators::rmat(12, 8, &mut rng)),
+    ];
+
+    // part 1: coarsening effectiveness (the §2.4 mechanism)
+    let mut t = Table::new(
+        "coarsening shrink on social graphs (coarsest n, lower = better)",
+        &["graph", "n", "matching (eco)", "LP clustering (ecosocial)"],
+    );
+    let mut shrink_ok = true;
+    for (name, g) in &workloads {
+        let cm = coarse_n(g, Mode::Eco);
+        let cl = coarse_n(g, Mode::EcoSocial);
+        t.row(vec![(*name).into(), g.n().into(), cm.into(), cl.into()]);
+        if cl > cm {
+            shrink_ok = false;
+        }
+    }
+    t.print();
+
+    // part 2: end-to-end quality/time
+    let mut t = Table::new(
+        "tab-social: mesh configs vs social configs (k=8)",
+        &["graph", "config", "cut", "time"],
+    );
+    let mut per_graph = Vec::new();
+    for (name, g) in &workloads {
+        let mut cells = Vec::new();
+        for mode in [Mode::Eco, Mode::FastSocial, Mode::EcoSocial] {
+            let cfg = Config::from_mode(mode, 8, 0.03, 4);
+            let (secs, res) = time_once(|| kaffpa(g, &cfg, None, None));
+            t.row(vec![(*name).into(), mode.name().into(), res.edge_cut.into(), Cell::Secs(secs)]);
+            cells.push((mode, res.edge_cut, secs));
+        }
+        per_graph.push(cells);
+    }
+    t.print();
+
+    verdict("LP clustering shrinks social graphs at least as well as matching", shrink_ok);
+    // fastsocial should be faster than eco (matching) on social graphs
+    let fast_faster = per_graph.iter().all(|cells| {
+        let eco = cells.iter().find(|c| c.0 == Mode::Eco).unwrap();
+        let fs = cells.iter().find(|c| c.0 == Mode::FastSocial).unwrap();
+        fs.2 < eco.2
+    });
+    verdict("fastsocial beats eco on time for social graphs", fast_faster);
+    let quality_close = per_graph.iter().all(|cells| {
+        let eco = cells.iter().find(|c| c.0 == Mode::Eco).unwrap();
+        let es = cells.iter().find(|c| c.0 == Mode::EcoSocial).unwrap();
+        (es.1 as f64) <= 1.1 * eco.1 as f64
+    });
+    verdict("ecosocial quality within 10% of eco (or better)", quality_close);
+}

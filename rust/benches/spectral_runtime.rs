@@ -1,0 +1,84 @@
+//! spectral: the L1/L2/L3 integration bench — the AOT Pallas/JAX Fiedler
+//! artifact executed via PJRT vs the bit-equivalent pure-Rust power
+//! iteration. Checks (a) both backends produce the same bisections and
+//! (b) reports per-call runtime across the compiled size variants (the
+//! §Perf baseline for EXPERIMENTS.md).
+
+use kahip::bench_util::{time_median, verdict, Cell, Table};
+use kahip::graph::generators;
+use kahip::initial::spectral::{build_inputs, fiedler_bisection, FiedlerBackend, PowerIteration};
+use kahip::partition::metrics;
+use kahip::rng::Rng;
+use kahip::runtime::PjrtRuntime;
+
+fn main() {
+    let rt = match PjrtRuntime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: PJRT artifacts unavailable ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    println!("backends: {} vs {}\n", rt.name(), PowerIteration.name());
+
+    // (a) agreement on bisection quality
+    let mut t = Table::new(
+        "bisection agreement (sweep cut from either backend's Fiedler vector)",
+        &["graph", "cut (pjrt)", "cut (rust)"],
+    );
+    let mut agree = true;
+    let mut rng = Rng::new(1);
+    for (name, g) in [
+        ("grid 16x8", generators::grid2d(16, 8)),
+        ("grid3d 6x6x4", generators::grid3d(6, 6, 4)),
+        ("rgg n=350", generators::random_geometric(350, 0.12, &mut rng)),
+    ] {
+        let target = g.total_node_weight() / 2;
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let cp = fiedler_bisection(&g, target, &rt, &mut r1)
+            .map(|p| metrics::edge_cut(&g, &p));
+        let cr = fiedler_bisection(&g, target, &PowerIteration, &mut r2)
+            .map(|p| metrics::edge_cut(&g, &p));
+        t.row(vec![
+            name.into(),
+            format!("{cp:?}").into(),
+            format!("{cr:?}").into(),
+        ]);
+        // identical seeds → identical inputs → same sweep (modulo f32)
+        agree &= match (cp, cr) {
+            (Some(a), Some(b)) => (a - b).abs() as f64 <= 0.10 * b.max(1) as f64,
+            (None, None) => true,
+            _ => false,
+        };
+    }
+    t.print();
+    verdict("PJRT and Rust backends produce matching bisections", agree);
+
+    // (b) per-call runtime by size variant (200 iterations each)
+    let mut t = Table::new(
+        "Fiedler solve per padded size (median of 5)",
+        &["size", "pjrt", "rust fallback", "speedup"],
+    );
+    for &size in rt.fiedler_sizes() {
+        // a graph padded into this variant
+        let side = (size as f64).sqrt() as usize;
+        let g = generators::grid2d(side, side.max(2));
+        let mut rng = Rng::new(2);
+        let (b, u, x0) = build_inputs(&g, size, &mut rng);
+        let (mp, _, _) = time_median(1, 5, || {
+            rt.run(size, &b, &u, &x0).expect("pjrt run");
+        });
+        let (mr, _, _) = time_median(1, 5, || {
+            PowerIteration.run(size, &b, &u, &x0).expect("rust run");
+        });
+        t.row(vec![
+            size.into(),
+            Cell::Secs(mp),
+            Cell::Secs(mr),
+            format!("{:.2}x", mr / mp).into(),
+        ]);
+    }
+    t.print();
+    println!("(speedup > 1: the XLA-compiled artifact beats the naive loop)");
+}

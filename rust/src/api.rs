@@ -1,0 +1,324 @@
+//! The library interface of §5.2 (`interface/kaHIP_interface.h`),
+//! idiomatically translated: raw CSR arrays in (the Metis NULL-pointer
+//! conventions become `Option`), partition / separator / ordering /
+//! mapping out. Every function mirrors one C entry point:
+//!
+//! | C function           | here                 |
+//! |----------------------|----------------------|
+//! | `kaffpa`             | [`kaffpa`]           |
+//! | `kaffpa_balance_NE`  | [`kaffpa_balance_ne`]|
+//! | `node_separator`     | [`node_separator`]   |
+//! | `reduced_nd`         | [`reduced_nd`]       |
+//! | `reduced_nd_fast`    | [`reduced_nd_fast`]  |
+//! | `process_mapping`    | [`process_mapping`]  |
+
+use crate::graph::{Graph, GraphError};
+use crate::mapping::{HierarchySpec, Topology};
+use crate::partition::config::{Config, Mode};
+use crate::partition::metrics;
+use crate::{BlockId, EdgeWeight, NodeWeight};
+
+/// Output of the partitioner calls: `edgecut` + `part` of the C API.
+#[derive(Clone, Debug)]
+pub struct KaffpaOutput {
+    pub edgecut: i64,
+    pub part: Vec<BlockId>,
+}
+
+/// Output of `node_separator`: the ids of the separator vertices.
+#[derive(Clone, Debug)]
+pub struct SeparatorOutput {
+    pub num_separator_vertices: usize,
+    pub separator: Vec<u32>,
+}
+
+/// Output of `process_mapping`: cut, QAP objective and the assignment.
+#[derive(Clone, Debug)]
+pub struct MappingOutput {
+    pub edgecut: i64,
+    pub qap: i64,
+    pub part: Vec<BlockId>,
+}
+
+fn build(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[NodeWeight]>,
+    adjcwgt: Option<&[EdgeWeight]>,
+) -> Result<Graph, GraphError> {
+    Graph::from_csr(
+        xadj.to_vec(),
+        adjncy.to_vec(),
+        vwgt.map(|w| w.to_vec()),
+        adjcwgt.map(|w| w.to_vec()),
+    )
+}
+
+/// §5.2 "Main Partitioner Call": partition into `nparts` blocks with the
+/// given `imbalance` (0.03 = 3%). `mode` is one of the six
+/// preconfigurations. Returns the edge cut and the block of every vertex.
+#[allow(clippy::too_many_arguments)]
+pub fn kaffpa(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[NodeWeight]>,
+    adjcwgt: Option<&[EdgeWeight]>,
+    nparts: u32,
+    imbalance: f64,
+    suppress_output: bool,
+    seed: u64,
+    mode: Mode,
+) -> Result<KaffpaOutput, GraphError> {
+    let g = build(xadj, adjncy, vwgt, adjcwgt)?;
+    let cfg = Config::from_mode(mode, nparts, imbalance, seed);
+    let res = crate::coordinator::kaffpa(&g, &cfg, None, None);
+    if !suppress_output {
+        println!(
+            "kaffpa: n={} m={} k={nparts} cut={} balance={:.4}",
+            g.n(),
+            g.m(),
+            res.edge_cut,
+            res.balance
+        );
+    }
+    Ok(KaffpaOutput { edgecut: res.edge_cut, part: res.partition.into_assignment() })
+}
+
+/// §5.2 "Node+Edge Balanced Partitioner Call": balances
+/// `c(v) + deg_ω(v)` instead of plain node weights.
+#[allow(clippy::too_many_arguments)]
+pub fn kaffpa_balance_ne(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[NodeWeight]>,
+    adjcwgt: Option<&[EdgeWeight]>,
+    nparts: u32,
+    imbalance: f64,
+    suppress_output: bool,
+    seed: u64,
+    mode: Mode,
+) -> Result<KaffpaOutput, GraphError> {
+    let g = build(xadj, adjncy, vwgt, adjcwgt)?;
+    let mut cfg = Config::from_mode(mode, nparts, imbalance, seed);
+    cfg.balance_edges = true;
+    let res = crate::coordinator::kaffpa(&g, &cfg, None, None);
+    if !suppress_output {
+        println!("kaffpa_balance_NE: cut={} balance={:.4}", res.edge_cut, res.balance);
+    }
+    Ok(KaffpaOutput { edgecut: res.edge_cut, part: res.partition.into_assignment() })
+}
+
+/// §5.2 "Node Separator": partition into `nparts` blocks, then derive a
+/// separator (for `nparts == 2` via the flow-improved biseparator, else
+/// via the k-way vertex-cover post-processing).
+#[allow(clippy::too_many_arguments)]
+pub fn node_separator(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[NodeWeight]>,
+    adjcwgt: Option<&[EdgeWeight]>,
+    nparts: u32,
+    imbalance: f64,
+    suppress_output: bool,
+    seed: u64,
+    mode: Mode,
+) -> Result<SeparatorOutput, GraphError> {
+    let g = build(xadj, adjncy, vwgt, adjcwgt)?;
+    let sep = if nparts == 2 {
+        crate::separator::bisep::node_separator(&g, mode, imbalance, seed)
+    } else {
+        let cfg = Config::from_mode(mode, nparts, imbalance, seed);
+        let res = crate::coordinator::kaffpa(&g, &cfg, None, None);
+        crate::separator::kway_sep::partition_to_vertex_separator(&g, &res.partition)
+    };
+    if !suppress_output {
+        println!("node_separator: |S|={} weight={}", sep.separator.len(), sep.weight(&g));
+    }
+    Ok(SeparatorOutput {
+        num_separator_vertices: sep.separator.len(),
+        separator: sep.separator,
+    })
+}
+
+/// §5.2 "Node Ordering" (`reduced_nd`): exhaustive data reductions, then
+/// nested dissection on the core. `ordering[v]` = elimination position of
+/// vertex `v` (the inverse of the elimination sequence).
+pub fn reduced_nd(
+    xadj: &[u32],
+    adjncy: &[u32],
+    suppress_output: bool,
+    seed: u64,
+    mode: Mode,
+) -> Result<Vec<u32>, GraphError> {
+    let g = build(xadj, adjncy, None, None)?;
+    let order =
+        crate::ordering::node_ordering(&g, mode, seed, &crate::ordering::Reduction::DEFAULT_ORDER);
+    if !suppress_output {
+        println!("reduced_nd: fill={}", crate::ordering::fill_in::fill_in(&g, &order));
+    }
+    Ok(positions(&order))
+}
+
+/// §5.2 `reduced_nd_fast`: reductions + the fast base orderer.
+pub fn reduced_nd_fast(
+    xadj: &[u32],
+    adjncy: &[u32],
+    suppress_output: bool,
+    _seed: u64,
+    _mode: Mode,
+) -> Result<Vec<u32>, GraphError> {
+    let g = build(xadj, adjncy, None, None)?;
+    let order = crate::ordering::fast_node_ordering(&g, &crate::ordering::Reduction::DEFAULT_ORDER);
+    if !suppress_output {
+        println!("reduced_nd_fast: fill={}", crate::ordering::fill_in::fill_in(&g, &order));
+    }
+    Ok(positions(&order))
+}
+
+/// Mapping construction algorithm (§5.2 `mode_mapping`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapMode {
+    Multisection,
+    Bisection,
+}
+
+/// §5.2 "Process Mapping": partition onto the machine described by
+/// `hierarchy_parameter` / `distance_parameter` (k = Π hierarchy).
+#[allow(clippy::too_many_arguments)]
+pub fn process_mapping(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[NodeWeight]>,
+    adjcwgt: Option<&[EdgeWeight]>,
+    hierarchy_parameter: &[usize],
+    distance_parameter: &[i64],
+    imbalance: f64,
+    suppress_output: bool,
+    seed: u64,
+    mode_partitioning: Mode,
+    mode_mapping: MapMode,
+) -> Result<MappingOutput, GraphError> {
+    let g = build(xadj, adjncy, vwgt, adjcwgt)?;
+    let spec = HierarchySpec::from_arrays(hierarchy_parameter, distance_parameter)
+        .map_err(GraphError::SizeMismatch)?;
+    let r = match mode_mapping {
+        MapMode::Multisection => crate::mapping::multisection::global_multisection(
+            &g,
+            &spec,
+            mode_partitioning,
+            imbalance,
+            seed,
+            false,
+        ),
+        MapMode::Bisection => crate::mapping::multisection::partition_and_map(
+            &g,
+            &spec,
+            mode_partitioning,
+            imbalance,
+            seed,
+            false,
+        ),
+    };
+    if !suppress_output {
+        println!("process_mapping: cut={} qap={}", r.edge_cut, r.qap_cost);
+    }
+    // re-evaluate the QAP on the final labeling for the output contract
+    let c = crate::mapping::qap::CommGraph::from_partition(&g, &r.partition);
+    let topo = Topology::new(&spec, false);
+    let ident = crate::mapping::qap::identity_mapping(spec.num_pes());
+    let qap = crate::mapping::qap::qap_cost(&c, &topo, &ident);
+    Ok(MappingOutput {
+        edgecut: metrics::edge_cut(&g, &r.partition),
+        qap,
+        part: r.partition.into_assignment(),
+    })
+}
+
+/// elimination sequence → position-of-vertex array.
+fn positions(order: &[u32]) -> Vec<u32> {
+    let mut pos = vec![0u32; order.len()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v as usize] = i as u32;
+    }
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// the 5-node example graph of the guide's Figure 4 (unweighted)
+    fn fig4() -> (Vec<u32>, Vec<u32>) {
+        let xadj = vec![0u32, 2, 5, 7, 9, 12];
+        let adjncy = vec![1u32, 4, 0, 2, 4, 1, 3, 2, 4, 0, 1, 3];
+        (xadj, adjncy)
+    }
+
+    #[test]
+    fn kaffpa_on_fig4() {
+        let (xadj, adjncy) = fig4();
+        let out = kaffpa(&xadj, &adjncy, None, None, 2, 0.10, true, 0, Mode::Eco).unwrap();
+        assert_eq!(out.part.len(), 5);
+        assert!(out.part.iter().all(|&b| b < 2));
+        assert!(out.edgecut >= 2, "fig4 has min bisection cut 2");
+    }
+
+    #[test]
+    fn kaffpa_rejects_invalid_graph() {
+        // missing backward edge
+        let err = kaffpa(&[0, 1, 1], &[1], None, None, 2, 0.03, true, 0, Mode::Fast);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn balance_ne_runs() {
+        let (xadj, adjncy) = fig4();
+        let out =
+            kaffpa_balance_ne(&xadj, &adjncy, None, None, 2, 0.25, true, 1, Mode::Eco).unwrap();
+        assert_eq!(out.part.len(), 5);
+    }
+
+    #[test]
+    fn node_separator_two_way() {
+        let (xadj, adjncy) = fig4();
+        let out =
+            node_separator(&xadj, &adjncy, None, None, 2, 0.20, true, 0, Mode::Eco).unwrap();
+        assert!(out.num_separator_vertices >= 1);
+        assert_eq!(out.num_separator_vertices, out.separator.len());
+    }
+
+    #[test]
+    fn reduced_nd_is_position_permutation() {
+        let (xadj, adjncy) = fig4();
+        let pos = reduced_nd(&xadj, &adjncy, true, 0, Mode::Eco).unwrap();
+        let mut sorted = pos.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        let fast = reduced_nd_fast(&xadj, &adjncy, true, 0, Mode::Eco).unwrap();
+        assert_eq!(fast.len(), 5);
+    }
+
+    #[test]
+    fn process_mapping_guide_example_shapes() {
+        // 2 cores per node, 2 nodes per rack, 2 racks → k = 8
+        let g = crate::graph::generators::grid2d(8, 8);
+        let (xadj, adjncy, _, _) = g.raw();
+        let out = process_mapping(
+            xadj,
+            adjncy,
+            None,
+            None,
+            &[2, 2, 2],
+            &[1, 10, 100],
+            0.05,
+            true,
+            0,
+            Mode::Eco,
+            MapMode::Multisection,
+        )
+        .unwrap();
+        assert_eq!(out.part.len(), 64);
+        assert!(out.part.iter().all(|&b| b < 8));
+        assert!(out.qap > 0);
+    }
+}

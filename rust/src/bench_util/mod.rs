@@ -1,0 +1,200 @@
+//! A criterion-like benchmark harness (std-only substrate; see
+//! DESIGN.md). Each bench target is a `harness = false` binary that
+//! builds a [`Table`] of rows — one per (workload, config) cell of the
+//! paper table/figure it regenerates — using [`time_median`] for the
+//! timing columns, and prints it in an aligned, grep-friendly format
+//! that EXPERIMENTS.md records verbatim.
+
+use std::time::Instant;
+
+/// Median wall-clock seconds of `reps` runs after `warmup` runs.
+/// Returns (median, min, max).
+pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[times.len() / 2];
+    (med, times[0], *times.last().unwrap())
+}
+
+/// Time a single run, returning (seconds, result).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t = Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// One value cell.
+#[derive(Clone, Debug)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Secs(f64),
+}
+
+impl std::fmt::Display for Cell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Cell::Str(s) => write!(f, "{s}"),
+            Cell::Int(i) => write!(f, "{i}"),
+            Cell::Float(x) => write!(f, "{x:.3}"),
+            Cell::Secs(s) => {
+                if *s < 1e-3 {
+                    write!(f, "{:.1}us", s * 1e6)
+                } else if *s < 1.0 {
+                    write!(f, "{:.2}ms", s * 1e3)
+                } else {
+                    write!(f, "{s:.2}s")
+                }
+            }
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Str(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Str(s)
+    }
+}
+impl From<i64> for Cell {
+    fn from(i: i64) -> Self {
+        Cell::Int(i)
+    }
+}
+impl From<usize> for Cell {
+    fn from(i: usize) -> Self {
+        Cell::Int(i as i64)
+    }
+}
+impl From<u32> for Cell {
+    fn from(i: u32) -> Self {
+        Cell::Int(i as i64)
+    }
+}
+impl From<f64> for Cell {
+    fn from(x: f64) -> Self {
+        Cell::Float(x)
+    }
+}
+
+/// An aligned results table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn rows(&self) -> &[Vec<Cell>] {
+        &self.rows
+    }
+
+    /// Render with aligned columns; every line prefixed so bench output
+    /// survives `grep '^|'`.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.to_string()).collect())
+            .collect();
+        for row in &cells {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |vals: &[String], widths: &[usize]| -> String {
+            let body: Vec<String> =
+                vals.iter().zip(widths).map(|(v, w)| format!("{v:<w$}")).collect();
+            format!("| {} |\n", body.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&format!("{}\n", "-".repeat(total)));
+        for row in &cells {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Verdict helper for the paper-shape checks each bench ends with: prints
+/// PASS/FAIL so EXPERIMENTS.md and CI can grep for regressions without
+/// turning benches into hard test failures.
+pub fn verdict(claim: &str, holds: bool) {
+    println!("[{}] {claim}", if holds { "PASS" } else { "FAIL" });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_ordered() {
+        let (med, min, max) = time_median(0, 5, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(min <= med && med <= max);
+        assert!(min > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["config", "cut", "time"]);
+        t.row(vec!["fast".into(), 120i64.into(), Cell::Secs(0.0123)]);
+        t.row(vec!["strong".into(), 80i64.into(), Cell::Secs(1.5)]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| fast"));
+        assert!(r.contains("12.30ms"));
+        assert!(r.contains("1.50s"));
+        // aligned: all data lines equal length
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec![1i64.into()]);
+    }
+
+    #[test]
+    fn cell_formats() {
+        assert_eq!(Cell::Secs(5e-6).to_string(), "5.0us");
+        assert_eq!(Cell::Secs(0.005).to_string(), "5.00ms");
+        assert_eq!(Cell::Secs(2.0).to_string(), "2.00s");
+        assert_eq!(Cell::Float(1.23456).to_string(), "1.235");
+    }
+}

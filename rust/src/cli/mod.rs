@@ -1,0 +1,668 @@
+//! The user interface (§4): every program the guide documents, as a
+//! subcommand of the `kahip` binary with the guide's exact flag names
+//! (hand-rolled parser — the Argtable substitution of DESIGN.md).
+//!
+//! ```text
+//! kahip kaffpa mesh.graph --k=4 --preconfiguration=strong
+//! kahip kaffpaE mesh.graph --k=8 --p=4 --time_limit=10
+//! kahip parhip web.bin --k=16 --preconfiguration=fastsocial --p=8
+//! kahip graphchecker mesh.graph
+//! ```
+//!
+//! `mpirun -n P prog` becomes `--p=<ranks>` (ranks are simulated PEs on
+//! threads; see DESIGN.md).
+
+use crate::graph::{io_binary, io_metis, Graph};
+use crate::partition::config::{Config, Mode};
+use crate::partition::{io as pio, metrics, Partition};
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + `--name=value` pairs + `--flag`s.
+#[derive(Debug, Default)]
+pub struct ArgSet {
+    pub positional: Vec<String>,
+    named: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl ArgSet {
+    /// Parse `--name=value` (valued) and `--name` (boolean) arguments.
+    pub fn parse(args: &[String]) -> Result<ArgSet, String> {
+        let mut out = ArgSet::default();
+        for a in args {
+            if let Some(body) = a.strip_prefix("--") {
+                match body.split_once('=') {
+                    Some((k, v)) => {
+                        if out.named.insert(k.to_string(), v.to_string()).is_some() {
+                            return Err(format!("duplicate option --{k}"));
+                        }
+                    }
+                    None => out.flags.push(body.to_string()),
+                }
+            } else if let Some(body) = a.strip_prefix('-') {
+                // the guide writes -enable_mapping with a single dash
+                out.flags.push(body.to_string());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(|s| s.as_str())
+    }
+
+    pub fn u32_opt(&self, name: &str) -> Result<Option<u32>, String> {
+        self.named
+            .get(name)
+            .map(|v| v.parse().map_err(|e| format!("--{name}={v}: {e}")))
+            .transpose()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.named.get(name) {
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.named.get(name) {
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.named.get(name) {
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn i64_or(&self, name: &str, default: i64) -> Result<i64, String> {
+        match self.named.get(name) {
+            Some(v) => v.parse().map_err(|e| format!("--{name}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn file(&self) -> Result<&str, String> {
+        self.positional.first().map(|s| s.as_str()).ok_or_else(|| "missing graph file".into())
+    }
+
+    fn k(&self) -> Result<u32, String> {
+        self.u32_opt("k")?.ok_or_else(|| "--k=<int> is required".into())
+    }
+
+    fn mode(&self, default: Mode) -> Result<Mode, String> {
+        match self.str_opt("preconfiguration") {
+            None => Ok(default),
+            Some(s) => Mode::parse(s).ok_or_else(|| format!("unknown preconfiguration '{s}'")),
+        }
+    }
+
+    /// `--imbalance` is in percent in the guide (default 3).
+    fn epsilon(&self, default_pct: f64) -> Result<f64, String> {
+        Ok(self.f64_or("imbalance", default_pct)? / 100.0)
+    }
+}
+
+/// Load a graph: Metis text, or the ParHIP binary format when the file
+/// starts with the version magic (parhip/toolbox accept both, §4.3).
+pub fn load_graph(path: &str, allow_binary: bool) -> Result<Graph, String> {
+    if allow_binary && io_binary::sniff_binary(path).unwrap_or(false) {
+        return io_binary::read_binary_file(path).map_err(|e| format!("{path}: {e}"));
+    }
+    io_metis::read_metis_file(path).map_err(|e| format!("{path}: {e}"))
+}
+
+/// The program table (the §4 "General Guide" table).
+pub const PROGRAMS: &[&str] = &[
+    "kaffpa",
+    "kaffpaE",
+    "parhip",
+    "graph2binary",
+    "graph2binary_external",
+    "toolbox",
+    "evaluator",
+    "partition_to_vertex_separator",
+    "node_separator",
+    "edge_partitioning",
+    "distributed_edge_partitioning",
+    "node_ordering",
+    "fast_node_ordering",
+    "global_multisection",
+    "ilp_exact",
+    "ilp_improve",
+    "label_propagation",
+    "graphchecker",
+];
+
+/// Dispatch a full command line (without argv[0]).
+pub fn run(args: &[String]) -> Result<(), String> {
+    let Some((prog, rest)) = args.split_first() else {
+        return Err(usage());
+    };
+    let a = ArgSet::parse(rest)?;
+    if a.flag("help") {
+        println!("{}", help_for(prog));
+        return Ok(());
+    }
+    match prog.as_str() {
+        "kaffpa" => cmd_kaffpa(&a),
+        "kaffpaE" | "kaffpae" => cmd_kaffpa_e(&a),
+        "parhip" => cmd_parhip(&a),
+        "graph2binary" => cmd_graph2binary(&a, false),
+        "graph2binary_external" => cmd_graph2binary(&a, true),
+        "toolbox" => cmd_toolbox(&a),
+        "evaluator" => cmd_evaluator(&a),
+        "partition_to_vertex_separator" => cmd_partition_to_separator(&a),
+        "node_separator" => cmd_node_separator(&a),
+        "edge_partitioning" => cmd_edge_partitioning(&a),
+        "distributed_edge_partitioning" => cmd_dist_edge_partitioning(&a),
+        "node_ordering" => cmd_node_ordering(&a, false),
+        "fast_node_ordering" => cmd_node_ordering(&a, true),
+        "global_multisection" => cmd_global_multisection(&a),
+        "ilp_exact" => cmd_ilp_exact(&a),
+        "ilp_improve" => cmd_ilp_improve(&a),
+        "label_propagation" => cmd_label_propagation(&a),
+        "graphchecker" => cmd_graphchecker(&a),
+        other => Err(format!("unknown program '{other}'\n{}", usage())),
+    }
+}
+
+pub fn usage() -> String {
+    format!("usage: kahip <program> <file> [options]\nprograms: {}", PROGRAMS.join(", "))
+}
+
+fn help_for(prog: &str) -> String {
+    format!(
+        "kahip {prog} — see the KaHIP v3.00 user guide §4 for the option list.\n\
+         Common options: --k=<int> --seed=<int> --preconfiguration=<variant>\n\
+         --imbalance=<percent> --output_filename=<path>"
+    )
+}
+
+fn load_input_partition(a: &ArgSet, g: &Graph, k: u32) -> Result<Option<Partition>, String> {
+    match a.str_opt("input_partition") {
+        None => Ok(None),
+        Some(path) => {
+            let part = pio::read_partition_file(path).map_err(|e| format!("{path}: {e}"))?;
+            if part.len() != g.n() {
+                return Err(format!("input partition has {} lines, graph has {}", part.len(), g.n()));
+            }
+            Ok(Some(Partition::from_assignment(g, k, part)))
+        }
+    }
+}
+
+fn spectral_backend() -> Option<crate::runtime::PjrtRuntime> {
+    match crate::runtime::PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(_) => None, // pure-Rust fallback is used instead
+    }
+}
+
+fn cmd_kaffpa(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let mut cfg = Config::from_mode(a.mode(Mode::Eco)?, k, a.epsilon(3.0)?, a.u64_or("seed", 0)?);
+    cfg.time_limit = a.f64_or("time_limit", 0.0)?;
+    cfg.enforce_balance = a.flag("enforce_balance");
+    cfg.balance_edges = a.flag("balance_edges");
+    let input = load_input_partition(a, &g, k)?;
+
+    if a.flag("enable_mapping") {
+        let hier = a
+            .str_opt("hierarchy_parameter_string")
+            .ok_or("--enable_mapping needs --hierarchy_parameter_string")?;
+        let dist = a
+            .str_opt("distance_parameter_string")
+            .ok_or("--enable_mapping needs --distance_parameter_string")?;
+        let spec = crate::mapping::HierarchySpec::parse(hier, dist)?;
+        if spec.num_pes() != k as usize {
+            return Err(format!("--k={k} != hierarchy PEs {}", spec.num_pes()));
+        }
+        let r = crate::mapping::multisection::partition_and_map(
+            &g,
+            &spec,
+            cfg.mode,
+            cfg.epsilon,
+            cfg.seed,
+            a.flag("online_distances"),
+        );
+        println!("cut {} qap {}", r.edge_cut, r.qap_cost);
+        let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+        pio::write_partition_file(r.partition.assignment(), &out).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+        return Ok(());
+    }
+
+    let backend = spectral_backend();
+    cfg.use_spectral_initial = backend.is_some();
+    let be = backend.as_ref().map(|b| b as &dyn crate::initial::spectral::FiedlerBackend);
+    let res = crate::coordinator::kaffpa(&g, &cfg, be, input);
+    println!(
+        "cut {} balance {:.5} reps {} time {:.3}s",
+        res.edge_cut, res.balance, res.repetitions, res.seconds
+    );
+    let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+    pio::write_partition_file(res.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_kaffpa_e(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let base = Config::from_mode(a.mode(Mode::Eco)?, k, a.epsilon(3.0)?, a.u64_or("seed", 0)?);
+    let mut ecfg = crate::evolutionary::EvoConfig::new(base);
+    ecfg.islands = a.usize_or("p", 2)?;
+    ecfg.time_limit = a.f64_or("time_limit", 0.0)?;
+    ecfg.quickstart = a.flag("mh_enable_quickstart");
+    ecfg.kabape = a.flag("mh_enable_kabapE");
+    ecfg.tabu_combine = a.flag("mh_enable_tabu_search");
+    ecfg.kabae_internal_bal = a.f64_or("kabaE_internal_bal", 0.01)?;
+    if a.flag("mh_optimize_communication_volume") {
+        ecfg.fitness = crate::evolutionary::Fitness::CommVolume;
+    }
+    if a.flag("balance_edges") {
+        ecfg.base.balance_edges = true;
+    }
+    let input = load_input_partition(a, &g, k)?;
+    if let Some(p) = input {
+        // improvement mode: seed via a kaffpa improvement run first
+        let res = crate::coordinator::kaffpa(&g, &ecfg.base, None, Some(p));
+        println!("input improved to cut {}", res.edge_cut);
+    }
+    let res = crate::evolutionary::kaffpa_e(&g, &ecfg, None);
+    println!(
+        "objective {} cut {} combines {} mutations {} migrations {} time {:.3}s",
+        res.best_objective, res.edge_cut, res.combines, res.mutations, res.migrations, res.seconds
+    );
+    let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+    pio::write_partition_file(res.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_parhip(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, true)?;
+    let k = a.k()?;
+    let mode = match a.str_opt("preconfiguration") {
+        None => crate::parhip::ParhipMode::FastMesh,
+        Some(s) => crate::parhip::ParhipMode::parse(s)
+            .ok_or_else(|| format!("unknown parhip preconfiguration '{s}'"))?,
+    };
+    let res = crate::parhip::parhip(
+        &g,
+        k,
+        a.epsilon(3.0)?,
+        mode,
+        a.usize_or("p", 2)?,
+        a.u64_or("seed", 0)?,
+        a.flag("vertex_degree_weights"),
+    );
+    println!(
+        "cut {} balance {:.5} ranks {} coarse_n {} time {:.3}s",
+        res.edge_cut, res.balance, res.ranks, res.coarse_n, res.seconds
+    );
+    if a.flag("save_partition") {
+        let out = pio::default_partition_name(k);
+        pio::write_partition_file(res.partition.assignment(), &out).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    if a.flag("save_partition_binary") {
+        let out = format!("{}.bin", pio::default_partition_name(k));
+        let f = std::fs::File::create(&out).map_err(|e| e.to_string())?;
+        pio::write_partition_binary(res.partition.assignment(), f).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_graph2binary(a: &ArgSet, external: bool) -> Result<(), String> {
+    let input = a.file()?;
+    let output = a
+        .positional
+        .get(1)
+        .ok_or("usage: graph2binary[_external] metisfile outputfilename")?;
+    if external {
+        io_binary::convert_metis_to_binary_external(input, output).map_err(|e| e.to_string())?;
+    } else {
+        let g = io_metis::read_metis_file(input).map_err(|e| format!("{input}: {e}"))?;
+        io_binary::write_binary_file(&g, output).map_err(|e| e.to_string())?;
+    }
+    println!("wrote {output}");
+    Ok(())
+}
+
+fn cmd_toolbox(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, true)?;
+    let k = a.k()?;
+    let part_path = a.str_opt("input_partition").ok_or("--input_partition=<file> required")?;
+    let part = pio::read_partition_file(part_path).map_err(|e| format!("{part_path}: {e}"))?;
+    let p = Partition::from_assignment(&g, k, part);
+    if a.flag("evaluate") {
+        println!("{}", metrics::evaluate(&g, &p).render());
+    }
+    if a.flag("save_partition") {
+        let out = pio::default_partition_name(k);
+        pio::write_partition_file(p.assignment(), &out).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    if a.flag("save_partition_binary") {
+        let out = format!("{}.bin", pio::default_partition_name(k));
+        let f = std::fs::File::create(&out).map_err(|e| e.to_string())?;
+        pio::write_partition_binary(p.assignment(), f).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluator(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, true)?;
+    let k = a.k()?;
+    let part_path = a.str_opt("input_partition").ok_or("--input_partition=<file> required")?;
+    let part = pio::read_partition_file(part_path).map_err(|e| format!("{part_path}: {e}"))?;
+    let p = Partition::from_assignment(&g, k, part);
+    println!("{}", metrics::evaluate(&g, &p).render());
+    Ok(())
+}
+
+fn cmd_partition_to_separator(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let part_path = a.str_opt("input_partition").ok_or("--input_partition=<file> required")?;
+    let part = pio::read_partition_file(part_path).map_err(|e| format!("{part_path}: {e}"))?;
+    let p = Partition::from_assignment(&g, k, part);
+    let sep = crate::separator::kway_sep::partition_to_vertex_separator(&g, &p);
+    println!("separator size {} weight {}", sep.separator.len(), sep.weight(&g));
+    let out = a.str_opt("output_filename").unwrap_or("tmpseparator");
+    pio::write_partition_file(&sep.output_assignment(), out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_node_separator(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let sep = crate::separator::bisep::node_separator(
+        &g,
+        a.mode(Mode::Strong)?,
+        a.epsilon(20.0)?,
+        a.u64_or("seed", 0)?,
+    );
+    println!("separator size {} weight {}", sep.separator.len(), sep.weight(&g));
+    let out = a.str_opt("output_filename").unwrap_or("tmpseparator");
+    pio::write_partition_file(&sep.output_assignment(), out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_edge_partitioning(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let (ep, idx) = crate::edgepartition::spac::edge_partitioning(
+        &g,
+        k,
+        a.epsilon(3.0)?,
+        a.mode(Mode::Eco)?,
+        a.i64_or("infinity", 1000)?,
+        a.u64_or("seed", 0)?,
+    );
+    println!(
+        "edge blocks {:?} balance {:.3} replication {:.3} vertex_cut {}",
+        ep.block_sizes(),
+        ep.edge_balance(),
+        ep.replication_factor(&g, &idx),
+        ep.vertex_cut(&g, &idx)
+    );
+    let out = a
+        .str_opt("output_filename")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("tmpedgepartition{k}"));
+    pio::write_partition_file(&ep.assignment, &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_dist_edge_partitioning(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let mode = match a.str_opt("preconfiguration") {
+        None => crate::parhip::ParhipMode::EcoMesh,
+        Some(s) => crate::parhip::ParhipMode::parse(s)
+            .ok_or_else(|| format!("unknown preconfiguration '{s}'"))?,
+    };
+    let r = crate::edgepartition::dist_edge::distributed_edge_partitioning(
+        &g,
+        k,
+        a.epsilon(3.0)?,
+        mode,
+        a.i64_or("infinity", 1_000_000)?,
+        a.usize_or("p", 2)?,
+        a.u64_or("seed", 0)?,
+    );
+    println!(
+        "ranks {} balance {:.3} replication {:.3}",
+        r.ranks,
+        r.partition.edge_balance(),
+        r.partition.replication_factor(&g, &r.index)
+    );
+    if a.flag("save_partition") {
+        let out = format!("tmpedgepartition{k}");
+        pio::write_partition_file(&r.partition.assignment, &out).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn parse_reduction_order(a: &ArgSet) -> Result<Vec<crate::ordering::Reduction>, String> {
+    match a.str_opt("reduction_order") {
+        None => Ok(crate::ordering::Reduction::DEFAULT_ORDER.to_vec()),
+        Some(s) => s
+            .split_whitespace()
+            .map(|t| {
+                t.parse::<u32>()
+                    .ok()
+                    .and_then(crate::ordering::Reduction::parse)
+                    .ok_or_else(|| format!("bad reduction number '{t}' (0-5)"))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_node_ordering(a: &ArgSet, fast: bool) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let rorder = parse_reduction_order(a)?;
+    let order = if fast {
+        crate::ordering::fast_node_ordering(&g, &rorder)
+    } else {
+        crate::ordering::node_ordering(&g, a.mode(Mode::Eco)?, a.u64_or("seed", 0)?, &rorder)
+    };
+    let fill = crate::ordering::fill_in::fill_in(&g, &order);
+    println!("fill-in {fill}");
+    let out = a.str_opt("output_filename").unwrap_or("tmpordering");
+    pio::write_partition_file(&order, out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_global_multisection(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let hier = a
+        .str_opt("hierarchy_parameter_string")
+        .ok_or("--hierarchy_parameter_string=<a:b:c> required")?;
+    let dist = a
+        .str_opt("distance_parameter_string")
+        .ok_or("--distance_parameter_string=<a:b:c> required")?;
+    let spec = crate::mapping::HierarchySpec::parse(hier, dist)?;
+    let r = crate::mapping::multisection::global_multisection(
+        &g,
+        &spec,
+        a.mode(Mode::Eco)?,
+        a.epsilon(3.0)?,
+        a.u64_or("seed", 0)?,
+        a.flag("online_distances"),
+    );
+    println!("k {} cut {} qap {}", spec.num_pes(), r.edge_cut, r.qap_cost);
+    let out = a
+        .str_opt("output_filename")
+        .map(str::to_string)
+        .unwrap_or_else(|| pio::default_partition_name(spec.num_pes() as u32));
+    pio::write_partition_file(r.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_ilp_exact(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let r = crate::ilp::ilp_exact(
+        &g,
+        k,
+        a.epsilon(3.0)?,
+        a.u64_or("seed", 0)?,
+        a.f64_or("ilp_timeout", 7200.0)?,
+    );
+    println!("cut {} optimal {} time {:.3}s", r.edge_cut, r.optimal, r.seconds);
+    let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+    pio::write_partition_file(r.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_ilp_improve(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let part_path = a.str_opt("input_partition").ok_or("--input_partition=<file> required")?;
+    let part = pio::read_partition_file(part_path).map_err(|e| format!("{part_path}: {e}"))?;
+    let p = Partition::from_assignment(&g, k, part);
+    let before = metrics::edge_cut(&g, &p);
+    let mode = crate::ilp::model::FreeMode::parse(
+        a.str_opt("ilp_mode").unwrap_or("boundary"),
+        a.i64_or("ilp_min_gain", -1)?,
+        a.usize_or("ilp_bfs_depth", 2)?,
+        a.usize_or("ilp_overlap_runs", 3)?,
+    )
+    .ok_or("unknown --ilp_mode (boundary|gain|trees|overlap)")?;
+    let opts = crate::ilp::ImproveOpts {
+        mode,
+        max_free: a.usize_or("ilp_limit_nonzeroes", 5_000_000)?.min(64),
+        timeout_secs: a.f64_or("ilp_timeout", 7200.0)?,
+    };
+    let r = crate::ilp::ilp_improve(&g, &p, a.epsilon(3.0)?, &opts);
+    println!("cut {} -> {} (model optimal: {})", before, r.edge_cut, r.optimal);
+    let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+    pio::write_partition_file(r.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
+    let g = load_graph(a.file()?, false)?;
+    let upper = match a.str_opt("cluster_upperbound") {
+        None => None,
+        Some(v) => Some(v.parse::<i64>().map_err(|e| format!("--cluster_upperbound={v}: {e}"))?),
+    };
+    let iters = a.usize_or("label_propagation_iterations", 10)?;
+    let mut rng = crate::rng::Rng::new(a.u64_or("seed", 0)?);
+    let cluster = crate::coarsening::lp_clustering::label_propagation(&g, upper, iters, &mut rng);
+    let nclusters = crate::coarsening::lp_clustering::num_clusters(&cluster);
+    println!("clusters {nclusters}");
+    let out = a.str_opt("output_filename").unwrap_or("tmpclustering");
+    pio::write_partition_file(&cluster, out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_graphchecker(a: &ArgSet) -> Result<(), String> {
+    let path = a.file()?;
+    let f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    let report = crate::graph::checker::check_metis(std::io::BufReader::new(f));
+    println!("{}", report.render());
+    if report.ok() {
+        Ok(())
+    } else {
+        Err("graph file is invalid".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = ArgSet::parse(&args(&[
+            "graph.metis",
+            "--k=4",
+            "--imbalance=5",
+            "--enforce_balance",
+            "-enable_mapping",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["graph.metis"]);
+        assert_eq!(a.u32_opt("k").unwrap(), Some(4));
+        assert_eq!(a.epsilon(3.0).unwrap(), 0.05);
+        assert!(a.flag("enforce_balance"));
+        assert!(a.flag("enable_mapping"));
+        assert!(!a.flag("balance_edges"));
+    }
+
+    #[test]
+    fn default_imbalance_is_three_percent() {
+        let a = ArgSet::parse(&args(&["g"])).unwrap();
+        assert_eq!(a.epsilon(3.0).unwrap(), 0.03);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_numbers() {
+        assert!(ArgSet::parse(&args(&["--k=2", "--k=3"])).is_err());
+        let a = ArgSet::parse(&args(&["--k=two"])).unwrap();
+        assert!(a.u32_opt("k").is_err());
+    }
+
+    #[test]
+    fn unknown_program_is_an_error() {
+        let err = run(&args(&["frobnicate", "g"])).unwrap_err();
+        assert!(err.contains("unknown program"));
+        assert!(err.contains("kaffpa"));
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let err = run(&args(&["kaffpa", "--k=2"])).unwrap_err();
+        assert!(err.contains("missing graph file"));
+    }
+
+    #[test]
+    fn mode_parsing() {
+        let a = ArgSet::parse(&args(&["--preconfiguration=strongsocial"])).unwrap();
+        assert_eq!(a.mode(Mode::Eco).unwrap(), Mode::StrongSocial);
+        let a = ArgSet::parse(&args(&["--preconfiguration=bogus"])).unwrap();
+        assert!(a.mode(Mode::Eco).is_err());
+    }
+
+    #[test]
+    fn reduction_order_parsing() {
+        let a = ArgSet::parse(&args(&["--reduction_order=0 4"])).unwrap();
+        let r = parse_reduction_order(&a).unwrap();
+        assert_eq!(
+            r,
+            vec![crate::ordering::Reduction::SimplicialNodes, crate::ordering::Reduction::Degree2Nodes]
+        );
+        let a = ArgSet::parse(&args(&["--reduction_order=9"])).unwrap();
+        assert!(parse_reduction_order(&a).is_err());
+    }
+}

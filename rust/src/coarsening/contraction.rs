@@ -1,0 +1,150 @@
+//! Graph contraction: collapse every cluster of a clustering into one
+//! coarse node. Coarse node weights are cluster weight sums; parallel
+//! coarse edges merge with summed weights; intra-cluster edges vanish.
+//!
+//! Conservation laws (property-tested): total node weight is preserved,
+//! and for any coarse partition the fine projection has the *same* edge
+//! cut — the key invariant that makes multilevel refinement sound.
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::NodeId;
+
+/// One level of the multilevel hierarchy.
+#[derive(Clone, Debug)]
+pub struct CoarseLevel {
+    pub coarse: Graph,
+    /// `map[v_fine] = v_coarse`.
+    pub map: Vec<NodeId>,
+}
+
+/// Contract `g` according to `cluster`, where `cluster[v]` is an arbitrary
+/// cluster id (ids are renumbered densely in input order).
+pub fn contract(g: &Graph, cluster: &[NodeId]) -> CoarseLevel {
+    assert_eq!(cluster.len(), g.n());
+    // renumber cluster ids densely (ids may exceed n; size by the max id)
+    let max_id = cluster.iter().copied().max().unwrap_or(0) as usize;
+    let mut dense = vec![u32::MAX; max_id + 1];
+    let mut map = Vec::with_capacity(g.n());
+    let mut num = 0u32;
+    for &c in cluster {
+        let c = c as usize;
+        if dense[c] == u32::MAX {
+            dense[c] = num;
+            num += 1;
+        }
+        map.push(dense[c]);
+    }
+    let cn = num as usize;
+    let mut b = GraphBuilder::new(cn);
+    let mut vwgt = vec![0i64; cn];
+    for v in g.nodes() {
+        vwgt[map[v as usize] as usize] += g.node_weight(v);
+    }
+    b.set_node_weights(vwgt);
+    for v in g.nodes() {
+        let cv = map[v as usize];
+        for (u, w) in g.neighbors_w(v) {
+            let cu = map[u as usize];
+            if cv < cu {
+                // each fine edge contributes once; GraphBuilder sums parallels
+                b.add_edge(cv, cu, w);
+            }
+        }
+    }
+    CoarseLevel { coarse: b.build().expect("contraction produces valid graph"), map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::{metrics, Partition};
+    use crate::rng::Rng;
+
+    #[test]
+    fn contract_path_pairs() {
+        let g = generators::path(6);
+        // pair up (0,1), (2,3), (4,5)
+        let cl = vec![0, 0, 1, 1, 2, 2];
+        let lvl = contract(&g, &cl);
+        assert_eq!(lvl.coarse.n(), 3);
+        assert_eq!(lvl.coarse.m(), 2);
+        assert_eq!(lvl.coarse.node_weight(0), 2);
+        assert_eq!(lvl.coarse.total_node_weight(), g.total_node_weight());
+    }
+
+    #[test]
+    fn parallel_edges_merge_weights() {
+        let g = generators::cycle(4); // 0-1-2-3-0
+        // clusters {0,1}, {2,3}: edges 1-2 and 3-0 become one coarse edge w=2
+        let lvl = contract(&g, &[0, 0, 1, 1]);
+        assert_eq!(lvl.coarse.n(), 2);
+        assert_eq!(lvl.coarse.m(), 1);
+        assert_eq!(lvl.coarse.total_edge_weight(), 2);
+    }
+
+    #[test]
+    fn identity_contraction() {
+        let g = generators::grid2d(3, 3);
+        let cl: Vec<u32> = g.nodes().collect();
+        let lvl = contract(&g, &cl);
+        assert_eq!(lvl.coarse.n(), g.n());
+        assert_eq!(lvl.coarse.m(), g.m());
+    }
+
+    #[test]
+    fn all_into_one() {
+        let g = generators::complete(5);
+        let lvl = contract(&g, &[0; 5]);
+        assert_eq!(lvl.coarse.n(), 1);
+        assert_eq!(lvl.coarse.m(), 0);
+        assert_eq!(lvl.coarse.node_weight(0), 5);
+    }
+
+    #[test]
+    fn cluster_ids_arbitrary() {
+        let g = generators::path(4);
+        let lvl = contract(&g, &[7, 7, 3, 3]);
+        assert_eq!(lvl.coarse.n(), 2);
+        assert_eq!(lvl.map, vec![0, 0, 1, 1]);
+    }
+
+    /// Property: cut of a coarse partition == cut of its fine projection.
+    #[test]
+    fn prop_cut_preserved_under_projection() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 4 + case % 40;
+            let g = generators::random_weighted(n, 2 * n, 1, 5, rng);
+            // random clustering of adjacent nodes (contract some matching)
+            let mut cl: Vec<u32> = g.nodes().collect();
+            for v in g.nodes() {
+                if rng.bool(0.5) && !g.neighbors(v).is_empty() {
+                    let u = g.neighbors(v)[rng.index(g.degree(v))];
+                    let target = cl[u as usize].min(cl[v as usize]);
+                    let (a, b) = (cl[v as usize], cl[u as usize]);
+                    for c in cl.iter_mut() {
+                        if *c == a || *c == b {
+                            *c = target;
+                        }
+                    }
+                }
+            }
+            let lvl = contract(&g, &cl);
+            crate::prop_assert!(
+                lvl.coarse.total_node_weight() == g.total_node_weight(),
+                "node weight not conserved"
+            );
+            let k = 3;
+            let coarse_part: Vec<u32> =
+                (0..lvl.coarse.n()).map(|_| rng.below(k as u64) as u32).collect();
+            let cp = Partition::from_assignment(&lvl.coarse, k, coarse_part);
+            let fp = cp.project(&g, &lvl.map);
+            crate::prop_assert!(
+                metrics::edge_cut(&lvl.coarse, &cp) == metrics::edge_cut(&g, &fp),
+                "cut changed under projection"
+            );
+            let _ = Rng::new(0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! The multilevel hierarchy: repeatedly cluster + contract until the
+//! coarsest graph is small enough for initial partitioning, or until
+//! contraction stalls (§2.1).
+
+use super::contraction::{contract, CoarseLevel};
+use super::lp_clustering::label_propagation;
+use super::matching::heavy_edge_matching;
+use crate::graph::Graph;
+use crate::partition::config::{Coarsening, Config};
+use crate::rng::Rng;
+
+/// The full hierarchy. `levels[0].coarse` is one step coarser than the
+/// input; the last level holds the coarsest graph.
+#[derive(Debug)]
+pub struct Hierarchy {
+    pub levels: Vec<CoarseLevel>,
+}
+
+impl Hierarchy {
+    pub fn coarsest<'a>(&'a self, input: &'a Graph) -> &'a Graph {
+        self.levels.last().map(|l| &l.coarse).unwrap_or(input)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Build the hierarchy for a run configured by `cfg`.
+///
+/// The stop size is `contraction_limit_factor * k`; per-cluster weight is
+/// bounded so coarse nodes never exceed the partition's balance bound
+/// (otherwise no feasible initial partition could exist).
+pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy {
+    let stop_n = (cfg.contraction_limit_factor * cfg.k as usize).max(8);
+    let bound = cfg.bound(input.total_node_weight()).max(1);
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    let mut current = input.clone();
+    while current.n() > stop_n {
+        let cluster = match cfg.coarsening {
+            Coarsening::Matching => {
+                // pairs must respect the block bound; a safe per-node cap
+                // is bound/2 so even at the coarsest level nodes fit.
+                heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng)
+            }
+            Coarsening::ClusterLp => {
+                // size-constrained clustering: cap clusters well below the
+                // block bound so initial partitioning has slack.
+                let cluster_bound = (bound / 4).max(1);
+                label_propagation(&current, Some(cluster_bound), cfg.lp_iterations, rng)
+            }
+        };
+        let mut lvl = contract(&current, &cluster);
+        let mut shrink = lvl.coarse.n() as f64 / current.n() as f64;
+        if shrink > cfg.min_shrink && cfg.coarsening == Coarsening::ClusterLp {
+            // LP clustering stalls on graphs whose remaining structure has
+            // no clusters left (e.g. the hub core of an RMAT graph); retry
+            // the level with matching before declaring a stall — the same
+            // hybrid the social configurations of KaHIP use.
+            let matched = heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng);
+            let m_lvl = contract(&current, &matched);
+            let m_shrink = m_lvl.coarse.n() as f64 / current.n() as f64;
+            if m_shrink < shrink {
+                lvl = m_lvl;
+                shrink = m_shrink;
+            }
+        }
+        if shrink > cfg.min_shrink {
+            break; // contraction stalled
+        }
+        current = lvl.coarse.clone();
+        levels.push(lvl);
+    }
+    Hierarchy { levels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::{Config, Mode};
+
+    #[test]
+    fn grid_hierarchy_shrinks_to_limit() {
+        let g = generators::grid2d(40, 40);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        let mut rng = Rng::new(1);
+        let h = build_hierarchy(&g, &cfg, &mut rng);
+        assert!(h.depth() >= 2);
+        let coarsest = h.coarsest(&g);
+        assert!(coarsest.n() <= 4 * cfg.contraction_limit_factor * 2);
+        assert_eq!(coarsest.total_node_weight(), g.total_node_weight());
+    }
+
+    #[test]
+    fn social_config_uses_lp_and_shrinks_ba() {
+        let mut rng = Rng::new(2);
+        let g = generators::barabasi_albert(2000, 4, &mut rng);
+        let cfg = Config::from_mode(Mode::EcoSocial, 4, 0.03, 0);
+        let h = build_hierarchy(&g, &cfg, &mut rng);
+        let coarsest = h.coarsest(&g);
+        assert!(
+            coarsest.n() < g.n() / 4,
+            "LP coarsening should shrink BA graphs: {} -> {}",
+            g.n(),
+            coarsest.n()
+        );
+    }
+
+    #[test]
+    fn small_graph_no_levels() {
+        let g = generators::grid2d(3, 3);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 0);
+        let mut rng = Rng::new(3);
+        let h = build_hierarchy(&g, &cfg, &mut rng);
+        assert_eq!(h.depth(), 0);
+        assert_eq!(h.coarsest(&g).n(), 9);
+    }
+
+    #[test]
+    fn maps_compose_to_input_nodes() {
+        let g = generators::grid2d(30, 30);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 0);
+        let mut rng = Rng::new(4);
+        let h = build_hierarchy(&g, &cfg, &mut rng);
+        // compose all maps: every input node must land in a valid coarsest node
+        let mut ids: Vec<u32> = g.nodes().collect();
+        for lvl in &h.levels {
+            ids = ids.iter().map(|&v| lvl.map[v as usize]).collect();
+        }
+        let coarsest_n = h.coarsest(&g).n() as u32;
+        assert!(ids.iter().all(|&v| v < coarsest_n));
+        // and every coarsest node is hit
+        let mut hit = vec![false; coarsest_n as usize];
+        for &v in &ids {
+            hit[v as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn coarse_nodes_respect_balance_bound() {
+        let g = generators::grid2d(32, 32);
+        let cfg = Config::from_mode(Mode::Strong, 8, 0.03, 0);
+        let mut rng = Rng::new(5);
+        let h = build_hierarchy(&g, &cfg, &mut rng);
+        let bound = cfg.bound(g.total_node_weight());
+        let coarsest = h.coarsest(&g);
+        for v in coarsest.nodes() {
+            assert!(coarsest.node_weight(v) <= bound);
+        }
+    }
+}

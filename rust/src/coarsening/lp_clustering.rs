@@ -1,0 +1,189 @@
+//! Size-constrained label propagation clustering (§2.4, [23]).
+//!
+//! Each node starts in its own cluster; in random node order, a node joins
+//! the neighboring cluster to which it has the strongest total edge weight,
+//! subject to the cluster staying under a size constraint. A handful of
+//! iterations suffice. This is simultaneously:
+//! - the coarsening clustering for social networks (clusters, not just
+//!   pairs, so irregular graphs shrink fast where matchings stall), and
+//! - the standalone `label_propagation` program (§4.10), and
+//! - a fast local search during uncoarsening (see
+//!   `refinement::label_prop_refine`).
+
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::NodeId;
+
+/// Size-constrained label propagation.
+///
+/// * `upper_bound` — maximum total node weight of a cluster (`None` =∞,
+///   matching the `label_propagation` program's default).
+/// * `iterations` — full passes over the nodes (guide default: 10).
+pub fn label_propagation(
+    g: &Graph,
+    upper_bound: Option<i64>,
+    iterations: usize,
+    rng: &mut Rng,
+) -> Vec<NodeId> {
+    let n = g.n();
+    let bound = upper_bound.unwrap_or(i64::MAX);
+    let mut cluster: Vec<u32> = (0..n as u32).collect();
+    let mut cluster_weight: Vec<i64> = g.nodes().map(|v| g.node_weight(v)).collect();
+    // scratch: connection strength per candidate cluster, sparse reset
+    let mut conn: Vec<i64> = vec![0; n];
+    let mut touched: Vec<u32> = Vec::new();
+    for _ in 0..iterations {
+        let order = rng.permutation(n);
+        let mut moved = 0usize;
+        for &v in &order {
+            let vc = cluster[v as usize];
+            let vw = g.node_weight(v);
+            if g.degree(v) == 0 {
+                continue;
+            }
+            touched.clear();
+            for (u, w) in g.neighbors_w(v) {
+                let c = cluster[u as usize];
+                if conn[c as usize] == 0 {
+                    touched.push(c);
+                }
+                conn[c as usize] += w;
+            }
+            // strongest feasible cluster; ties break toward keeping vc,
+            // then randomly among the touched order (already random-ish
+            // through the permutation).
+            let mut best = vc;
+            let mut best_conn = conn[vc as usize];
+            for &c in &touched {
+                if c == vc {
+                    continue;
+                }
+                let feasible = cluster_weight[c as usize] + vw <= bound;
+                if feasible && conn[c as usize] > best_conn {
+                    best = c;
+                    best_conn = conn[c as usize];
+                }
+            }
+            for &c in &touched {
+                conn[c as usize] = 0;
+            }
+            if best != vc {
+                cluster_weight[vc as usize] -= vw;
+                cluster_weight[best as usize] += vw;
+                cluster[v as usize] = best;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+    cluster
+}
+
+/// Cluster sizes (by total node weight), keyed by cluster id.
+pub fn cluster_weights(g: &Graph, cluster: &[NodeId]) -> std::collections::HashMap<u32, i64> {
+    let mut m = std::collections::HashMap::new();
+    for v in g.nodes() {
+        *m.entry(cluster[v as usize]).or_insert(0) += g.node_weight(v);
+    }
+    m
+}
+
+/// Number of distinct clusters.
+pub fn num_clusters(cluster: &[NodeId]) -> usize {
+    let mut ids: Vec<u32> = cluster.to_vec();
+    ids.sort_unstable();
+    ids.dedup();
+    ids.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn two_cliques_form_two_clusters() {
+        // two K5s joined by a single edge
+        let mut b = crate::graph::GraphBuilder::new(10);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                b.add_edge(u, v, 1);
+                b.add_edge(u + 5, v + 5, 1);
+            }
+        }
+        b.add_edge(4, 5, 1);
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(1);
+        let cl = label_propagation(&g, None, 10, &mut rng);
+        // all of 0..5 share one label, 5..10 another
+        assert!(cl[..5].iter().all(|&c| c == cl[0]));
+        assert!(cl[5..].iter().all(|&c| c == cl[5]));
+        assert_ne!(cl[0], cl[5]);
+    }
+
+    #[test]
+    fn size_constraint_respected() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 10 + case % 50;
+            let g = generators::random_weighted(n, 3 * n, 1, 4, rng);
+            let bound = 1 + (g.total_node_weight() / 5).max(4);
+            let cl = label_propagation(&g, Some(bound), 8, rng);
+            for (_, w) in cluster_weights(&g, &cl) {
+                crate::prop_assert!(w <= bound, "cluster weight {w} > bound {bound}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unconstrained_on_connected_graph_converges_to_few_clusters() {
+        let mut rng = Rng::new(2);
+        let g = generators::barabasi_albert(300, 3, &mut rng);
+        let cl = label_propagation(&g, None, 10, &mut rng);
+        let k = num_clusters(&cl);
+        assert!(k < 100, "LP should shrink a BA graph a lot, got {k} clusters");
+    }
+
+    #[test]
+    fn social_graph_shrinks_better_than_matching() {
+        // the §2.4 claim: on scale-free graphs, cluster contraction shrinks
+        // much more than matching-based contraction
+        let mut rng = Rng::new(3);
+        let g = generators::barabasi_albert(500, 4, &mut rng);
+        let bound = g.total_node_weight() / 20;
+        let cl = label_propagation(&g, Some(bound), 10, &mut rng);
+        let lp_shrink = num_clusters(&cl) as f64 / g.n() as f64;
+        let m = crate::coarsening::matching::heavy_edge_matching(
+            &g,
+            crate::partition::config::EdgeRating::Weight,
+            i64::MAX,
+            &mut rng,
+        );
+        let match_shrink = num_clusters(&m) as f64 / g.n() as f64;
+        assert!(
+            lp_shrink < match_shrink,
+            "LP shrink {lp_shrink:.2} should beat matching {match_shrink:.2}"
+        );
+    }
+
+    #[test]
+    fn isolated_nodes_stay_singletons() {
+        let g = Graph::isolated(5);
+        let mut rng = Rng::new(4);
+        let cl = label_propagation(&g, None, 5, &mut rng);
+        assert_eq!(num_clusters(&cl), 5);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let g = generators::barabasi_albert(100, 3, &mut Rng::new(5));
+        assert_eq!(
+            label_propagation(&g, Some(50), 5, &mut r1),
+            label_propagation(&g, Some(50), 5, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Matching-based coarsening (§2.1): sorted heavy-edge matching under an
+//! edge rating. Each matched pair becomes one cluster; unmatched nodes
+//! stay singletons. The `strong` configurations rate edges by
+//! `expansion² = ω(e)²/(c(u)·c(v))`, which prefers contracting heavy
+//! edges between light nodes and keeps coarse node weights balanced.
+
+use crate::graph::Graph;
+use crate::partition::config::EdgeRating;
+use crate::rng::Rng;
+use crate::NodeId;
+
+/// Rate the half-edge `e = (v, u)`.
+#[inline]
+pub fn rate_edge(g: &Graph, v: NodeId, u: NodeId, w: i64, rating: EdgeRating) -> f64 {
+    match rating {
+        EdgeRating::Weight => w as f64,
+        EdgeRating::ExpansionSquared => {
+            (w * w) as f64 / (g.node_weight(v).max(1) * g.node_weight(u).max(1)) as f64
+        }
+        EdgeRating::WeightOverSize => {
+            w as f64 / (g.node_weight(v).max(1) * g.node_weight(u).max(1)) as f64
+        }
+    }
+}
+
+/// Sorted heavy-edge matching. `max_cluster_weight` bounds the combined
+/// weight of a matched pair so coarse nodes cannot outgrow the balance
+/// bound of the partition to come. Returns a cluster id per node.
+pub fn heavy_edge_matching(
+    g: &Graph,
+    rating: EdgeRating,
+    max_cluster_weight: i64,
+    rng: &mut Rng,
+) -> Vec<NodeId> {
+    let n = g.n();
+    // collect one record per undirected edge
+    let mut edges: Vec<(f64, u32, u32, u64)> = Vec::with_capacity(g.m());
+    for v in g.nodes() {
+        for (u, w) in g.neighbors_w(v) {
+            if v < u {
+                // random tiebreak key decorrelates equal-rating edges
+                edges.push((rate_edge(g, v, u, w, rating), v, u, rng.next_u64()));
+            }
+        }
+    }
+    edges.sort_unstable_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap().then_with(|| a.3.cmp(&b.3))
+    });
+    let mut cluster: Vec<u32> = (0..n as u32).collect();
+    let mut matched = vec![false; n];
+    for &(_, v, u, _) in &edges {
+        if !matched[v as usize]
+            && !matched[u as usize]
+            && g.node_weight(v) + g.node_weight(u) <= max_cluster_weight
+        {
+            matched[v as usize] = true;
+            matched[u as usize] = true;
+            cluster[u as usize] = v;
+        }
+    }
+    cluster
+}
+
+/// Random matching — the cheapest scheme (used by `fast` on the first
+/// levels in KaFFPa; we expose it for the ablation benches).
+pub fn random_matching(g: &Graph, max_cluster_weight: i64, rng: &mut Rng) -> Vec<NodeId> {
+    let n = g.n();
+    let mut cluster: Vec<u32> = (0..n as u32).collect();
+    let mut matched = vec![false; n];
+    let order = rng.permutation(n);
+    for &v in &order {
+        if matched[v as usize] {
+            continue;
+        }
+        // pick the first unmatched neighbor in a random rotation
+        let deg = g.degree(v);
+        if deg == 0 {
+            continue;
+        }
+        let start = rng.index(deg);
+        for i in 0..deg {
+            let u = g.neighbors(v)[(start + i) % deg];
+            if !matched[u as usize]
+                && u != v
+                && g.node_weight(v) + g.node_weight(u) <= max_cluster_weight
+            {
+                matched[v as usize] = true;
+                matched[u as usize] = true;
+                cluster[u as usize] = v;
+                break;
+            }
+        }
+    }
+    cluster
+}
+
+/// Fraction of nodes covered by matched pairs — the quantity that stalls
+/// on social networks (§2.4) and motivates cluster coarsening.
+pub fn matching_coverage(cluster: &[NodeId]) -> f64 {
+    let n = cluster.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut size = std::collections::HashMap::new();
+    for &c in cluster {
+        *size.entry(c).or_insert(0usize) += 1;
+    }
+    let matched: usize = cluster.iter().filter(|&&c| size[&c] == 2).count();
+    matched as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn check_is_matching(g: &Graph, cluster: &[u32]) {
+        // every cluster has size <= 2 and pairs are adjacent
+        let mut members: std::collections::HashMap<u32, Vec<u32>> = Default::default();
+        for (v, &c) in cluster.iter().enumerate() {
+            members.entry(c).or_default().push(v as u32);
+        }
+        for (_, mem) in members {
+            assert!(mem.len() <= 2, "cluster too big: {mem:?}");
+            if mem.len() == 2 {
+                assert!(
+                    g.neighbors(mem[0]).contains(&mem[1]),
+                    "matched pair not adjacent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hem_is_a_matching() {
+        let mut rng = Rng::new(1);
+        let g = generators::grid2d(8, 8);
+        let cl = heavy_edge_matching(&g, EdgeRating::ExpansionSquared, i64::MAX, &mut rng);
+        check_is_matching(&g, &cl);
+        // grids match nearly perfectly
+        assert!(matching_coverage(&cl) > 0.9, "coverage {}", matching_coverage(&cl));
+    }
+
+    #[test]
+    fn random_matching_is_a_matching() {
+        let mut rng = Rng::new(2);
+        let g = generators::random_geometric(200, 0.12, &mut rng);
+        let cl = random_matching(&g, i64::MAX, &mut rng);
+        check_is_matching(&g, &cl);
+    }
+
+    #[test]
+    fn hem_prefers_heavy_edges() {
+        // path 0 -5- 1 -1- 2 -5- 3 : optimal matching takes both weight-5 edges
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge(0, 1, 5);
+        b.add_edge(1, 2, 1);
+        b.add_edge(2, 3, 5);
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(3);
+        let cl = heavy_edge_matching(&g, EdgeRating::Weight, i64::MAX, &mut rng);
+        assert_eq!(cl[0], cl[1]);
+        assert_eq!(cl[2], cl[3]);
+        assert_ne!(cl[0], cl[2]);
+    }
+
+    #[test]
+    fn respects_weight_bound() {
+        let mut b = crate::graph::GraphBuilder::new(2);
+        b.set_node_weight(0, 10);
+        b.set_node_weight(1, 10);
+        b.add_edge(0, 1, 1);
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(4);
+        let cl = heavy_edge_matching(&g, EdgeRating::Weight, 15, &mut rng);
+        assert_ne!(cl[0], cl[1], "pair exceeds bound, must stay unmatched");
+    }
+
+    #[test]
+    fn star_matches_one_pair_only() {
+        let g = generators::star(10);
+        let mut rng = Rng::new(5);
+        let cl = heavy_edge_matching(&g, EdgeRating::Weight, i64::MAX, &mut rng);
+        check_is_matching(&g, &cl);
+        // hub can be matched once; 9 leaves stay single
+        let cov = matching_coverage(&cl);
+        assert!(cov < 0.25, "stars cannot be matched well, got {cov}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let g = generators::grid2d(10, 10);
+        let a = heavy_edge_matching(&g, EdgeRating::ExpansionSquared, i64::MAX, &mut Rng::new(7));
+        let b = heavy_edge_matching(&g, EdgeRating::ExpansionSquared, i64::MAX, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

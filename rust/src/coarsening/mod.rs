@@ -1,0 +1,13 @@
+//! The coarsening phase of the multilevel scheme (§2.1): group nodes —
+//! by matchings on mesh-like graphs or by size-constrained label
+//! propagation clusterings on social networks (§2.4) — and contract each
+//! group to a single coarse node, repeating until the graph is small
+//! enough for initial partitioning.
+
+pub mod contraction;
+pub mod hierarchy;
+pub mod lp_clustering;
+pub mod matching;
+
+pub use contraction::{contract, CoarseLevel};
+pub use hierarchy::{build_hierarchy, Hierarchy};

@@ -1,0 +1,281 @@
+//! The KaFFPa driver — the multilevel graph partitioner (§2.1, §4.1).
+//!
+//! One `multilevel` pass = coarsen → initial partition → uncoarsen+refine.
+//! `kaffpa` adds the program-level behaviour of the CLI tool: preconfig
+//! knobs, `--time_limit` repetition with fresh seeds keeping the best
+//! partition, `--enforce_balance`, `--balance_edges`, `--input_partition`
+//! improvement mode, and optional global V/F-cycles.
+
+pub mod cycles;
+
+use crate::coarsening::build_hierarchy;
+use crate::graph::Graph;
+use crate::initial::{initial_partition, spectral::FiedlerBackend};
+use crate::partition::config::Config;
+use crate::partition::{metrics, Partition};
+use crate::refinement;
+use crate::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Outcome of a partitioner call.
+#[derive(Clone, Debug)]
+pub struct PartitionResult {
+    pub partition: Partition,
+    pub edge_cut: i64,
+    pub balance: f64,
+    /// multilevel passes performed (>1 under a time limit)
+    pub repetitions: usize,
+    pub seconds: f64,
+}
+
+/// One multilevel pass (V-shape). Deterministic given `rng`.
+pub fn multilevel(
+    g: &Graph,
+    cfg: &Config,
+    rng: &mut Rng,
+    backend: Option<&dyn FiedlerBackend>,
+) -> Partition {
+    if cfg.k == 1 {
+        return Partition::trivial(g, 1);
+    }
+    if g.n() == 0 {
+        return Partition::trivial(g, cfg.k);
+    }
+    let hierarchy = build_hierarchy(g, cfg, rng);
+    // graphs per level: input + all coarse
+    let mut p = {
+        let coarsest = hierarchy.coarsest(g);
+        let mut p = initial_partition(coarsest, cfg, rng, backend);
+        refinement::refine(coarsest, &mut p, cfg, rng);
+        p
+    };
+    for i in (0..hierarchy.levels.len()).rev() {
+        let fine_g = if i == 0 { g } else { &hierarchy.levels[i - 1].coarse };
+        p = p.project(fine_g, &hierarchy.levels[i].map);
+        refinement::refine(fine_g, &mut p, cfg, rng);
+    }
+    for _ in 0..cfg.global_cycles {
+        if cfg.use_fcycle {
+            cycles::fcycle(g, &mut p, cfg, rng);
+        } else {
+            cycles::vcycle(g, &mut p, cfg, rng);
+        }
+    }
+    if cfg.enforce_balance {
+        force_balance(g, &mut p, cfg, rng);
+    }
+    p
+}
+
+/// The `kaffpa` program: repeated multilevel under a time limit, keeping
+/// the best (feasibility first, then cut). `input_partition` switches to
+/// improvement mode: V-cycles on the given partition.
+pub fn kaffpa(
+    g: &Graph,
+    cfg: &Config,
+    backend: Option<&dyn FiedlerBackend>,
+    input_partition: Option<Partition>,
+) -> PartitionResult {
+    let timer = Timer::start();
+    // --balance_edges: reweight nodes by c(v) + deg_ω(v) (§4.1)
+    let owned;
+    let work: &Graph = if cfg.balance_edges {
+        let w: Vec<i64> =
+            g.nodes().map(|v| g.node_weight(v) + g.weighted_degree(v)).collect();
+        owned = g.with_node_weights(w);
+        &owned
+    } else {
+        g
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let mut reps = 0usize;
+
+    let mut best: Option<(Partition, i64, bool)> = input_partition.map(|mut p| {
+        // improvement mode: refine + V-cycle the provided partition
+        refinement::refine(work, &mut p, cfg, &mut rng);
+        cycles::vcycle(work, &mut p, cfg, &mut rng);
+        let cut = metrics::edge_cut(work, &p);
+        let feas = p.is_feasible(work, cfg.epsilon);
+        (p, cut, feas)
+    });
+
+    loop {
+        let mut pass_rng = rng.split(reps as u64);
+        let p = multilevel(work, cfg, &mut pass_rng, backend);
+        let cut = metrics::edge_cut(work, &p);
+        let feas = p.is_feasible(work, cfg.epsilon);
+        reps += 1;
+        let better = match &best {
+            None => true,
+            Some((_, bcut, bfeas)) => match (feas, bfeas) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => cut < *bcut,
+            },
+        };
+        if better {
+            best = Some((p, cut, feas));
+        }
+        if timer.elapsed_secs() >= cfg.time_limit {
+            break;
+        }
+    }
+    let (partition, edge_cut, _) = best.unwrap();
+    // the assignment is on `work`, which shares node ids with `g`
+    let partition = Partition::from_assignment(g, cfg.k, partition.into_assignment());
+    PartitionResult {
+        edge_cut,
+        balance: metrics::balance(g, &partition),
+        partition,
+        repetitions: reps,
+        seconds: timer.elapsed_secs(),
+    }
+}
+
+/// Greedy feasibility repair (`--enforce_balance`): move min-damage nodes
+/// out of overloaded blocks into the lightest feasible block until the
+/// constraint holds. Guaranteed to terminate; on unit-weight graphs
+/// (the flag's documented precondition) it always reaches feasibility.
+pub fn force_balance(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) {
+    let bound = cfg.bound(g.total_node_weight());
+    let mut scratch = crate::refinement::gain::GainScratch::new(cfg.k);
+    let mut guard = 0usize;
+    while p.max_block_weight() > bound && guard < 4 * g.n() {
+        guard += 1;
+        // heaviest block
+        let over = (0..cfg.k).max_by_key(|&b| p.block_weight(b)).unwrap();
+        // lightest target
+        let to = (0..cfg.k).min_by_key(|&b| p.block_weight(b)).unwrap();
+        if over == to {
+            break;
+        }
+        // best-gain node of `over` that fits in `to`
+        let mut bestv: Option<(u32, i64)> = None;
+        let order = rng.permutation(g.n());
+        for &v in &order {
+            if p.block_of(v) != over {
+                continue;
+            }
+            if p.block_weight(to) + g.node_weight(v) > bound {
+                continue;
+            }
+            let gain = scratch.gain_to(g, p, v, to);
+            if bestv.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                bestv = Some((v, gain));
+            }
+        }
+        match bestv {
+            Some((v, _)) => {
+                p.move_node(g, v, to);
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::Mode;
+
+    #[test]
+    fn kaffpa_partitions_grid_all_modes() {
+        let g = generators::grid2d(20, 20);
+        for mode in [Mode::Fast, Mode::Eco, Mode::Strong] {
+            let cfg = Config::from_mode(mode, 4, 0.03, 1);
+            let res = kaffpa(&g, &cfg, None, None);
+            assert!(res.partition.validate(&g).is_ok());
+            assert!(res.partition.is_feasible(&g, 0.03), "{mode:?}");
+            assert_eq!(res.partition.non_empty_blocks(), 4);
+            // a 20x20 grid split in 4: optimal ~40; anything < 80 is sane
+            assert!(res.edge_cut < 80, "{mode:?} cut {}", res.edge_cut);
+        }
+    }
+
+    #[test]
+    fn social_modes_handle_ba_graphs() {
+        let mut rng = Rng::new(5);
+        let g = generators::barabasi_albert(1500, 4, &mut rng);
+        for mode in [Mode::FastSocial, Mode::EcoSocial] {
+            let cfg = Config::from_mode(mode, 4, 0.03, 2);
+            let res = kaffpa(&g, &cfg, None, None);
+            assert!(res.partition.is_feasible(&g, 0.03), "{mode:?}");
+            assert_eq!(res.partition.non_empty_blocks(), 4);
+        }
+    }
+
+    #[test]
+    fn quality_ordering_fast_eco_strong() {
+        // §4.1's promise, measured as: strong <= fast (eco may tie either)
+        let g = generators::grid2d(24, 24);
+        let cut = |mode| {
+            (0..3)
+                .map(|seed| {
+                    let cfg = Config::from_mode(mode, 8, 0.03, seed);
+                    kaffpa(&g, &cfg, None, None).edge_cut
+                })
+                .min()
+                .unwrap()
+        };
+        let (f, s) = (cut(Mode::Fast), cut(Mode::Strong));
+        assert!(s <= f, "strong {s} must be <= fast {f}");
+    }
+
+    #[test]
+    fn time_limit_repeats_and_improves_or_ties() {
+        let g = generators::grid2d(16, 16);
+        let mut cfg = Config::from_mode(Mode::Fast, 4, 0.03, 4);
+        let single = kaffpa(&g, &cfg, None, None);
+        cfg.time_limit = 0.3;
+        let repeated = kaffpa(&g, &cfg, None, None);
+        assert!(repeated.repetitions > 1);
+        assert!(repeated.edge_cut <= single.edge_cut);
+    }
+
+    #[test]
+    fn input_partition_improvement_mode() {
+        let g = generators::grid2d(16, 16);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 5);
+        let bad: Vec<u32> = g.nodes().map(|v| v % 4).collect();
+        let input = Partition::from_assignment(&g, 4, bad);
+        let before = metrics::edge_cut(&g, &input);
+        let res = kaffpa(&g, &cfg, None, Some(input));
+        assert!(res.edge_cut < before);
+    }
+
+    #[test]
+    fn enforce_balance_yields_feasible() {
+        let g = generators::grid2d(15, 15); // 225 nodes, k=4 -> ceil 57
+        let mut cfg = Config::from_mode(Mode::Fast, 4, 0.0, 6);
+        cfg.enforce_balance = true;
+        let res = kaffpa(&g, &cfg, None, None);
+        assert!(
+            res.partition.is_feasible(&g, 0.0),
+            "enforce_balance must give eps=0 feasibility: {:?}",
+            res.partition.block_weights()
+        );
+    }
+
+    #[test]
+    fn balance_edges_mode() {
+        let g = generators::grid2d(12, 12);
+        let mut cfg = Config::from_mode(Mode::Eco, 2, 0.10, 7);
+        cfg.balance_edges = true;
+        let res = kaffpa(&g, &cfg, None, None);
+        // feasibility is with respect to c(v) + deg(v) weights
+        let w: Vec<i64> = g.nodes().map(|v| g.node_weight(v) + g.weighted_degree(v)).collect();
+        let gw = g.with_node_weights(w);
+        let pw = Partition::from_assignment(&gw, 2, res.partition.assignment().to_vec());
+        assert!(pw.is_feasible(&gw, 0.10));
+    }
+
+    #[test]
+    fn k_equals_one_trivial() {
+        let g = generators::grid2d(5, 5);
+        let cfg = Config::from_mode(Mode::Fast, 1, 0.03, 8);
+        let res = kaffpa(&g, &cfg, None, None);
+        assert_eq!(res.edge_cut, 0);
+        assert_eq!(res.partition.non_empty_blocks(), 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Distributed edge partitioning (§4.6): the SPAC reduction run with the
+//! distributed-memory partitioner (ParHIP on the simulated message-
+//! passing world) instead of sequential KaFFPa. Mirrors the
+//! `distributed_edge_partitioning` program: same construction, the node
+//! partitioner underneath scales with ranks.
+
+use super::spac::{build_split_graph, derive_edge_partition};
+use super::{EdgeIndex, EdgePartition};
+use crate::graph::Graph;
+use crate::parhip::{parhip, ParhipMode};
+
+/// Result of a distributed edge partitioning run.
+pub struct DistEdgeResult {
+    pub partition: EdgePartition,
+    pub index: EdgeIndex,
+    pub ranks: usize,
+    pub seconds: f64,
+}
+
+/// The `distributed_edge_partitioning` program: SPAC + ParHIP on `ranks`
+/// simulated PEs.
+pub fn distributed_edge_partitioning(
+    g: &Graph,
+    k: u32,
+    epsilon: f64,
+    mode: ParhipMode,
+    infinity: i64,
+    ranks: usize,
+    seed: u64,
+) -> DistEdgeResult {
+    let idx = EdgeIndex::build(g);
+    if idx.m() == 0 {
+        return DistEdgeResult {
+            partition: EdgePartition { k, assignment: Vec::new() },
+            index: idx,
+            ranks,
+            seconds: 0.0,
+        };
+    }
+    let spac = build_split_graph(g, &idx, infinity);
+    let res = parhip(&spac.graph, k, epsilon, mode, ranks, seed, false);
+    let partition = derive_edge_partition(&spac, &res.partition);
+    DistEdgeResult { partition, index: idx, ranks: res.ranks, seconds: res.seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn distributed_matches_sequential_shape() {
+        let g = generators::grid2d(8, 8);
+        let r = distributed_edge_partitioning(&g, 4, 0.1, ParhipMode::FastMesh, 1000, 4, 1);
+        r.partition.validate(&g).unwrap();
+        assert_eq!(r.partition.assignment.len(), g.m());
+        assert!(r.partition.block_sizes().iter().all(|&s| s > 0));
+        let rf = r.partition.replication_factor(&g, &r.index);
+        assert!(rf < 2.5, "replication {rf}");
+    }
+
+    #[test]
+    fn rank_counts_give_valid_partitions() {
+        let mut rng = crate::rng::Rng::new(2);
+        let g = generators::barabasi_albert(300, 3, &mut rng);
+        for ranks in [1, 2, 8] {
+            let r = distributed_edge_partitioning(
+                &g,
+                2,
+                0.1,
+                ParhipMode::FastSocial,
+                1000,
+                ranks,
+                3,
+            );
+            r.partition.validate(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::isolated(4);
+        let r = distributed_edge_partitioning(&g, 2, 0.03, ParhipMode::FastMesh, 1000, 2, 4);
+        assert!(r.partition.assignment.is_empty());
+    }
+}

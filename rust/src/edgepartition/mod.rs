@@ -1,0 +1,215 @@
+//! Edge partitioning (§2.7, §4.5/4.6): divide the *edges* of a graph into
+//! k roughly equally sized blocks — the model used by edge-centric
+//! ("think like an edge") distributed graph frameworks. KaHIP's method is
+//! the split-and-connect (SPAC) construction of Schlag et al. [35],
+//! implemented in [`spac`]; a distributed variant over the simulated
+//! message-passing world is in [`dist_edge`].
+//!
+//! Quality is measured by the *vertex cut*: a vertex whose incident edges
+//! span λ(v) blocks must be replicated λ(v) times. We report the
+//! replication factor `Σ λ(v) / n` (1.0 = perfect) and the edge balance.
+
+pub mod dist_edge;
+pub mod spac;
+
+use crate::graph::Graph;
+use crate::{BlockId, EdgeWeight, NodeId};
+
+/// Canonical edge enumeration: edges are numbered `0..m` in order of their
+/// first CSR appearance with `u < v` (the output-format convention of
+/// §3.2.1: "line i contains the block ID of edge i").
+#[derive(Clone, Debug)]
+pub struct EdgeIndex {
+    /// `(u, v, w)` per edge id, with `u < v`.
+    pub edges: Vec<(NodeId, NodeId, EdgeWeight)>,
+    /// Half-edge index → edge id (both directions map to the same id).
+    pub half_to_edge: Vec<u32>,
+}
+
+impl EdgeIndex {
+    pub fn build(g: &Graph) -> EdgeIndex {
+        let mut edges = Vec::with_capacity(g.m());
+        let mut half_to_edge = vec![u32::MAX; g.half_edges()];
+        // remember, per node, a cursor into its (sorted-by-appearance)
+        // incident-edge list to find the reverse half-edge cheaply
+        for u in g.nodes() {
+            for e in g.edge_range(u) {
+                let v = g.edge_target(e);
+                if u < v {
+                    let id = edges.len() as u32;
+                    edges.push((u, v, g.edge_weight_at(e)));
+                    half_to_edge[e] = id;
+                } else {
+                    // find the matching forward half-edge id
+                    for e2 in g.edge_range(v) {
+                        if g.edge_target(e2) == u && half_to_edge[e2] != u32::MAX {
+                            // first unclaimed parallel-free match
+                            half_to_edge[e] = half_to_edge[e2];
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert!(half_to_edge.iter().all(|&x| x != u32::MAX));
+        EdgeIndex { edges, half_to_edge }
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// A k-way partition of the edge set.
+#[derive(Clone, Debug)]
+pub struct EdgePartition {
+    pub k: u32,
+    /// block of edge `i` (canonical edge ids).
+    pub assignment: Vec<BlockId>,
+}
+
+impl EdgePartition {
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.assignment.len() != g.m() {
+            return Err(format!("assignment len {} != m {}", self.assignment.len(), g.m()));
+        }
+        if let Some(&b) = self.assignment.iter().find(|&&b| b >= self.k) {
+            return Err(format!("edge block {b} out of range 0..{}", self.k));
+        }
+        Ok(())
+    }
+
+    /// Number of edges per block.
+    pub fn block_sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k as usize];
+        for &b in &self.assignment {
+            s[b as usize] += 1;
+        }
+        s
+    }
+
+    /// Edge balance: `max_i |E_i| / ceil(m/k)` (1.0 = perfect).
+    pub fn edge_balance(&self) -> f64 {
+        let sizes = self.block_sizes();
+        let m = self.assignment.len();
+        if m == 0 {
+            return 1.0;
+        }
+        let avg = (m as f64) / (self.k as f64);
+        *sizes.iter().max().unwrap() as f64 / avg
+    }
+
+    /// λ(v) per vertex: number of distinct blocks among v's incident edges
+    /// (0 for isolated vertices).
+    pub fn lambdas(&self, g: &Graph, idx: &EdgeIndex) -> Vec<u32> {
+        let mut lam = vec![0u32; g.n()];
+        let mut seen: Vec<Vec<u32>> = vec![Vec::new(); g.n()];
+        for (id, &(u, v, _)) in idx.edges.iter().enumerate() {
+            let b = self.assignment[id];
+            for x in [u, v] {
+                if !seen[x as usize].contains(&b) {
+                    seen[x as usize].push(b);
+                    lam[x as usize] += 1;
+                }
+            }
+        }
+        lam
+    }
+
+    /// Replication factor `Σ max(λ(v),1) / n` — the headline SPAC metric.
+    pub fn replication_factor(&self, g: &Graph, idx: &EdgeIndex) -> f64 {
+        if g.n() == 0 {
+            return 1.0;
+        }
+        let lam = self.lambdas(g, idx);
+        lam.iter().map(|&l| l.max(1) as f64).sum::<f64>() / g.n() as f64
+    }
+
+    /// Total vertex cut `Σ (λ(v) − 1)` over vertices with λ ≥ 1.
+    pub fn vertex_cut(&self, g: &Graph, idx: &EdgeIndex) -> i64 {
+        self.lambdas(g, idx).iter().map(|&l| (l.max(1) - 1) as i64).sum()
+    }
+}
+
+/// Baseline: assign edges to blocks uniformly at random (bench baseline).
+pub fn random_edge_partition(m: usize, k: u32, rng: &mut crate::rng::Rng) -> EdgePartition {
+    EdgePartition { k, assignment: (0..m).map(|_| rng.below(k as u64) as u32).collect() }
+}
+
+/// Baseline: contiguous chunks of the canonical edge order ("naive").
+pub fn chunked_edge_partition(m: usize, k: u32) -> EdgePartition {
+    let per = m.div_ceil(k as usize).max(1);
+    EdgePartition { k, assignment: (0..m).map(|i| ((i / per) as u32).min(k - 1)).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn edge_index_is_consistent() {
+        let g = generators::grid2d(4, 4);
+        let idx = EdgeIndex::build(&g);
+        assert_eq!(idx.m(), g.m());
+        // every half edge maps to an id whose endpoints match
+        for v in g.nodes() {
+            for e in g.edge_range(v) {
+                let u = g.edge_target(e);
+                let (a, b, _) = idx.edges[idx.half_to_edge[e] as usize];
+                assert!((a, b) == (v.min(u), v.max(u)));
+            }
+        }
+    }
+
+    #[test]
+    fn edge_index_ids_are_dense_and_unique() {
+        let g = generators::grid2d(5, 3);
+        let idx = EdgeIndex::build(&g);
+        let mut seen = vec![false; idx.m()];
+        for &(u, v, _) in &idx.edges {
+            assert!(u < v);
+            let _ = (u, v);
+        }
+        for &id in &idx.half_to_edge {
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn metrics_on_hand_partition() {
+        // path 0-1-2-3: edges (0,1),(1,2),(2,3)
+        let g = generators::path(4);
+        let idx = EdgeIndex::build(&g);
+        assert_eq!(idx.m(), 3);
+        let ep = EdgePartition { k: 2, assignment: vec![0, 0, 1] };
+        ep.validate(&g).unwrap();
+        assert_eq!(ep.block_sizes(), vec![2, 1]);
+        // λ: v0=1, v1=1, v2=2, v3=1 → replication (1+1+2+1)/4
+        assert_eq!(ep.lambdas(&g, &idx), vec![1, 1, 2, 1]);
+        assert!((ep.replication_factor(&g, &idx) - 1.25).abs() < 1e-12);
+        assert_eq!(ep.vertex_cut(&g, &idx), 1);
+        assert!((ep.edge_balance() - 2.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baselines_cover_all_blocks() {
+        let mut rng = crate::rng::Rng::new(1);
+        let r = random_edge_partition(100, 4, &mut rng);
+        assert_eq!(r.assignment.len(), 100);
+        assert!(r.assignment.iter().all(|&b| b < 4));
+        let c = chunked_edge_partition(10, 3);
+        assert_eq!(c.block_sizes(), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn isolated_vertices_do_not_break_metrics() {
+        let g = Graph::isolated(5);
+        let idx = EdgeIndex::build(&g);
+        let ep = EdgePartition { k: 2, assignment: vec![] };
+        ep.validate(&g).unwrap();
+        assert_eq!(ep.replication_factor(&g, &idx), 1.0);
+        assert_eq!(ep.vertex_cut(&g, &idx), 0);
+    }
+}

@@ -1,0 +1,185 @@
+//! The split-and-connect (SPAC) construction [35]: reduce edge
+//! partitioning to node partitioning.
+//!
+//! For every vertex `v` of degree `d`, create `d` *split vertices*, one
+//! per incident edge, and connect them in a path with `infinity`-weight
+//! *connecting edges* (the `--infinity` flag, default 1000). For every
+//! original edge `{u,v}` add one unit-weight *dominant edge* between the
+//! corresponding split vertices of `u` and `v`. A node partition of the
+//! split graph with balanced blocks then induces an edge partition: edge
+//! `e` goes to the block of its dominant pair (ties broken toward the
+//! lower endpoint). Cutting a connecting edge is expensive (`infinity`),
+//! so a good node partitioner keeps each vertex's split path together —
+//! exactly minimizing vertex replication.
+
+use super::{EdgeIndex, EdgePartition};
+use crate::coordinator::kaffpa;
+use crate::graph::{Graph, GraphBuilder};
+use crate::partition::config::{Config, Mode};
+use crate::partition::Partition;
+
+/// The split graph plus the bookkeeping to pull an edge partition back.
+pub struct SpacGraph {
+    pub graph: Graph,
+    /// split vertex representing (edge id, side): `2*id` = lower endpoint
+    /// `u`'s split vertex, `2*id + 1` = upper endpoint `v`'s.
+    pub split_of_edge: Vec<(u32, u32)>,
+}
+
+/// Build the SPAC split graph of `g` under the canonical edge index.
+pub fn build_split_graph(g: &Graph, idx: &EdgeIndex, infinity: i64) -> SpacGraph {
+    assert!(infinity >= 1);
+    let m = idx.m();
+    // one split vertex per half-edge; number them per node consecutively
+    // so the connecting path is contiguous.
+    let mut split_id = vec![u32::MAX; g.half_edges()];
+    let mut next = 0u32;
+    for v in g.nodes() {
+        for e in g.edge_range(v) {
+            split_id[e] = next;
+            next += 1;
+        }
+    }
+    let n_split = next as usize;
+    let mut b = GraphBuilder::new(n_split);
+    // connecting paths: consecutive split vertices of the same node
+    for v in g.nodes() {
+        let r = g.edge_range(v);
+        for e in r.start..r.end.saturating_sub(1).max(r.start) {
+            if e + 1 < r.end {
+                b.add_edge(split_id[e], split_id[e + 1], infinity);
+            }
+        }
+    }
+    // dominant edges: the two half-edges of each original edge
+    let mut split_of_edge = vec![(u32::MAX, u32::MAX); m];
+    for u in g.nodes() {
+        for e in g.edge_range(u) {
+            let v = g.edge_target(e);
+            let id = idx.half_to_edge[e] as usize;
+            if u < v {
+                split_of_edge[id].0 = split_id[e];
+            } else {
+                split_of_edge[id].1 = split_id[e];
+            }
+        }
+    }
+    for &(su, sv) in &split_of_edge {
+        b.add_edge(su, sv, 1);
+    }
+    SpacGraph { graph: b.build().expect("split graph is valid by construction"), split_of_edge }
+}
+
+/// Derive the edge partition from a node partition of the split graph.
+pub fn derive_edge_partition(spac: &SpacGraph, p: &Partition) -> EdgePartition {
+    let assignment = spac
+        .split_of_edge
+        .iter()
+        .map(|&(su, _sv)| p.block_of(su))
+        .collect();
+    EdgePartition { k: p.k(), assignment }
+}
+
+/// The `edge_partitioning` program (§4.5): SPAC + KaFFPa.
+pub fn edge_partitioning(
+    g: &Graph,
+    k: u32,
+    epsilon: f64,
+    mode: Mode,
+    infinity: i64,
+    seed: u64,
+) -> (EdgePartition, EdgeIndex) {
+    let idx = EdgeIndex::build(g);
+    if idx.m() == 0 {
+        return (EdgePartition { k, assignment: Vec::new() }, idx);
+    }
+    let spac = build_split_graph(g, &idx, infinity);
+    let cfg = Config::from_mode(mode, k, epsilon, seed);
+    let res = kaffpa(&spac.graph, &cfg, None, None);
+    let ep = derive_edge_partition(&spac, &res.partition);
+    (ep, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn split_graph_shape() {
+        // path 0-1-2-3: degrees 1,2,2,1 → 6 split vertices;
+        // connecting edges: 0+1+1+0 = 2; dominant edges: 3 → total 5
+        let g = generators::path(4);
+        let idx = EdgeIndex::build(&g);
+        let spac = build_split_graph(&g, &idx, 1000);
+        assert_eq!(spac.graph.n(), 6);
+        assert_eq!(spac.graph.m(), 5);
+        spac.graph.validate().unwrap();
+        // every edge has both split endpoints assigned
+        for &(a, b) in &spac.split_of_edge {
+            assert_ne!(a, u32::MAX);
+            assert_ne!(b, u32::MAX);
+            assert_ne!(a, b);
+        }
+    }
+
+    #[test]
+    fn split_graph_connecting_weights() {
+        let g = generators::grid2d(3, 3);
+        let idx = EdgeIndex::build(&g);
+        let inf = 777;
+        let spac = build_split_graph(&g, &idx, inf);
+        // weights are either 1 (dominant) or inf (connecting)
+        let mut n_inf = 0usize;
+        let mut n_one = 0usize;
+        for v in spac.graph.nodes() {
+            for (_, w) in spac.graph.neighbors_w(v) {
+                match w {
+                    1 => n_one += 1,
+                    w if w == inf => n_inf += 1,
+                    other => panic!("unexpected weight {other}"),
+                }
+            }
+        }
+        assert_eq!(n_one / 2, g.m());
+        // connecting edges: sum over v of (deg(v)-1)
+        let expect_conn: usize = g.nodes().map(|v| g.degree(v).saturating_sub(1)).sum();
+        assert_eq!(n_inf / 2, expect_conn);
+    }
+
+    #[test]
+    fn edge_partitioning_end_to_end_grid() {
+        let g = generators::grid2d(8, 8);
+        let (ep, idx) = edge_partitioning(&g, 4, 0.05, Mode::Eco, 1000, 1);
+        ep.validate(&g).unwrap();
+        assert_eq!(ep.assignment.len(), g.m());
+        // all four blocks used, reasonable balance
+        assert!(ep.block_sizes().iter().all(|&s| s > 0));
+        assert!(ep.edge_balance() < 1.4, "balance {}", ep.edge_balance());
+        // replication far from worst case (k)
+        let rf = ep.replication_factor(&g, &idx);
+        assert!(rf < 2.0, "replication {rf}");
+    }
+
+    #[test]
+    fn spac_beats_random_on_replication() {
+        let mut rng = crate::rng::Rng::new(9);
+        let g = generators::barabasi_albert(400, 3, &mut rng);
+        let idx = EdgeIndex::build(&g);
+        let (ep, _) = edge_partitioning(&g, 4, 0.1, Mode::EcoSocial, 1000, 2);
+        let rnd = super::super::random_edge_partition(g.m(), 4, &mut rng);
+        let rf_spac = ep.replication_factor(&g, &idx);
+        let rf_rand = rnd.replication_factor(&g, &idx);
+        assert!(rf_spac < rf_rand, "spac {rf_spac} vs random {rf_rand}");
+    }
+
+    #[test]
+    fn handles_empty_and_tiny() {
+        let g = Graph::isolated(3);
+        let (ep, _) = edge_partitioning(&g, 2, 0.03, Mode::Fast, 1000, 3);
+        assert!(ep.assignment.is_empty());
+        let g = generators::path(2); // single edge
+        let (ep, _) = edge_partitioning(&g, 2, 0.03, Mode::Fast, 1000, 4);
+        assert_eq!(ep.assignment.len(), 1);
+    }
+}

@@ -1,0 +1,254 @@
+//! KaFFPaE's combine and mutation operators (§2.2).
+//!
+//! *Combine*: coarsen contracting **no cut edge of either parent** —
+//! clusters never span a block boundary of parent 1 or parent 2 — so both
+//! parents project losslessly to the coarsest graph. The better parent
+//! seeds the coarsest solution; refinement on the way up then mixes in
+//! the other parent's structure (its cut edges are all still visible).
+//! Offspring are therefore never worse than the better parent.
+//!
+//! *Mutation*: a V-cycle with a fresh seed, optionally preceded by a
+//! random boundary perturbation.
+
+use crate::coarsening::contract;
+use crate::coarsening::lp_clustering::label_propagation;
+use crate::coarsening::matching::heavy_edge_matching;
+use crate::graph::Graph;
+use crate::partition::config::{Coarsening, Config};
+use crate::partition::Partition;
+use crate::refinement;
+use crate::rng::Rng;
+
+/// Combine two parents. `p1` should be the fitter parent.
+pub fn combine(
+    g: &Graph,
+    cfg: &Config,
+    p1: &Partition,
+    p2: &Partition,
+    rng: &mut Rng,
+) -> Partition {
+    combine_with_clustering(g, cfg, p1, Some(p2), rng)
+}
+
+/// The flexible combine (§2.2: "a partition can be combined with an
+/// arbitrary domain specific graph clustering"): the second argument can
+/// be any clustering expressed as a partition-like labeling.
+pub fn combine_with_clustering(
+    g: &Graph,
+    cfg: &Config,
+    p1: &Partition,
+    p2: Option<&Partition>,
+    rng: &mut Rng,
+) -> Partition {
+    let stop_n = (cfg.contraction_limit_factor * cfg.k as usize).max(8);
+    let mut graphs: Vec<Graph> = vec![g.clone()];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    let mut cur_p1 = p1.clone();
+    let mut cur_p2: Option<Partition> = p2.cloned();
+    while graphs.last().unwrap().n() > stop_n {
+        let cur_g = graphs.last().unwrap().clone();
+        let bound = cfg.bound(cur_g.total_node_weight()).max(1);
+        let raw = match cfg.coarsening {
+            Coarsening::Matching => {
+                heavy_edge_matching(&cur_g, cfg.edge_rating, bound / 2, rng)
+            }
+            Coarsening::ClusterLp => {
+                label_propagation(&cur_g, Some((bound / 4).max(1)), cfg.lp_iterations, rng)
+            }
+        };
+        // split clusters across either parent's boundaries
+        let mut key_map: std::collections::HashMap<(u32, u32, u32), u32> = Default::default();
+        let mut cluster = vec![0u32; cur_g.n()];
+        let mut next = 0u32;
+        for v in cur_g.nodes() {
+            let key = (
+                raw[v as usize],
+                cur_p1.block_of(v),
+                cur_p2.as_ref().map(|p| p.block_of(v)).unwrap_or(0),
+            );
+            let id = *key_map.entry(key).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            });
+            cluster[v as usize] = id;
+        }
+        let lvl = contract(&cur_g, &cluster);
+        if lvl.coarse.n() as f64 / cur_g.n() as f64 > cfg.min_shrink {
+            break;
+        }
+        // project parents down (well-defined: clusters within blocks)
+        let project = |p: &Partition| -> Partition {
+            let mut cp = vec![0u32; lvl.coarse.n()];
+            for v in cur_g.nodes() {
+                cp[lvl.map[v as usize] as usize] = p.block_of(v);
+            }
+            Partition::from_assignment(&lvl.coarse, cfg.k, cp)
+        };
+        cur_p1 = project(&cur_p1);
+        cur_p2 = cur_p2.as_ref().map(project);
+        maps.push(lvl.map.clone());
+        graphs.push(lvl.coarse);
+    }
+    // seed with the better parent on the coarsest level and refine up
+    let mut child = cur_p1;
+    refinement::refine(graphs.last().unwrap(), &mut child, cfg, rng);
+    for i in (0..maps.len()).rev() {
+        let fine_g = &graphs[i];
+        child = child.project(fine_g, &maps[i]);
+        refinement::refine(fine_g, &mut child, cfg, rng);
+    }
+    child
+}
+
+/// Block-matching combine (the `--mh_enable_tabu_search` operator family):
+/// relabel `p2`'s blocks to maximize overlap with `p1` (greedy assignment
+/// on the k×k overlap matrix), then combine the relabeled partner — the
+/// agreeing cores act as strong clusters.
+pub fn combine_block_matching(
+    g: &Graph,
+    cfg: &Config,
+    p1: &Partition,
+    p2: &Partition,
+    rng: &mut Rng,
+) -> Partition {
+    let k = cfg.k as usize;
+    let mut overlap = vec![0i64; k * k];
+    for v in g.nodes() {
+        overlap[p1.block_of(v) as usize * k + p2.block_of(v) as usize] += g.node_weight(v);
+    }
+    // greedy max-overlap assignment p2-block -> p1-block
+    let mut pairs: Vec<(i64, usize, usize)> = Vec::with_capacity(k * k);
+    for a in 0..k {
+        for b in 0..k {
+            pairs.push((overlap[a * k + b], a, b));
+        }
+    }
+    pairs.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+    let mut to_p1 = vec![usize::MAX; k];
+    let mut taken = vec![false; k];
+    for (_, a, b) in pairs {
+        if to_p1[b] == usize::MAX && !taken[a] {
+            to_p1[b] = a;
+            taken[a] = true;
+        }
+    }
+    for (b, t) in to_p1.iter_mut().enumerate() {
+        if *t == usize::MAX {
+            *t = taken.iter().position(|&x| !x).unwrap_or(b);
+            taken[*t] = true;
+        }
+    }
+    let relabeled: Vec<u32> =
+        g.nodes().map(|v| to_p1[p2.block_of(v) as usize] as u32).collect();
+    let p2r = Partition::from_assignment(g, cfg.k, relabeled);
+    combine(g, cfg, p1, &p2r, rng)
+}
+
+/// Mutation: perturb a random boundary neighborhood, then V-cycle with a
+/// fresh seed. The perturbation may worsen; the V-cycle + acceptance rule
+/// in the island loop handles that.
+pub fn mutate(g: &Graph, cfg: &Config, p: &Partition, rng: &mut Rng) -> Partition {
+    let mut child = p.clone();
+    // random boundary shake: reassign a BFS ball around a boundary node
+    let boundary: Vec<u32> = g
+        .nodes()
+        .filter(|&v| crate::refinement::gain::is_boundary(g, &child, v))
+        .collect();
+    if !boundary.is_empty() && rng.bool(0.5) {
+        let seed = boundary[rng.index(boundary.len())];
+        let target = rng.below(cfg.k as u64) as u32;
+        let mut ball = vec![seed];
+        let mut cur = seed;
+        for _ in 0..(g.n() / (8 * cfg.k as usize)).clamp(2, 32) {
+            let nb = g.neighbors(cur);
+            if nb.is_empty() {
+                break;
+            }
+            cur = nb[rng.index(nb.len())];
+            ball.push(cur);
+        }
+        for v in ball {
+            child.move_node(g, v, target);
+        }
+    }
+    crate::coordinator::cycles::vcycle(g, &mut child, cfg, rng);
+    // repair feasibility if the shake broke it
+    let bound = cfg.bound(g.total_node_weight());
+    if child.max_block_weight() > bound {
+        let _ = crate::kaba::balancing::balance(g, &mut child, bound, rng);
+    }
+    child
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::Mode;
+    use crate::partition::metrics;
+
+    fn two_parents(g: &Graph, k: u32) -> (Partition, Partition) {
+        let cfg = Config::from_mode(Mode::Fast, k, 0.03, 100);
+        let p1 = crate::coordinator::kaffpa(g, &cfg, None, None).partition;
+        let cfg2 = Config::from_mode(Mode::Fast, k, 0.03, 200);
+        let p2 = crate::coordinator::kaffpa(g, &cfg2, None, None).partition;
+        (p1, p2)
+    }
+
+    #[test]
+    fn offspring_no_worse_than_better_parent() {
+        let g = generators::grid2d(16, 16);
+        let (p1, p2) = two_parents(&g, 4);
+        let (c1, c2) = (metrics::edge_cut(&g, &p1), metrics::edge_cut(&g, &p2));
+        let better = c1.min(c2);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 7);
+        let mut rng = Rng::new(7);
+        let (a, b) = if c1 <= c2 { (&p1, &p2) } else { (&p2, &p1) };
+        let child = combine(&g, &cfg, a, b, &mut rng);
+        assert!(
+            metrics::edge_cut(&g, &child) <= better,
+            "child {} vs better parent {better}",
+            metrics::edge_cut(&g, &child)
+        );
+        assert!(child.is_feasible(&g, 0.03));
+    }
+
+    #[test]
+    fn block_matching_combine_valid() {
+        let g = generators::grid2d(12, 12);
+        let (p1, p2) = two_parents(&g, 4);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 8);
+        let mut rng = Rng::new(8);
+        let child = combine_block_matching(&g, &cfg, &p1, &p2, &mut rng);
+        assert!(child.validate(&g).is_ok());
+        assert!(child.is_feasible(&g, 0.03));
+    }
+
+    #[test]
+    fn mutation_stays_feasible() {
+        let g = generators::grid2d(12, 12);
+        let cfg = Config::from_mode(Mode::Fast, 4, 0.03, 9);
+        let p = crate::coordinator::kaffpa(&g, &cfg, None, None).partition;
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let m = mutate(&g, &cfg, &p, &mut rng);
+            assert!(m.validate(&g).is_ok());
+            assert!(m.is_feasible(&g, 0.03), "{:?}", m.block_weights());
+        }
+    }
+
+    #[test]
+    fn combine_with_arbitrary_clustering() {
+        let g = generators::grid2d(12, 12);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 10);
+        let (p1, _) = two_parents(&g, 4);
+        // clustering: 3 horizontal stripes (k-independent labels are fine)
+        let stripes: Vec<u32> = g.nodes().map(|v| (v / 12) / 4).collect();
+        let cl = Partition::from_assignment(&g, 4, stripes);
+        let mut rng = Rng::new(10);
+        let before = metrics::edge_cut(&g, &p1);
+        let child = combine_with_clustering(&g, &cfg, &p1, Some(&cl), &mut rng);
+        assert!(metrics::edge_cut(&g, &child) <= before);
+    }
+}

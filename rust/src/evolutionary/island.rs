@@ -1,0 +1,280 @@
+//! The island model (§2.2): every simulated PE owns a population and
+//! independently performs combine / mutation operations; high-quality
+//! individuals travel between PEs via a randomized rumor-spreading
+//! exchange. PEs are OS threads; "messages" are assignments over
+//! mpsc channels — the same communication pattern as the MPI original,
+//! minus the wire.
+
+use super::combine::{combine, combine_block_matching, mutate};
+use super::population::{Individual, Population};
+use super::EvoConfig;
+use crate::graph::Graph;
+use crate::initial::spectral::FiedlerBackend;
+use crate::partition::{metrics, Partition};
+use crate::rng::Rng;
+use crate::util::timer::Timer;
+use std::sync::mpsc;
+
+/// Result of a kaffpaE run.
+#[derive(Clone, Debug)]
+pub struct EvoResult {
+    pub partition: Partition,
+    pub best_objective: i64,
+    pub edge_cut: i64,
+    pub combines: usize,
+    pub mutations: usize,
+    pub migrations: usize,
+    pub seconds: f64,
+}
+
+/// Run the island model.
+pub fn run(g: &Graph, cfg: &EvoConfig, backend: Option<&dyn FiedlerBackend>) -> EvoResult {
+    let timer = Timer::start();
+    let islands = cfg.islands.max(1);
+    // channels: island i receives on rx[i]; senders cloned everywhere
+    let mut txs: Vec<mpsc::Sender<Vec<u32>>> = Vec::with_capacity(islands);
+    let mut rxs: Vec<mpsc::Receiver<Vec<u32>>> = Vec::with_capacity(islands);
+    for _ in 0..islands {
+        let (tx, rx) = mpsc::channel::<Vec<u32>>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    // quickstart pool: one cheap partition per island, shared to all
+    let quickstart: Vec<Vec<u32>> = if cfg.quickstart {
+        let mut rng = Rng::new(cfg.base.seed ^ 0x9e37);
+        (0..islands)
+            .map(|i| {
+                let mut c = cfg.base.clone();
+                c.seed = cfg.base.seed.wrapping_add(1000 + i as u64);
+                c.initial_attempts = 1;
+                let mut r = rng.split(i as u64);
+                crate::coordinator::multilevel(g, &c, &mut r, backend)
+                    .assignment()
+                    .to_vec()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let results: Vec<(Individual, usize, usize, usize)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (rank, rx) in rxs.into_iter().enumerate() {
+            let txs = txs.clone();
+            let quickstart = &quickstart;
+            let cfg = cfg;
+            let timer = &timer;
+            handles.push(s.spawn(move || {
+                island_main(g, cfg, backend, rank, islands, rx, txs, quickstart, timer)
+            }));
+        }
+        drop(txs);
+        handles.into_iter().map(|h| h.join().expect("island thread")).collect()
+    });
+
+    let mut combines = 0;
+    let mut mutations = 0;
+    let mut migrations = 0;
+    let mut best: Option<Individual> = None;
+    for (ind, c, m, mig) in results {
+        combines += c;
+        mutations += m;
+        migrations += mig;
+        if best.as_ref().map(|b| ind.objective < b.objective).unwrap_or(true) {
+            best = Some(ind);
+        }
+    }
+    let best = best.unwrap();
+    EvoResult {
+        edge_cut: metrics::edge_cut(g, &best.partition),
+        best_objective: best.objective,
+        partition: best.partition,
+        combines,
+        mutations,
+        migrations,
+        seconds: timer.elapsed_secs(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn island_main(
+    g: &Graph,
+    cfg: &EvoConfig,
+    backend: Option<&dyn FiedlerBackend>,
+    rank: usize,
+    islands: usize,
+    rx: mpsc::Receiver<Vec<u32>>,
+    txs: Vec<mpsc::Sender<Vec<u32>>>,
+    quickstart: &[Vec<u32>],
+    timer: &Timer,
+) -> (Individual, usize, usize, usize) {
+    let mut rng = Rng::new(cfg.base.seed.wrapping_mul(31).wrapping_add(rank as u64));
+    let mut pop = Population::new(cfg.population_size);
+    let fit = cfg.fitness;
+    let mut combines = 0usize;
+    let mut mutations = 0usize;
+    let mut migrations = 0usize;
+
+    // initial population: quickstart pool (if any) + own multilevel runs
+    for qs in quickstart {
+        let p = Partition::from_assignment(g, cfg.base.k, qs.clone());
+        let objective = fit.eval(g, &p);
+        pop.insert(Individual { partition: p, objective });
+    }
+    // fill the population with independent multilevel runs (§4.2: "a time
+    // limit t=0 means that the algorithm will only create the initial
+    // population"), but never spend more than ~half the budget on it
+    while pop.len() < cfg.population_size {
+        let mut c = cfg.base.clone();
+        c.seed = rng.next_u64();
+        let mut r = rng.split(pop.len() as u64);
+        let p = crate::coordinator::multilevel(g, &c, &mut r, backend);
+        let objective = fit.eval(g, &p);
+        pop.insert(Individual { partition: p, objective });
+        if pop.len() >= 2 && timer.elapsed_secs() >= 0.5 * cfg.time_limit {
+            break;
+        }
+        if timer.elapsed_secs() >= cfg.time_limit {
+            break;
+        }
+    }
+
+    // evolve until the time limit
+    while timer.elapsed_secs() < cfg.time_limit {
+        // ingest migrants
+        while let Ok(assign) = rx.try_recv() {
+            let p = Partition::from_assignment(g, cfg.base.k, assign);
+            let objective = fit.eval(g, &p);
+            pop.insert(Individual { partition: p, objective });
+        }
+        let op = rng.f64();
+        let child = if op < 0.10 {
+            // fresh blood: an independent multilevel run keeps diversity up
+            // (the evolutionary loop then strictly dominates plain restarts)
+            let mut c = cfg.base.clone();
+            c.seed = rng.next_u64();
+            let mut r = rng.split(combines as u64 ^ 0xf5e5_4b10_0d1e_a5e5);
+            crate::coordinator::multilevel(g, &c, &mut r, backend)
+        } else if op < 0.75 {
+            let Some((a, b)) = pop.pick_parents(&mut rng) else { continue };
+            let (pa, pb) = (&pop.members[a], &pop.members[b]);
+            let (fst, snd) = if pa.objective <= pb.objective { (pa, pb) } else { (pb, pa) };
+            combines += 1;
+            let child = if cfg.tabu_combine && rng.bool(0.5) {
+                combine_block_matching(g, &cfg.base, &fst.partition, &snd.partition, &mut rng)
+            } else {
+                combine(g, &cfg.base, &fst.partition, &snd.partition, &mut rng)
+            };
+            // KaBaPE mode: search with internal slack, then restore the
+            // strict (true-ε) balance via min-cost paths and improve with
+            // negative cycles — the §2.3 pipeline.
+            if cfg.kabape {
+                let mut c = child;
+                let internal = crate::util::block_weight_bound(
+                    g.total_node_weight(),
+                    cfg.base.k,
+                    cfg.kabae_internal_bal.max(cfg.base.epsilon),
+                );
+                let strict = crate::util::block_weight_bound(
+                    g.total_node_weight(),
+                    cfg.base.k,
+                    cfg.base.epsilon,
+                );
+                let _ = crate::kaba::balancing::balance(g, &mut c, internal, &mut rng);
+                crate::kaba::kaba_refine(g, &mut c, &mut rng, 3);
+                let _ = crate::kaba::balancing::balance(g, &mut c, strict, &mut rng);
+                crate::kaba::kaba_refine(g, &mut c, &mut rng, 3);
+                c
+            } else {
+                child
+            }
+        } else {
+            let Some(best) = pop.best() else { continue };
+            mutations += 1;
+            mutate(g, &cfg.base, &best.partition, &mut rng)
+        };
+        let objective = fit.eval(g, &child);
+        let entered = pop.insert(Individual { partition: child.clone(), objective });
+        // rumor spreading: a freshly inserted good individual is pushed to
+        // a random other island
+        if entered && islands > 1 && rng.bool(0.5) {
+            let mut other = rng.index(islands);
+            if other == rank {
+                other = (other + 1) % islands;
+            }
+            if txs[other].send(child.assignment().to_vec()).is_ok() {
+                migrations += 1;
+            }
+        }
+    }
+    let mut best = pop
+        .best()
+        .cloned()
+        .unwrap_or_else(|| {
+            let p = Partition::trivial(g, cfg.base.k);
+            let objective = fit.eval(g, &p);
+            Individual { partition: p, objective }
+        });
+    // KaBaPE guarantees feasible output (§2.3): final strict balancing
+    if cfg.kabape {
+        let strict = crate::util::block_weight_bound(
+            g.total_node_weight(),
+            cfg.base.k,
+            cfg.base.epsilon,
+        );
+        if best.partition.max_block_weight() > strict {
+            let _ = crate::kaba::balancing::balance(g, &mut best.partition, strict, &mut rng);
+            crate::kaba::kaba_refine(g, &mut best.partition, &mut rng, 3);
+            best.objective = fit.eval(g, &best.partition);
+        }
+    }
+    (best, combines, mutations, migrations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::{Config, Mode};
+
+    #[test]
+    fn islands_run_and_communicate() {
+        let g = generators::grid2d(14, 14);
+        let base = Config::from_mode(Mode::Fast, 4, 0.03, 21);
+        let mut ecfg = EvoConfig::new(base);
+        ecfg.time_limit = 0.4;
+        ecfg.islands = 3;
+        let res = run(&g, &ecfg, None);
+        assert!(res.partition.is_feasible(&g, 0.03));
+        assert!(res.combines + res.mutations > 0);
+    }
+
+    #[test]
+    fn quickstart_seeds_population() {
+        let g = generators::grid2d(10, 10);
+        let base = Config::from_mode(Mode::Fast, 2, 0.03, 22);
+        let mut ecfg = EvoConfig::new(base);
+        ecfg.time_limit = 0.2;
+        ecfg.quickstart = true;
+        let res = run(&g, &ecfg, None);
+        assert!(res.best_objective > 0);
+    }
+
+    #[test]
+    fn kabape_mode_produces_feasible_eps0() {
+        let g = generators::grid2d(12, 12); // 144, k=4 -> 36 exactly
+        let mut base = Config::from_mode(Mode::Eco, 4, 0.0, 23);
+        base.enforce_balance = true;
+        let mut ecfg = EvoConfig::new(base);
+        ecfg.time_limit = 0.5;
+        ecfg.kabape = true;
+        ecfg.kabae_internal_bal = 0.03;
+        let res = run(&g, &ecfg, None);
+        assert!(
+            res.partition.is_feasible(&g, 0.0),
+            "kabapE must return perfectly balanced: {:?}",
+            res.partition.block_weights()
+        );
+    }
+}

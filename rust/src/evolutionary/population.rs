@@ -1,0 +1,147 @@
+//! An island's population: a bounded pool of partitions ranked by
+//! fitness. Insertion evicts the *most similar among strictly worse*
+//! individuals (KaFFPaE's diversity-preserving replacement); if the
+//! newcomer is worse than everyone it is rejected.
+
+use crate::partition::Partition;
+
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub partition: Partition,
+    pub objective: i64,
+}
+
+#[derive(Debug)]
+pub struct Population {
+    pub capacity: usize,
+    pub members: Vec<Individual>,
+}
+
+/// Hamming-style distance between assignments (block-label sensitive;
+/// cheap and good enough as a similarity proxy for eviction).
+fn distance(a: &Partition, b: &Partition) -> usize {
+    a.assignment()
+        .iter()
+        .zip(b.assignment().iter())
+        .filter(|(x, y)| x != y)
+        .count()
+}
+
+impl Population {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity: capacity.max(1), members: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn best(&self) -> Option<&Individual> {
+        self.members.iter().min_by_key(|i| i.objective)
+    }
+
+    pub fn worst_objective(&self) -> Option<i64> {
+        self.members.iter().map(|i| i.objective).max()
+    }
+
+    /// Insert, possibly evicting. Returns true if the individual entered.
+    pub fn insert(&mut self, ind: Individual) -> bool {
+        if self.members.len() < self.capacity {
+            self.members.push(ind);
+            return true;
+        }
+        // evict the most similar strictly-worse member
+        let mut victim: Option<(usize, usize)> = None; // (idx, -distance)
+        for (i, m) in self.members.iter().enumerate() {
+            if m.objective > ind.objective {
+                let d = distance(&m.partition, &ind.partition);
+                if victim.map(|(_, vd)| d < vd).unwrap_or(true) {
+                    victim = Some((i, d));
+                }
+            }
+        }
+        match victim {
+            Some((i, _)) => {
+                self.members[i] = ind;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Two distinct member indices for a combine (best-biased: one uniform,
+    /// one tournament of two).
+    pub fn pick_parents(&self, rng: &mut crate::rng::Rng) -> Option<(usize, usize)> {
+        if self.members.len() < 2 {
+            return None;
+        }
+        let a = rng.index(self.members.len());
+        let c1 = rng.index(self.members.len());
+        let c2 = rng.index(self.members.len());
+        let b = if self.members[c1].objective <= self.members[c2].objective { c1 } else { c2 };
+        if a == b {
+            let b2 = (b + 1) % self.members.len();
+            Some((a, b2))
+        } else {
+            Some((a, b))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+
+    fn ind(g: &crate::graph::Graph, assign: Vec<u32>, obj: i64) -> Individual {
+        Individual { partition: Partition::from_assignment(g, 2, assign), objective: obj }
+    }
+
+    #[test]
+    fn fills_then_evicts_worse() {
+        let g = generators::path(4);
+        let mut pop = Population::new(2);
+        assert!(pop.insert(ind(&g, vec![0, 0, 1, 1], 10)));
+        assert!(pop.insert(ind(&g, vec![0, 1, 0, 1], 20)));
+        // better than the worst: evicts the 20
+        assert!(pop.insert(ind(&g, vec![0, 1, 1, 1], 15)));
+        assert_eq!(pop.worst_objective(), Some(15));
+        // worse than everyone: rejected
+        assert!(!pop.insert(ind(&g, vec![1, 1, 1, 0], 99)));
+        assert_eq!(pop.len(), 2);
+        assert_eq!(pop.best().unwrap().objective, 10);
+    }
+
+    #[test]
+    fn eviction_prefers_similar() {
+        let g = generators::path(6);
+        let mut pop = Population::new(2);
+        pop.insert(ind(&g, vec![0, 0, 0, 1, 1, 1], 30));
+        pop.insert(ind(&g, vec![1, 1, 1, 0, 0, 0], 30));
+        // newcomer similar to the first, better than both: evicts first
+        assert!(pop.insert(ind(&g, vec![0, 0, 0, 0, 1, 1], 10)));
+        assert!(pop
+            .members
+            .iter()
+            .any(|m| m.partition.assignment() == [1, 1, 1, 0, 0, 0]));
+    }
+
+    #[test]
+    fn parents_are_distinct() {
+        let g = generators::path(4);
+        let mut pop = Population::new(4);
+        for i in 0..4 {
+            pop.insert(ind(&g, vec![0, 0, 1, 1], 10 + i));
+        }
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let (a, b) = pop.pick_parents(&mut rng).unwrap();
+            assert_ne!(a, b);
+        }
+    }
+}

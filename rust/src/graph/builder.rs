@@ -1,0 +1,187 @@
+//! Incremental graph construction.
+//!
+//! `GraphBuilder` collects undirected edges (in any order, one mention per
+//! edge is enough), merges duplicates by summing weights, drops self-loops
+//! on request, and emits a validated CSR [`Graph`]. Used by the generators,
+//! the contraction step and the format readers.
+
+use super::csr::{Graph, GraphError};
+use crate::{EdgeWeight, NodeId, NodeWeight};
+
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    vwgt: Vec<NodeWeight>,
+    // (u, v, w) with u != v; stored once, symmetrized in build()
+    edges: Vec<(u32, u32, EdgeWeight)>,
+    allow_merge: bool,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph with `n` nodes, unit node weights by default.
+    pub fn new(n: usize) -> Self {
+        Self { n, vwgt: vec![1; n], edges: Vec::new(), allow_merge: true }
+    }
+
+    /// If merging is disabled, duplicate edges cause a `ParallelEdge` error
+    /// in `build` instead of being combined (the behaviour graphchecker
+    /// wants when verifying user input).
+    pub fn strict(mut self) -> Self {
+        self.allow_merge = false;
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn set_node_weight(&mut self, v: NodeId, w: NodeWeight) {
+        self.vwgt[v as usize] = w;
+    }
+
+    pub fn set_node_weights(&mut self, w: Vec<NodeWeight>) {
+        assert_eq!(w.len(), self.n);
+        self.vwgt = w;
+    }
+
+    /// Add undirected edge {u, v} with weight `w`. Mentioning the edge from
+    /// both endpoints is fine when merging is enabled — weights of
+    /// duplicates are *summed* (the contraction semantics).
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: EdgeWeight) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n, "edge out of range");
+        if u == v {
+            return; // self-loops vanish under contraction semantics
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push((a, b, w));
+    }
+
+    /// Number of (pre-merge) edge mentions.
+    pub fn edge_mentions(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(mut self) -> Result<Graph, GraphError> {
+        // sort + merge duplicates
+        self.edges.sort_unstable_by_key(|&(a, b, _)| ((a as u64) << 32) | b as u64);
+        let mut merged: Vec<(u32, u32, EdgeWeight)> = Vec::with_capacity(self.edges.len());
+        for (a, b, w) in self.edges {
+            if let Some(last) = merged.last_mut() {
+                if last.0 == a && last.1 == b {
+                    if !self.allow_merge {
+                        return Err(GraphError::ParallelEdge(a, b));
+                    }
+                    last.2 += w;
+                    continue;
+                }
+            }
+            merged.push((a, b, w));
+        }
+        // counting sort into CSR
+        let n = self.n;
+        let mut deg = vec![0u32; n];
+        for &(a, b, _) in &merged {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut xadj = vec![0u32; n + 1];
+        for i in 0..n {
+            xadj[i + 1] = xadj[i] + deg[i];
+        }
+        let total = xadj[n] as usize;
+        let mut adjncy = vec![0u32; total];
+        let mut adjwgt = vec![0i64; total];
+        let mut cursor = xadj[..n].to_vec();
+        for &(a, b, w) in &merged {
+            let ca = cursor[a as usize] as usize;
+            adjncy[ca] = b;
+            adjwgt[ca] = w;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            adjncy[cb] = a;
+            adjwgt[cb] = w;
+            cursor[b as usize] += 1;
+        }
+        // adjacency lists come out sorted by construction (edges sorted by
+        // (a,b) and we append in order) — keep that property, some modules
+        // (binary IO round-trip, subgraph extraction) rely on determinism.
+        Graph::from_csr(xadj, adjncy, Some(self.vwgt), Some(adjwgt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_simple_graph() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(2, 3, 1);
+        b.add_edge(3, 0, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        for v in g.nodes() {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn merges_duplicate_edges_summing_weights() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 2);
+        b.add_edge(1, 0, 3); // same undirected edge, reversed mention
+        let g = b.build().unwrap();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.total_edge_weight(), 5);
+    }
+
+    #[test]
+    fn strict_mode_rejects_duplicates() {
+        let mut b = GraphBuilder::new(2).strict();
+        b.add_edge(0, 1, 1);
+        b.add_edge(0, 1, 1);
+        assert!(matches!(b.build(), Err(GraphError::ParallelEdge(0, 1))));
+    }
+
+    #[test]
+    fn drops_self_loops() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0, 5);
+        b.add_edge(0, 1, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn node_weights_respected() {
+        let mut b = GraphBuilder::new(3);
+        b.set_node_weight(1, 7);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.node_weight(1), 7);
+        assert_eq!(g.total_node_weight(), 9);
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let b = GraphBuilder::new(5);
+        let g = b.build().unwrap();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn adjacency_sorted_deterministic() {
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(0, 4, 1);
+        b.add_edge(0, 2, 1);
+        b.add_edge(0, 1, 1);
+        b.add_edge(0, 3, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,310 @@
+//! The `graphchecker` program (§4.11): validates that a Metis-format file
+//! describes a legal KaHIP input, reporting *all* problems §3.3 lists —
+//! self-loops, parallel edges, missing backward edges, asymmetric weights
+//! and header/content count mismatches — with line numbers.
+
+use std::io::{BufRead, BufReader, Read};
+
+/// One diagnostic from the checker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// 1-based line in the file (0 for file-level problems).
+    pub line: usize,
+    pub message: String,
+}
+
+/// The checker's verdict.
+#[derive(Debug)]
+pub struct CheckReport {
+    pub n: usize,
+    pub m: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        if self.ok() {
+            format!("The graph format seems correct. (n={}, m={})\n", self.n, self.m)
+        } else {
+            let mut s = String::from("The graph has the following problems:\n");
+            for d in &self.diagnostics {
+                if d.line > 0 {
+                    s.push_str(&format!("  line {}: {}\n", d.line, d.message));
+                } else {
+                    s.push_str(&format!("  {}\n", d.message));
+                }
+            }
+            s
+        }
+    }
+}
+
+/// Check a Metis-format stream without assuming it parses into a valid
+/// graph — this tool must diagnose exactly the broken files `read_metis`
+/// rejects.
+pub fn check_metis<R: Read>(r: R) -> CheckReport {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let reader = BufReader::new(r);
+    // (line_no, content) with comments skipped but line numbers preserved
+    let mut content_lines: Vec<(usize, String)> = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        match line {
+            Ok(s) => {
+                let t = s.trim().to_string();
+                if !t.starts_with('%') {
+                    content_lines.push((i + 1, t));
+                }
+            }
+            Err(e) => {
+                diags.push(Diagnostic { line: i + 1, message: format!("unreadable line: {e}") });
+                return CheckReport { n: 0, m: 0, diagnostics: diags };
+            }
+        }
+    }
+    if content_lines.is_empty() {
+        diags.push(Diagnostic { line: 0, message: "empty file".into() });
+        return CheckReport { n: 0, m: 0, diagnostics: diags };
+    }
+    let (hline, header) = &content_lines[0];
+    let head: Vec<&str> = header.split_whitespace().collect();
+    if head.len() < 2 || head.len() > 3 {
+        diags.push(Diagnostic {
+            line: *hline,
+            message: format!("header must be 'n m [f]', found {} fields", head.len()),
+        });
+        return CheckReport { n: 0, m: 0, diagnostics: diags };
+    }
+    let n: usize = head[0].parse().unwrap_or_else(|_| {
+        diags.push(Diagnostic { line: *hline, message: format!("bad n '{}'", head[0]) });
+        0
+    });
+    let m: usize = head[1].parse().unwrap_or_else(|_| {
+        diags.push(Diagnostic { line: *hline, message: format!("bad m '{}'", head[1]) });
+        0
+    });
+    let flag: u32 = if head.len() == 3 {
+        head[2].parse().unwrap_or_else(|_| {
+            diags.push(Diagnostic { line: *hline, message: format!("bad flag '{}'", head[2]) });
+            0
+        })
+    } else {
+        0
+    };
+    if ![0, 1, 10, 11].contains(&flag) {
+        diags.push(Diagnostic { line: *hline, message: format!("format flag {flag} not in {{1,10,11}}") });
+    }
+    let has_nw = flag == 10 || flag == 11;
+    let has_ew = flag == 1 || flag == 11;
+
+    let vertex_lines = &content_lines[1..];
+    if vertex_lines.len() != n {
+        diags.push(Diagnostic {
+            line: 0,
+            message: format!("header claims n={n} vertices but file has {} vertex lines", vertex_lines.len()),
+        });
+    }
+
+    // adjacency[(u, v)] -> (weight, line). Only meaningful if parse succeeds.
+    let mut adj: std::collections::HashMap<(u32, u32), (i64, usize)> =
+        std::collections::HashMap::new();
+    let mut mention_count = 0usize;
+    for (v, (line_no, line)) in vertex_lines.iter().enumerate().take(n) {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let mut idx = 0;
+        if has_nw {
+            match toks.first().map(|t| t.parse::<i64>()) {
+                Some(Ok(w)) if w >= 0 => {}
+                Some(Ok(_)) => diags.push(Diagnostic {
+                    line: *line_no,
+                    message: "negative vertex weight".into(),
+                }),
+                _ => diags.push(Diagnostic {
+                    line: *line_no,
+                    message: "missing/invalid vertex weight".into(),
+                }),
+            }
+            idx = 1;
+        }
+        let step = if has_ew { 2 } else { 1 };
+        if (toks.len() - idx.min(toks.len())) % step != 0 {
+            diags.push(Diagnostic {
+                line: *line_no,
+                message: "dangling token (edge weight flag mismatch?)".into(),
+            });
+        }
+        while idx < toks.len() {
+            let tgt: i64 = match toks[idx].parse() {
+                Ok(t) => t,
+                Err(_) => {
+                    diags.push(Diagnostic {
+                        line: *line_no,
+                        message: format!("invalid neighbor '{}'", toks[idx]),
+                    });
+                    idx += step;
+                    continue;
+                }
+            };
+            let w: i64 = if has_ew {
+                match toks.get(idx + 1).map(|t| t.parse::<i64>()) {
+                    Some(Ok(w)) => {
+                        if w <= 0 {
+                            diags.push(Diagnostic {
+                                line: *line_no,
+                                message: format!("edge weight {w} must be > 0"),
+                            });
+                        }
+                        w
+                    }
+                    _ => {
+                        diags.push(Diagnostic {
+                            line: *line_no,
+                            message: "missing edge weight".into(),
+                        });
+                        1
+                    }
+                }
+            } else {
+                1
+            };
+            idx += step;
+            mention_count += 1;
+            if tgt < 1 || tgt as usize > n {
+                diags.push(Diagnostic {
+                    line: *line_no,
+                    message: format!("neighbor {tgt} out of range 1..={n}"),
+                });
+                continue;
+            }
+            let u = v as u32;
+            let t = (tgt - 1) as u32;
+            if u == t {
+                diags.push(Diagnostic { line: *line_no, message: format!("self-loop at vertex {}", v + 1) });
+                continue;
+            }
+            if adj.insert((u, t), (w, *line_no)).is_some() {
+                diags.push(Diagnostic {
+                    line: *line_no,
+                    message: format!("parallel edge {} -> {tgt}", v + 1),
+                });
+            }
+        }
+    }
+    if mention_count != 2 * m && n == vertex_lines.len() {
+        diags.push(Diagnostic {
+            line: 0,
+            message: format!(
+                "header claims m={m} edges ({} directed) but file contains {mention_count} adjacency entries",
+                2 * m
+            ),
+        });
+    }
+    // symmetry: every forward edge needs a backward edge of equal weight
+    for (&(u, v), &(w, line)) in &adj {
+        match adj.get(&(v, u)) {
+            None => diags.push(Diagnostic {
+                line,
+                message: format!("edge {} -> {} has no backward edge", u + 1, v + 1),
+            }),
+            Some(&(w2, _)) if w2 != w => {
+                if u < v {
+                    diags.push(Diagnostic {
+                        line,
+                        message: format!(
+                            "edge {} -> {} has weight {w} but backward edge has {w2}",
+                            u + 1,
+                            v + 1
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    diags.sort_by_key(|d| d.line);
+    CheckReport { n, m, diagnostics: diags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, io_metis};
+
+    fn check_str(s: &str) -> CheckReport {
+        check_metis(s.as_bytes())
+    }
+
+    #[test]
+    fn accepts_valid_graph() {
+        let g = generators::grid2d(4, 4);
+        let mut buf = Vec::new();
+        io_metis::write_metis(&g, &mut buf).unwrap();
+        let rep = check_metis(&buf[..]);
+        assert!(rep.ok(), "{}", rep.render());
+        assert_eq!(rep.n, 16);
+    }
+
+    #[test]
+    fn detects_self_loop() {
+        let rep = check_str("2 2\n1 2\n1 2\n");
+        assert!(rep.diagnostics.iter().any(|d| d.message.contains("self-loop")));
+    }
+
+    #[test]
+    fn detects_missing_backward_edge() {
+        let rep = check_str("2 1\n2\n\n");
+        assert!(
+            rep.diagnostics.iter().any(|d| d.message.contains("no backward edge")),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn detects_asymmetric_weights() {
+        let rep = check_str("2 1 1\n2 5\n1 6\n");
+        assert!(
+            rep.diagnostics.iter().any(|d| d.message.contains("backward edge has")),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn detects_parallel_edges() {
+        let rep = check_str("2 2\n2 2\n1 1\n");
+        assert!(rep.diagnostics.iter().any(|d| d.message.contains("parallel")));
+    }
+
+    #[test]
+    fn detects_count_mismatch() {
+        let rep = check_str("3 5\n2\n1 3\n2\n");
+        assert!(
+            rep.diagnostics.iter().any(|d| d.message.contains("header claims m=5")),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn detects_wrong_vertex_count() {
+        let rep = check_str("4 1\n2\n1\n");
+        assert!(rep.diagnostics.iter().any(|d| d.message.contains("vertex lines")));
+    }
+
+    #[test]
+    fn detects_out_of_range() {
+        let rep = check_str("2 1\n5\n1\n");
+        assert!(rep.diagnostics.iter().any(|d| d.message.contains("out of range")));
+    }
+
+    #[test]
+    fn render_mentions_line_numbers() {
+        let rep = check_str("% c\n2 2\n1 2\n1 2\n");
+        let text = rep.render();
+        assert!(text.contains("line 3") || text.contains("line 4"), "{text}");
+    }
+}

@@ -1,0 +1,447 @@
+//! The CSR graph (§5.1 of the user guide).
+//!
+//! Invariants (validated on construction, relied on everywhere):
+//! - `xadj.len() == n + 1`, `xadj[0] == 0`, `xadj` non-decreasing,
+//!   `xadj[n] == adjncy.len()`
+//! - every undirected edge `{u,v}` appears as both half-edges `(u,v)` and
+//!   `(v,u)` with equal weight
+//! - no self-loops, no parallel edges
+//! - node weights ≥ 0, edge weights > 0
+
+use crate::{EdgeWeight, NodeId, NodeWeight};
+use std::fmt;
+
+/// Errors produced when validating a CSR structure (mirrors the failure
+/// modes §3.3 "Troubleshooting" lists for the `graphchecker` tool).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    BadXadj(String),
+    SelfLoop(NodeId),
+    ParallelEdge(NodeId, NodeId),
+    MissingBackEdge(NodeId, NodeId),
+    AsymmetricWeight(NodeId, NodeId),
+    BadNodeWeight(NodeId),
+    BadEdgeWeight(NodeId, NodeId),
+    TargetOutOfRange(NodeId, NodeId),
+    SizeMismatch(String),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::BadXadj(m) => write!(f, "invalid xadj: {m}"),
+            GraphError::SelfLoop(v) => write!(f, "self-loop at node {v}"),
+            GraphError::ParallelEdge(u, v) => write!(f, "parallel edge {u}-{v}"),
+            GraphError::MissingBackEdge(u, v) => {
+                write!(f, "forward edge {u}->{v} has no backward edge")
+            }
+            GraphError::AsymmetricWeight(u, v) => {
+                write!(f, "edge {u}-{v} has different forward/backward weights")
+            }
+            GraphError::BadNodeWeight(v) => write!(f, "node {v} has negative weight"),
+            GraphError::BadEdgeWeight(u, v) => write!(f, "edge {u}-{v} has non-positive weight"),
+            GraphError::TargetOutOfRange(u, v) => write!(f, "edge {u}->{v} target out of range"),
+            GraphError::SizeMismatch(m) => write!(f, "size mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// An immutable undirected graph in CSR form with node and edge weights.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Graph {
+    xadj: Vec<u32>,
+    adjncy: Vec<u32>,
+    vwgt: Vec<NodeWeight>,
+    adjwgt: Vec<EdgeWeight>,
+    total_node_weight: i64,
+}
+
+impl fmt::Debug for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Graph(n={}, m={})", self.n(), self.m())
+    }
+}
+
+impl Graph {
+    /// Build from raw CSR arrays, validating all invariants.
+    /// `vwgt == None` means unit node weights, `adjwgt == None` unit edge
+    /// weights — exactly the NULL-pointer convention of the C interface.
+    pub fn from_csr(
+        xadj: Vec<u32>,
+        adjncy: Vec<u32>,
+        vwgt: Option<Vec<NodeWeight>>,
+        adjwgt: Option<Vec<EdgeWeight>>,
+    ) -> Result<Self, GraphError> {
+        let n = xadj.len().saturating_sub(1);
+        if xadj.is_empty() {
+            return Err(GraphError::BadXadj("xadj must have length n+1 >= 1".into()));
+        }
+        if xadj[0] != 0 {
+            return Err(GraphError::BadXadj("xadj[0] != 0".into()));
+        }
+        for i in 0..n {
+            if xadj[i] > xadj[i + 1] {
+                return Err(GraphError::BadXadj(format!("xadj decreases at {i}")));
+            }
+        }
+        if xadj[n] as usize != adjncy.len() {
+            return Err(GraphError::SizeMismatch(format!(
+                "xadj[n]={} != adjncy.len()={}",
+                xadj[n],
+                adjncy.len()
+            )));
+        }
+        let vwgt = vwgt.unwrap_or_else(|| vec![1; n]);
+        let adjwgt = adjwgt.unwrap_or_else(|| vec![1; adjncy.len()]);
+        if vwgt.len() != n {
+            return Err(GraphError::SizeMismatch(format!(
+                "vwgt.len()={} != n={n}",
+                vwgt.len()
+            )));
+        }
+        if adjwgt.len() != adjncy.len() {
+            return Err(GraphError::SizeMismatch(format!(
+                "adjwgt.len()={} != adjncy.len()={}",
+                adjwgt.len(),
+                adjncy.len()
+            )));
+        }
+        let total_node_weight = vwgt.iter().sum();
+        let g = Self { xadj, adjncy, vwgt, adjwgt, total_node_weight };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Construct without validation — used on hot internal paths
+    /// (contraction, subgraph extraction) that construct correct-by-
+    /// construction CSR. Debug builds still validate.
+    pub fn from_parts_unchecked(
+        xadj: Vec<u32>,
+        adjncy: Vec<u32>,
+        vwgt: Vec<NodeWeight>,
+        adjwgt: Vec<EdgeWeight>,
+    ) -> Self {
+        let total_node_weight = vwgt.iter().sum();
+        let g = Self { xadj, adjncy, vwgt, adjwgt, total_node_weight };
+        debug_assert!(g.validate().is_ok(), "internal CSR invalid: {:?}", g.validate());
+        g
+    }
+
+    /// Full invariant check (what `graphchecker` runs).
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let n = self.n();
+        for v in 0..n as u32 {
+            if self.vwgt[v as usize] < 0 {
+                return Err(GraphError::BadNodeWeight(v));
+            }
+            let mut seen: Vec<u32> = Vec::with_capacity(self.degree(v));
+            for e in self.edge_range(v) {
+                let u = self.adjncy[e];
+                if u as usize >= n {
+                    return Err(GraphError::TargetOutOfRange(v, u));
+                }
+                if u == v {
+                    return Err(GraphError::SelfLoop(v));
+                }
+                if self.adjwgt[e] <= 0 {
+                    return Err(GraphError::BadEdgeWeight(v, u));
+                }
+                seen.push(u);
+                // backward edge with equal weight must exist
+                let w_fwd = self.adjwgt[e];
+                let mut found = false;
+                for e2 in self.edge_range(u) {
+                    if self.adjncy[e2] == v {
+                        if self.adjwgt[e2] != w_fwd {
+                            return Err(GraphError::AsymmetricWeight(v, u));
+                        }
+                        found = true;
+                        break;
+                    }
+                }
+                if !found {
+                    return Err(GraphError::MissingBackEdge(v, u));
+                }
+            }
+            seen.sort_unstable();
+            for w in seen.windows(2) {
+                if w[0] == w[1] {
+                    return Err(GraphError::ParallelEdge(v, w[0]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    /// Number of undirected edges (each stored as two half-edges).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    /// Number of stored half-edges (`2m`).
+    #[inline]
+    pub fn half_edges(&self) -> usize {
+        self.adjncy.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Range of half-edge indices belonging to `v`.
+    #[inline]
+    pub fn edge_range(&self, v: NodeId) -> std::ops::Range<usize> {
+        self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize
+    }
+
+    /// Neighbor slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[u32] {
+        &self.adjncy[self.edge_range(v)]
+    }
+
+    /// Iterate `(neighbor, edge_weight)` pairs of `v`.
+    #[inline]
+    pub fn neighbors_w(&self, v: NodeId) -> impl Iterator<Item = (NodeId, EdgeWeight)> + '_ {
+        let r = self.edge_range(v);
+        self.adjncy[r.clone()].iter().copied().zip(self.adjwgt[r].iter().copied())
+    }
+
+    #[inline]
+    pub fn node_weight(&self, v: NodeId) -> NodeWeight {
+        self.vwgt[v as usize]
+    }
+
+    /// Target node of half-edge `e`.
+    #[inline]
+    pub fn edge_target(&self, e: usize) -> NodeId {
+        self.adjncy[e]
+    }
+
+    /// Weight of half-edge `e`.
+    #[inline]
+    pub fn edge_weight_at(&self, e: usize) -> EdgeWeight {
+        self.adjwgt[e]
+    }
+
+    /// Sum of incident edge weights (`deg_ω(v)` in the guide).
+    pub fn weighted_degree(&self, v: NodeId) -> i64 {
+        self.edge_range(v).map(|e| self.adjwgt[e]).sum()
+    }
+
+    /// `c(V)` — total node weight.
+    #[inline]
+    pub fn total_node_weight(&self) -> i64 {
+        self.total_node_weight
+    }
+
+    /// Total edge weight `ω(E)` (undirected: each edge counted once).
+    pub fn total_edge_weight(&self) -> i64 {
+        self.adjwgt.iter().sum::<i64>() / 2
+    }
+
+    /// Maximum node degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Raw arrays for the C-style interface / the runtime padder.
+    pub fn raw(&self) -> (&[u32], &[u32], &[NodeWeight], &[EdgeWeight]) {
+        (&self.xadj, &self.adjncy, &self.vwgt, &self.adjwgt)
+    }
+
+    /// Node iterator `0..n`.
+    #[inline]
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        0..self.n() as u32
+    }
+
+    /// Replace all node weights (used by `--balance_edges`:
+    /// `c'(v) = c(v) + deg_ω(v)`).
+    pub fn with_node_weights(&self, vwgt: Vec<NodeWeight>) -> Graph {
+        assert_eq!(vwgt.len(), self.n());
+        Graph::from_parts_unchecked(self.xadj.clone(), self.adjncy.clone(), vwgt, self.adjwgt.clone())
+    }
+
+    /// Connected components: returns (component id per node, #components).
+    pub fn connected_components(&self) -> (Vec<u32>, usize) {
+        let n = self.n();
+        let mut comp = vec![u32::MAX; n];
+        let mut num = 0u32;
+        let mut stack: Vec<u32> = Vec::new();
+        for s in 0..n as u32 {
+            if comp[s as usize] != u32::MAX {
+                continue;
+            }
+            comp[s as usize] = num;
+            stack.push(s);
+            while let Some(v) = stack.pop() {
+                for &u in self.neighbors(v) {
+                    if comp[u as usize] == u32::MAX {
+                        comp[u as usize] = num;
+                        stack.push(u);
+                    }
+                }
+            }
+            num += 1;
+        }
+        (comp, num as usize)
+    }
+
+    /// Is the graph connected? (Empty graph counts as connected.)
+    pub fn is_connected(&self) -> bool {
+        self.n() == 0 || self.connected_components().1 == 1
+    }
+
+    /// BFS distances from `src` (u32::MAX = unreachable). Used by region
+    /// growing, separators and the multi-try FM seeding.
+    pub fn bfs_distances(&self, src: NodeId) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src as usize] = 0;
+        queue.push_back(src);
+        while let Some(v) = queue.pop_front() {
+            for &u in self.neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dist[v as usize] + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        dist
+    }
+
+    /// An empty graph with `n` isolated unit-weight nodes.
+    pub fn isolated(n: usize) -> Graph {
+        Graph::from_parts_unchecked(vec![0; n + 1], Vec::new(), vec![1; n], Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn triangle() -> Graph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 2);
+        b.add_edge(0, 2, 3);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.half_edges(), 6);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.total_node_weight(), 3);
+        assert_eq!(g.total_edge_weight(), 6);
+        assert_eq!(g.weighted_degree(0), 4); // 1 + 3
+        assert_eq!(g.max_degree(), 2);
+        let mut nb: Vec<_> = g.neighbors(1).to_vec();
+        nb.sort_unstable();
+        assert_eq!(nb, vec![0, 2]);
+    }
+
+    #[test]
+    fn from_csr_validates_selfloop() {
+        // node 0 with a self loop
+        let err = Graph::from_csr(vec![0, 1], vec![0], None, None).unwrap_err();
+        assert_eq!(err, GraphError::SelfLoop(0));
+    }
+
+    #[test]
+    fn from_csr_validates_missing_backedge() {
+        // 0 -> 1 but 1 has no edges
+        let err = Graph::from_csr(vec![0, 1, 1], vec![1], None, None).unwrap_err();
+        assert_eq!(err, GraphError::MissingBackEdge(0, 1));
+    }
+
+    #[test]
+    fn from_csr_validates_asymmetric_weight() {
+        let err = Graph::from_csr(
+            vec![0, 1, 2],
+            vec![1, 0],
+            None,
+            Some(vec![2, 3]),
+        )
+        .unwrap_err();
+        assert_eq!(err, GraphError::AsymmetricWeight(0, 1));
+    }
+
+    #[test]
+    fn from_csr_validates_parallel_edge() {
+        let err = Graph::from_csr(vec![0, 2, 4], vec![1, 1, 0, 0], None, None).unwrap_err();
+        assert!(matches!(err, GraphError::ParallelEdge(_, _)));
+    }
+
+    #[test]
+    fn from_csr_validates_bad_weights() {
+        let err =
+            Graph::from_csr(vec![0, 1, 2], vec![1, 0], Some(vec![-1, 1]), None).unwrap_err();
+        assert_eq!(err, GraphError::BadNodeWeight(0));
+        let err =
+            Graph::from_csr(vec![0, 1, 2], vec![1, 0], None, Some(vec![0, 0])).unwrap_err();
+        assert_eq!(err, GraphError::BadEdgeWeight(0, 1));
+    }
+
+    #[test]
+    fn from_csr_validates_range_and_sizes() {
+        let err = Graph::from_csr(vec![0, 1, 2], vec![5, 0], None, None).unwrap_err();
+        assert_eq!(err, GraphError::TargetOutOfRange(0, 5));
+        let err = Graph::from_csr(vec![0, 3], vec![1], None, None).unwrap_err();
+        assert!(matches!(err, GraphError::SizeMismatch(_)));
+    }
+
+    #[test]
+    fn connectivity() {
+        let g = triangle();
+        assert!(g.is_connected());
+        let iso = Graph::isolated(4);
+        assert!(!iso.is_connected());
+        let (comp, num) = iso.connected_components();
+        assert_eq!(num, 4);
+        assert_eq!(comp, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bfs_distances_path() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(2, 3, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.bfs_distances(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::isolated(0);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+        assert!(g.is_connected());
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn with_node_weights_balance_edges() {
+        let g = triangle();
+        let new_w: Vec<i64> = g.nodes().map(|v| g.node_weight(v) + g.weighted_degree(v)).collect();
+        let g2 = g.with_node_weights(new_w);
+        assert_eq!(g2.node_weight(0), 1 + 4);
+        assert_eq!(g2.total_node_weight(), 3 + 12);
+    }
+}

@@ -1,0 +1,287 @@
+//! The ParHIP binary graph format (§3.1.2 of the user guide).
+//!
+//! Layout (all values little-endian `u64`):
+//! - header: `version` (3), `n`, `m` (number of stored *directed* edges = 2·|E|)
+//! - `n + 1` offsets: the *byte position in the file* at which the outgoing
+//!   edges of vertex `i` start; offset `n` marks the end of the edge block
+//! - the edge targets, one `u64` each, grouped per vertex.
+//!
+//! Node IDs start at 0. Weights are not part of this format (matches
+//! ParHIP, which reads weights only from the Metis text format), so writing
+//! a weighted graph is rejected.
+
+use super::csr::Graph;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const PARHIP_VERSION: u64 = 3;
+
+#[derive(Debug)]
+pub enum BinError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for BinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BinError::Io(e) => write!(f, "io: {e}"),
+            BinError::Format(m) => write!(f, "format: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BinError {}
+
+impl From<std::io::Error> for BinError {
+    fn from(e: std::io::Error) -> Self {
+        BinError::Io(e)
+    }
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], idx: usize) -> Result<u64, BinError> {
+    let at = idx * 8;
+    buf.get(at..at + 8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .ok_or_else(|| BinError::Format(format!("truncated file at u64 index {idx}")))
+}
+
+/// Does the file start with the ParHIP binary magic (version = 3)?
+/// Used by programs that accept both formats (§4.3: "Either Metis format
+/// or binary format").
+pub fn sniff_binary(path: impl AsRef<Path>) -> std::io::Result<bool> {
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 8];
+    match f.read_exact(&mut head) {
+        Ok(()) => Ok(u64::from_le_bytes(head) == PARHIP_VERSION),
+        Err(_) => Ok(false), // shorter than a header: not binary
+    }
+}
+
+/// Serialize to the binary format. Rejects weighted graphs (the format
+/// carries no weights; convert via Metis text instead).
+pub fn write_binary<W: Write>(g: &Graph, mut w: W) -> Result<(), BinError> {
+    if g.nodes().any(|v| g.node_weight(v) != 1)
+        || (0..g.half_edges()).any(|e| g.edge_weight_at(e) != 1)
+    {
+        return Err(BinError::Format(
+            "binary format stores no weights; graph has non-unit weights".into(),
+        ));
+    }
+    let n = g.n() as u64;
+    let m_directed = g.half_edges() as u64;
+    let mut buf = Vec::with_capacity((3 + n as usize + 1 + m_directed as usize) * 8);
+    put_u64(&mut buf, PARHIP_VERSION);
+    put_u64(&mut buf, n);
+    put_u64(&mut buf, m_directed);
+    // offsets are byte positions; edge block starts after header + offsets
+    let edge_block_start = (3 + n + 1) * 8;
+    for v in 0..=g.n() {
+        let half_edges_before = if v == g.n() {
+            g.half_edges() as u64
+        } else {
+            g.edge_range(v as u32).start as u64
+        };
+        put_u64(&mut buf, edge_block_start + half_edges_before * 8);
+    }
+    for e in 0..g.half_edges() {
+        put_u64(&mut buf, g.edge_target(e) as u64);
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Deserialize from the binary format.
+pub fn read_binary<R: Read>(mut r: R) -> Result<Graph, BinError> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    let version = get_u64(&buf, 0)?;
+    if version != PARHIP_VERSION {
+        return Err(BinError::Format(format!(
+            "version {version}, expected {PARHIP_VERSION}"
+        )));
+    }
+    let n = get_u64(&buf, 1)? as usize;
+    let m_directed = get_u64(&buf, 2)? as usize;
+    let edge_block_start = ((3 + n + 1) * 8) as u64;
+    let mut xadj = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        let byte_off = get_u64(&buf, 3 + i)?;
+        if byte_off < edge_block_start || (byte_off - edge_block_start) % 8 != 0 {
+            return Err(BinError::Format(format!("bad offset {byte_off} for vertex {i}")));
+        }
+        xadj.push(((byte_off - edge_block_start) / 8) as u32);
+    }
+    if xadj[n] as usize != m_directed {
+        return Err(BinError::Format(format!(
+            "last offset implies {} edges, header says {m_directed}",
+            xadj[n]
+        )));
+    }
+    let mut adjncy = Vec::with_capacity(m_directed);
+    for e in 0..m_directed {
+        let t = get_u64(&buf, 3 + n + 1 + e)?;
+        if t as usize >= n {
+            return Err(BinError::Format(format!("edge target {t} out of range")));
+        }
+        adjncy.push(t as u32);
+    }
+    Graph::from_csr(xadj, adjncy, None, None)
+        .map_err(|e| BinError::Format(format!("invalid graph: {e}")))
+}
+
+pub fn write_binary_file(g: &Graph, path: impl AsRef<Path>) -> Result<(), BinError> {
+    write_binary(g, std::io::BufWriter::new(std::fs::File::create(path)?))
+}
+
+pub fn read_binary_file(path: impl AsRef<Path>) -> Result<Graph, BinError> {
+    read_binary(std::fs::File::open(path)?)
+}
+
+/// External-memory conversion (graph2binary_external): stream a Metis text
+/// file to binary in two passes without materializing the graph.
+/// Pass 1 computes degrees, pass 2 streams targets.
+pub fn convert_metis_to_binary_external(
+    metis_path: impl AsRef<Path>,
+    out_path: impl AsRef<Path>,
+) -> Result<(), BinError> {
+    use std::io::{BufRead, BufReader};
+    let parse_header = |line: &str| -> Result<(usize, usize, u32), BinError> {
+        let mut it = line.split_whitespace();
+        let n = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| BinError::Format("bad header".into()))?;
+        let m = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| BinError::Format("bad header".into()))?;
+        let f = it.next().map(|t| t.parse().unwrap_or(99)).unwrap_or(0);
+        Ok((n, m, f))
+    };
+    // pass 1: degrees
+    let f1 = BufReader::new(std::fs::File::open(&metis_path)?);
+    let mut lines = f1.lines().filter(|l| {
+        l.as_ref().map(|s| !s.trim_start().starts_with('%')).unwrap_or(true)
+    });
+    let header = lines
+        .next()
+        .ok_or_else(|| BinError::Format("empty file".into()))??;
+    let (n, _m, flag) = parse_header(&header)?;
+    if flag != 0 {
+        return Err(BinError::Format(
+            "external converter supports unweighted graphs only (binary format carries no weights)"
+                .into(),
+        ));
+    }
+    let mut degrees = vec![0u64; n];
+    for (v, line) in lines.enumerate().take(n) {
+        let line = line?;
+        degrees[v] = line.split_whitespace().count() as u64;
+    }
+    // write header + offsets
+    let out = std::fs::File::create(&out_path)?;
+    let mut w = std::io::BufWriter::new(out);
+    let m_directed: u64 = degrees.iter().sum();
+    let mut head = Vec::new();
+    put_u64(&mut head, PARHIP_VERSION);
+    put_u64(&mut head, n as u64);
+    put_u64(&mut head, m_directed);
+    let edge_block_start = ((3 + n + 1) * 8) as u64;
+    let mut acc = 0u64;
+    put_u64(&mut head, edge_block_start);
+    for d in &degrees {
+        acc += d;
+        put_u64(&mut head, edge_block_start + acc * 8);
+    }
+    w.write_all(&head)?;
+    // pass 2: stream targets
+    let f2 = BufReader::new(std::fs::File::open(&metis_path)?);
+    let mut lines = f2.lines().filter(|l| {
+        l.as_ref().map(|s| !s.trim_start().starts_with('%')).unwrap_or(true)
+    });
+    let _ = lines.next(); // header
+    for line in lines.take(n) {
+        let line = line?;
+        for tok in line.split_whitespace() {
+            let t: u64 = tok
+                .parse()
+                .map_err(|e| BinError::Format(format!("bad target: {e}")))?;
+            if t < 1 || t as usize > n {
+                return Err(BinError::Format(format!("target {t} out of range")));
+            }
+            w.write_all(&(t - 1).to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, io_metis};
+
+    #[test]
+    fn roundtrip_grid() {
+        let g = generators::grid2d(6, 4);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        let g2 = read_binary(&buf[..]).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_weighted() {
+        let mut rng = crate::rng::Rng::new(1);
+        let g = generators::random_weighted(10, 10, 2, 5, &mut rng);
+        let mut buf = Vec::new();
+        assert!(matches!(write_binary(&g, &mut buf), Err(BinError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 7);
+        put_u64(&mut buf, 0);
+        put_u64(&mut buf, 0);
+        assert!(matches!(read_binary(&buf[..]), Err(BinError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let g = generators::grid2d(3, 3);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        buf.truncate(buf.len() - 8);
+        assert!(matches!(read_binary(&buf[..]), Err(BinError::Format(_))));
+    }
+
+    #[test]
+    fn external_conversion_matches_in_memory() {
+        let g = generators::grid2d(5, 5);
+        let dir = std::env::temp_dir();
+        let metis = dir.join("kahip_test_ext.graph");
+        let bin = dir.join("kahip_test_ext.bin");
+        io_metis::write_metis_file(&g, &metis).unwrap();
+        convert_metis_to_binary_external(&metis, &bin).unwrap();
+        let g2 = read_binary_file(&bin).unwrap();
+        assert_eq!(g, g2);
+        let _ = std::fs::remove_file(metis);
+        let _ = std::fs::remove_file(bin);
+    }
+
+    #[test]
+    fn header_fields() {
+        let g = generators::path(4);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        assert_eq!(get_u64(&buf, 0).unwrap(), PARHIP_VERSION);
+        assert_eq!(get_u64(&buf, 1).unwrap(), 4);
+        assert_eq!(get_u64(&buf, 2).unwrap(), 6); // 3 undirected = 6 directed
+    }
+}

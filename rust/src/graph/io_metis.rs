@@ -1,0 +1,299 @@
+//! The Metis/Chaco/DIMACS text format (§3.1.1 of the user guide).
+//!
+//! First non-comment line: `n m [f]` where `f ∈ {1, 10, 11}` flags edge
+//! weights / node weights / both; `%` lines are comments; vertices are
+//! 1-indexed in the file and 0-indexed in memory.
+
+use super::csr::{Graph, GraphError};
+use super::GraphBuilder;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum MetisError {
+    Io(std::io::Error),
+    Parse(String),
+    Graph(GraphError),
+}
+
+impl std::fmt::Display for MetisError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetisError::Io(e) => write!(f, "io error: {e}"),
+            MetisError::Parse(m) => write!(f, "parse error: {m}"),
+            MetisError::Graph(e) => write!(f, "graph error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MetisError {}
+
+impl From<std::io::Error> for MetisError {
+    fn from(e: std::io::Error) -> Self {
+        MetisError::Io(e)
+    }
+}
+
+impl From<GraphError> for MetisError {
+    fn from(e: GraphError) -> Self {
+        MetisError::Graph(e)
+    }
+}
+
+/// Weight flag from the header's third field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    pub has_edge_weights: bool,
+    pub has_node_weights: bool,
+}
+
+impl Format {
+    pub fn from_flag(f: u32) -> Result<Self, MetisError> {
+        match f {
+            0 => Ok(Self { has_edge_weights: false, has_node_weights: false }),
+            1 => Ok(Self { has_edge_weights: true, has_node_weights: false }),
+            10 => Ok(Self { has_edge_weights: false, has_node_weights: true }),
+            11 => Ok(Self { has_edge_weights: true, has_node_weights: true }),
+            other => Err(MetisError::Parse(format!("unsupported format flag {other}"))),
+        }
+    }
+
+    pub fn flag(&self) -> u32 {
+        match (self.has_node_weights, self.has_edge_weights) {
+            (false, false) => 0,
+            (false, true) => 1,
+            (true, false) => 10,
+            (true, true) => 11,
+        }
+    }
+}
+
+/// Parse a graph from any reader.
+pub fn read_metis<R: Read>(r: R) -> Result<Graph, MetisError> {
+    let reader = BufReader::new(r);
+    let mut lines = reader.lines().filter_map(|l| match l {
+        Ok(s) => {
+            let t = s.trim().to_string();
+            if t.starts_with('%') {
+                None
+            } else {
+                Some(Ok(t))
+            }
+        }
+        Err(e) => Some(Err(e)),
+    });
+    let header = lines
+        .next()
+        .ok_or_else(|| MetisError::Parse("empty file".into()))??;
+    let mut it = header.split_whitespace();
+    let n: usize = it
+        .next()
+        .ok_or_else(|| MetisError::Parse("missing n".into()))?
+        .parse()
+        .map_err(|e| MetisError::Parse(format!("n: {e}")))?;
+    let m: usize = it
+        .next()
+        .ok_or_else(|| MetisError::Parse("missing m".into()))?
+        .parse()
+        .map_err(|e| MetisError::Parse(format!("m: {e}")))?;
+    let fmt = match it.next() {
+        Some(tok) => Format::from_flag(
+            tok.parse::<u32>().map_err(|e| MetisError::Parse(format!("f: {e}")))?,
+        )?,
+        None => Format { has_edge_weights: false, has_node_weights: false },
+    };
+
+    let mut b = GraphBuilder::new(n);
+    let mut mentions = 0usize;
+    for v in 0..n {
+        let line = lines.next().ok_or_else(|| {
+            MetisError::Parse(format!("expected {n} vertex lines, file ended at {v}"))
+        })??;
+        let mut toks = line.split_whitespace().map(|t| {
+            t.parse::<i64>().map_err(|e| MetisError::Parse(format!("line {}: {e}", v + 2)))
+        });
+        if fmt.has_node_weights {
+            let w = toks.next().ok_or_else(|| {
+                MetisError::Parse(format!("line {}: missing node weight", v + 2))
+            })??;
+            if w < 0 {
+                return Err(MetisError::Parse(format!("line {}: negative node weight", v + 2)));
+            }
+            b.set_node_weight(v as u32, w);
+        }
+        loop {
+            let Some(tgt) = toks.next() else { break };
+            let tgt = tgt?;
+            if tgt < 1 || tgt as usize > n {
+                return Err(MetisError::Parse(format!(
+                    "line {}: neighbor {tgt} out of range 1..={n}",
+                    v + 2
+                )));
+            }
+            let w = if fmt.has_edge_weights {
+                let w = toks.next().ok_or_else(|| {
+                    MetisError::Parse(format!("line {}: missing edge weight", v + 2))
+                })??;
+                if w <= 0 {
+                    return Err(MetisError::Parse(format!(
+                        "line {}: non-positive edge weight",
+                        v + 2
+                    )));
+                }
+                w
+            } else {
+                1
+            };
+            let u = (tgt - 1) as u32;
+            mentions += 1;
+            // Each undirected edge is mentioned twice (once per endpoint);
+            // GraphBuilder sums duplicates, so halve on the second mention
+            // by only adding the canonical direction once.
+            if (v as u32) < u {
+                b.add_edge(v as u32, u, w);
+            } else if u < v as u32 {
+                // weight recorded from the lower endpoint's mention; the
+                // checker verifies symmetric weights separately.
+                continue;
+            }
+        }
+    }
+    if mentions != 2 * m {
+        return Err(MetisError::Parse(format!(
+            "header claims m={m} edges but file contains {mentions} adjacency entries (expected {})",
+            2 * m
+        )));
+    }
+    Ok(b.build()?)
+}
+
+/// Read from a file path.
+pub fn read_metis_file(path: impl AsRef<Path>) -> Result<Graph, MetisError> {
+    read_metis(std::fs::File::open(path)?)
+}
+
+/// Write a graph in Metis format, emitting weights only when non-trivial.
+pub fn write_metis<W: Write>(g: &Graph, mut w: W) -> std::io::Result<()> {
+    let has_nw = g.nodes().any(|v| g.node_weight(v) != 1);
+    let has_ew = (0..g.half_edges()).any(|e| g.edge_weight_at(e) != 1);
+    let fmt = Format { has_edge_weights: has_ew, has_node_weights: has_nw };
+    writeln!(w, "% written by kahip-rs")?;
+    if fmt.flag() == 0 {
+        writeln!(w, "{} {}", g.n(), g.m())?;
+    } else {
+        writeln!(w, "{} {} {}", g.n(), g.m(), fmt.flag())?;
+    }
+    let mut line = String::new();
+    for v in g.nodes() {
+        line.clear();
+        if has_nw {
+            line.push_str(&g.node_weight(v).to_string());
+        }
+        for (u, ew) in g.neighbors_w(v) {
+            if !line.is_empty() {
+                line.push(' ');
+            }
+            line.push_str(&(u + 1).to_string());
+            if has_ew {
+                line.push(' ');
+                line.push_str(&ew.to_string());
+            }
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+pub fn write_metis_file(g: &Graph, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    write_metis(g, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reads_the_guides_example_shape() {
+        // Unweighted: 5 nodes, 6 edges
+        let txt = "% comment\n5 6\n2 5\n1 3 5\n2 4\n3 5\n1 2 4\n";
+        let g = read_metis(txt.as_bytes()).unwrap();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 6);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn reads_weighted_graph_f11() {
+        // two nodes with weights 4 and 2, one edge weight 7
+        let txt = "2 1 11\n4 2 7\n2 1 7\n";
+        let g = read_metis(txt.as_bytes()).unwrap();
+        assert_eq!(g.node_weight(0), 4);
+        assert_eq!(g.node_weight(1), 2);
+        assert_eq!(g.total_edge_weight(), 7);
+    }
+
+    #[test]
+    fn reads_edge_weights_only_f1() {
+        let txt = "3 2 1\n2 5\n1 5 3 2\n2 2\n";
+        let g = read_metis(txt.as_bytes()).unwrap();
+        assert_eq!(g.total_edge_weight(), 7);
+        assert_eq!(g.node_weight(0), 1);
+    }
+
+    #[test]
+    fn reads_node_weights_only_f10() {
+        let txt = "2 1 10\n9 2\n1 1\n";
+        let g = read_metis(txt.as_bytes()).unwrap();
+        assert_eq!(g.node_weight(0), 9);
+        assert_eq!(g.node_weight(1), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_edge_count() {
+        let txt = "3 5\n2\n1 3\n2\n";
+        assert!(matches!(read_metis(txt.as_bytes()), Err(MetisError::Parse(_))));
+    }
+
+    #[test]
+    fn rejects_out_of_range_neighbor() {
+        let txt = "2 1\n2\n3\n";
+        assert!(matches!(read_metis(txt.as_bytes()), Err(MetisError::Parse(_))));
+    }
+
+    #[test]
+    fn rejects_bad_flag() {
+        let txt = "2 1 7\n2\n1\n";
+        assert!(matches!(read_metis(txt.as_bytes()), Err(MetisError::Parse(_))));
+    }
+
+    #[test]
+    fn roundtrip_unweighted() {
+        let g = generators::grid2d(7, 5);
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let g2 = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let mut rng = Rng::new(5);
+        let g = generators::random_weighted(40, 120, 1, 9, &mut rng);
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let g2 = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn empty_graph_roundtrip() {
+        let g = crate::graph::Graph::isolated(3);
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let g2 = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, g2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph data structures, I/O and workload generators.
+//!
+//! The central type is [`Graph`], a compressed-sparse-row (CSR) undirected
+//! graph exactly matching the KaHIP/Metis adjacency structure described in
+//! §5.1 of the user guide: arrays `xadj` (size n+1) and `adjncy` (size 2m,
+//! both half-edges of every undirected edge stored), with optional node
+//! weights `vwgt` and symmetric edge weights `adjwgt`.
+
+pub mod builder;
+pub mod checker;
+pub mod csr;
+pub mod generators;
+pub mod io_binary;
+pub mod io_metis;
+pub mod subgraph;
+
+pub use builder::GraphBuilder;
+pub use csr::{Graph, GraphError};

@@ -1,0 +1,117 @@
+//! Induced subgraph extraction with node mappings — used by recursive
+//! bisection, the flow-region builder, nested dissection and the SPAC
+//! edge-partitioning construction.
+
+use super::csr::Graph;
+use crate::NodeId;
+
+/// An induced subgraph plus the mapping back to the parent graph.
+#[derive(Clone, Debug)]
+pub struct SubGraph {
+    pub graph: Graph,
+    /// `to_parent[i]` = parent node id of subgraph node `i`.
+    pub to_parent: Vec<NodeId>,
+}
+
+/// Extract the subgraph induced by `nodes` (need not be sorted; duplicates
+/// forbidden). Edges with both endpoints inside are kept with their weights.
+pub fn induced(g: &Graph, nodes: &[NodeId]) -> SubGraph {
+    let mut to_sub = vec![u32::MAX; g.n()];
+    for (i, &v) in nodes.iter().enumerate() {
+        debug_assert!(to_sub[v as usize] == u32::MAX, "duplicate node in induced()");
+        to_sub[v as usize] = i as u32;
+    }
+    let n = nodes.len();
+    let mut xadj = vec![0u32; n + 1];
+    // first pass: degrees
+    for (i, &v) in nodes.iter().enumerate() {
+        let d = g.neighbors(v).iter().filter(|&&u| to_sub[u as usize] != u32::MAX).count();
+        xadj[i + 1] = xadj[i] + d as u32;
+    }
+    let total = xadj[n] as usize;
+    let mut adjncy = vec![0u32; total];
+    let mut adjwgt = vec![0i64; total];
+    let mut vwgt = vec![0i64; n];
+    let mut cursor: Vec<u32> = xadj[..n].to_vec();
+    for (i, &v) in nodes.iter().enumerate() {
+        vwgt[i] = g.node_weight(v);
+        for (u, w) in g.neighbors_w(v) {
+            let su = to_sub[u as usize];
+            if su != u32::MAX {
+                let c = cursor[i] as usize;
+                adjncy[c] = su;
+                adjwgt[c] = w;
+                cursor[i] += 1;
+            }
+        }
+    }
+    SubGraph {
+        graph: Graph::from_parts_unchecked(xadj, adjncy, vwgt, adjwgt),
+        to_parent: nodes.to_vec(),
+    }
+}
+
+/// Extract the nodes of one block of a partition as an induced subgraph.
+pub fn extract_block(g: &Graph, part: &[u32], block: u32) -> SubGraph {
+    let nodes: Vec<NodeId> =
+        g.nodes().filter(|&v| part[v as usize] == block).collect();
+    induced(g, &nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn induced_square_from_grid() {
+        let g = generators::grid2d(4, 4);
+        // top-left 2x2 square: nodes 0,1,4,5
+        let s = induced(&g, &[0, 1, 4, 5]);
+        assert_eq!(s.graph.n(), 4);
+        assert_eq!(s.graph.m(), 4);
+        assert_eq!(s.to_parent, vec![0, 1, 4, 5]);
+        assert!(s.graph.validate().is_ok());
+    }
+
+    #[test]
+    fn induced_preserves_weights() {
+        let mut rng = crate::rng::Rng::new(1);
+        let g = generators::random_weighted(30, 60, 1, 9, &mut rng);
+        let nodes: Vec<u32> = (0..15).collect();
+        let s = induced(&g, &nodes);
+        for (i, &v) in s.to_parent.iter().enumerate() {
+            assert_eq!(s.graph.node_weight(i as u32), g.node_weight(v));
+        }
+        // every subgraph edge exists in the parent with the same weight
+        for v in s.graph.nodes() {
+            for (u, w) in s.graph.neighbors_w(v) {
+                let (pv, pu) = (s.to_parent[v as usize], s.to_parent[u as usize]);
+                let pw = g
+                    .neighbors_w(pv)
+                    .find(|&(t, _)| t == pu)
+                    .map(|(_, w)| w)
+                    .expect("edge exists in parent");
+                assert_eq!(w, pw);
+            }
+        }
+    }
+
+    #[test]
+    fn extract_block_partitions_nodes() {
+        let g = generators::grid2d(4, 2);
+        let part: Vec<u32> = g.nodes().map(|v| if v < 4 { 0 } else { 1 }).collect();
+        let b0 = extract_block(&g, &part, 0);
+        let b1 = extract_block(&g, &part, 1);
+        assert_eq!(b0.graph.n() + b1.graph.n(), g.n());
+        assert_eq!(b0.graph.m(), 3);
+        assert_eq!(b1.graph.m(), 3);
+    }
+
+    #[test]
+    fn induced_empty() {
+        let g = generators::grid2d(3, 3);
+        let s = induced(&g, &[]);
+        assert_eq!(s.graph.n(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Exact partitioning and exact improvement (§2.10, §4.9): the
+//! `ilp_exact` and `ilp_improve` programs. Gurobi is replaced by the
+//! from-scratch branch-and-bound solver in [`bb`] (see DESIGN.md); the
+//! model construction with pinned block cores and symmetry breaking
+//! follows the paper.
+
+pub mod bb;
+pub mod model;
+
+use crate::coordinator::kaffpa;
+use crate::graph::Graph;
+use crate::partition::config::{Config, Mode};
+use crate::partition::{metrics, Partition};
+use crate::util::block_weight_bound;
+use model::FreeMode;
+
+/// Outcome of `ilp_exact` / `ilp_improve`.
+#[derive(Clone, Debug)]
+pub struct IlpResult {
+    pub partition: Partition,
+    pub edge_cut: i64,
+    /// proven optimal (exact) / optimal within the model (improve)
+    pub optimal: bool,
+    pub seconds: f64,
+}
+
+/// The `ilp_exact` program (§4.9): solve graph partitioning to
+/// optimality. A KaFFPa run seeds the incumbent so pruning bites early.
+pub fn ilp_exact(g: &Graph, k: u32, epsilon: f64, seed: u64, timeout_secs: f64) -> IlpResult {
+    let bound = block_weight_bound(g.total_node_weight(), k, epsilon);
+    // warm start (cheap relative to exact search)
+    let cfg = Config::from_mode(Mode::Eco, k, epsilon, seed);
+    let warm = kaffpa(g, &cfg, None, None);
+    let incumbent =
+        if warm.partition.max_block_weight() <= bound { Some(&warm.partition) } else { None };
+    let fixed = vec![None; g.n()];
+    let r = bb::solve(g, k, bound, &fixed, incumbent, timeout_secs);
+    IlpResult {
+        edge_cut: r.cut,
+        partition: r.partition,
+        optimal: r.optimal,
+        seconds: r.seconds,
+    }
+}
+
+/// Options of the `ilp_improve` program (§4.9.1).
+#[derive(Clone, Debug)]
+pub struct ImproveOpts {
+    pub mode: FreeMode,
+    /// cap on free vertices (`--ilp_limit_nonzeroes` analogue).
+    pub max_free: usize,
+    pub timeout_secs: f64,
+}
+
+impl Default for ImproveOpts {
+    fn default() -> Self {
+        ImproveOpts {
+            mode: FreeMode::Boundary { depth: 2 },
+            max_free: 24,
+            timeout_secs: 10.0,
+        }
+    }
+}
+
+/// The `ilp_improve` program: free a boundary region, contract the block
+/// cores, solve the model exactly, keep the solution if it is no worse.
+/// The output never degrades the input (the incumbent is the identity).
+pub fn ilp_improve(g: &Graph, p: &Partition, epsilon: f64, opts: &ImproveOpts) -> IlpResult {
+    let k = p.k();
+    let bound = block_weight_bound(g.total_node_weight(), k, epsilon);
+    let free = model::select_free(g, p, opts.mode, opts.max_free);
+    let before = metrics::edge_cut(g, p);
+    if free.is_empty() {
+        return IlpResult { partition: p.clone(), edge_cut: before, optimal: true, seconds: 0.0 };
+    }
+    let m = model::build_model(g, p, &free);
+    // identity incumbent: free vertices keep their current block
+    let ident: Vec<u32> = (0..m.graph.n() as u32)
+        .map(|mv| {
+            if mv < k {
+                mv
+            } else {
+                p.block_of(m.orig_of_free[mv as usize].expect("free node"))
+            }
+        })
+        .collect();
+    let ident = Partition::from_assignment(&m.graph, k, ident);
+    let r = bb::solve(&m.graph, k, bound, &m.fixed, Some(&ident), opts.timeout_secs);
+    let improved = model::project_model_solution(g, p, &m, &r.partition);
+    let after = metrics::edge_cut(g, &improved);
+    let (partition, edge_cut) =
+        if after <= before { (improved, after) } else { (p.clone(), before) };
+    IlpResult { partition, edge_cut, optimal: r.optimal, seconds: r.seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_on_small_grid_matches_known_optimum() {
+        let g = generators::grid2d(4, 4);
+        let r = ilp_exact(&g, 2, 0.0, 1, 30.0);
+        assert!(r.optimal);
+        assert_eq!(r.edge_cut, 4);
+        assert!(r.partition.is_feasible(&g, 0.0));
+    }
+
+    #[test]
+    fn exact_never_worse_than_heuristic() {
+        let mut rng = Rng::new(7);
+        let g = generators::random_connected(14, 16, &mut rng);
+        let cfg = Config::from_mode(Mode::Strong, 2, 0.1, 2);
+        let heur = kaffpa(&g, &cfg, None, None);
+        let r = ilp_exact(&g, 2, 0.1, 2, 30.0);
+        assert!(r.optimal);
+        assert!(r.edge_cut <= heur.edge_cut);
+    }
+
+    #[test]
+    fn improve_fixes_a_bad_partition() {
+        let g = generators::grid2d(6, 6);
+        // vertical stripes: terrible cut, balanced
+        let bad: Vec<u32> = g.nodes().map(|v| v % 2).collect();
+        let p = Partition::from_assignment(&g, 2, bad);
+        let before = metrics::edge_cut(&g, &p);
+        let r = ilp_improve(&g, &p, 0.0, &ImproveOpts::default());
+        assert!(r.edge_cut <= before);
+        assert!(r.partition.is_feasible(&g, 0.0));
+        assert!(r.partition.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn improve_is_identity_on_an_optimum() {
+        let g = generators::grid2d(4, 4);
+        let opt = ilp_exact(&g, 2, 0.0, 3, 30.0);
+        let r = ilp_improve(&g, &opt.partition, 0.0, &ImproveOpts::default());
+        assert_eq!(r.edge_cut, opt.edge_cut, "cannot improve a proven optimum");
+    }
+
+    #[test]
+    fn improve_gain_mode_runs() {
+        let g = generators::grid2d(8, 8);
+        let cfg = Config::from_mode(Mode::Fast, 4, 0.05, 4);
+        let res = kaffpa(&g, &cfg, None, None);
+        let opts = ImproveOpts {
+            mode: FreeMode::Gain { min_gain: -1, depth: 2 },
+            max_free: 16,
+            timeout_secs: 5.0,
+        };
+        let r = ilp_improve(&g, &res.partition, 0.05, &opts);
+        assert!(r.edge_cut <= res.edge_cut);
+    }
+}

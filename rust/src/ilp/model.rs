@@ -1,0 +1,352 @@
+//! The reduced "model" graph of §2.10: to make exact solving scale, the
+//! improver does not hand the whole graph to the solver. It frees only a
+//! small vertex set around the partition boundary and *contracts the rest
+//! of every block to one pinned super-vertex*. Solving the model to
+//! optimality then yields the best partition reachable by reassigning the
+//! free vertices — a strict superset of the FM neighborhood.
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::refinement::gain::GainScratch;
+use crate::BlockId;
+use std::collections::HashMap;
+
+/// Which vertices the improver frees (the `--ilp_mode` flag, §4.9.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreeMode {
+    /// All boundary vertices plus a BFS ball of `depth` around them.
+    Boundary { depth: usize },
+    /// BFS balls only around vertices with FM gain ≥ `min_gain`.
+    Gain { min_gain: i64, depth: usize },
+    /// Overlap mode: run `runs` independent quick partitions; vertices on
+    /// whose block the (block-matched) runs *disagree* with the input are
+    /// free, agreed-on cores stay fixed — the `noequal` symmetry-breaking
+    /// preset of the paper.
+    Overlap { runs: usize },
+}
+
+impl FreeMode {
+    pub fn parse(mode: &str, min_gain: i64, depth: usize, overlap_runs: usize) -> Option<FreeMode> {
+        match mode {
+            "boundary" => Some(FreeMode::Boundary { depth }),
+            "gain" | "trees" => Some(FreeMode::Gain { min_gain, depth }),
+            "overlap" => Some(FreeMode::Overlap { runs: overlap_runs.max(1) }),
+            _ => None,
+        }
+    }
+}
+
+/// Relabel `q`'s blocks to maximize weighted overlap with `p` (greedy
+/// assignment on the k×k overlap matrix).
+fn block_match(g: &Graph, p: &Partition, q: &Partition) -> Vec<u32> {
+    let k = p.k() as usize;
+    let mut overlap = vec![0i64; k * k];
+    for v in g.nodes() {
+        overlap[q.block_of(v) as usize * k + p.block_of(v) as usize] += g.node_weight(v);
+    }
+    let mut pairs: Vec<(i64, usize, usize)> = Vec::with_capacity(k * k);
+    for qb in 0..k {
+        for pb in 0..k {
+            pairs.push((overlap[qb * k + pb], qb, pb));
+        }
+    }
+    pairs.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+    let mut to_p = vec![u32::MAX; k];
+    let mut taken = vec![false; k];
+    for (_, qb, pb) in pairs {
+        if to_p[qb] == u32::MAX && !taken[pb] {
+            to_p[qb] = pb as u32;
+            taken[pb] = true;
+        }
+    }
+    for t in to_p.iter_mut() {
+        if *t == u32::MAX {
+            let free = taken.iter().position(|&x| !x).expect("k blocks");
+            *t = free as u32;
+            taken[free] = true;
+        }
+    }
+    to_p
+}
+
+/// Overlap selection (§4.9.1 `--ilp_mode=overlap`): a vertex is free iff
+/// some block-matched independent run disagrees with the input partition.
+fn select_free_overlap(g: &Graph, p: &Partition, runs: usize, max_free: usize) -> Vec<u32> {
+    use crate::partition::config::{Config, Mode};
+    let mut disagree = vec![false; g.n()];
+    for r in 0..runs {
+        let cfg = Config::from_mode(Mode::Fast, p.k(), 0.05, 0x07e1_a9 + r as u64);
+        let q = crate::coordinator::kaffpa(g, &cfg, None, None).partition;
+        let relabel = block_match(g, p, &q);
+        for v in g.nodes() {
+            if relabel[q.block_of(v) as usize] != p.block_of(v) {
+                disagree[v as usize] = true;
+            }
+        }
+    }
+    let mut free: Vec<u32> = g.nodes().filter(|&v| disagree[v as usize]).collect();
+    free.truncate(max_free);
+    free
+}
+
+/// The reduced instance handed to the B&B solver.
+pub struct IlpModel {
+    pub graph: Graph,
+    /// model node pinned to a block (the k super-vertices), else free.
+    pub fixed: Vec<Option<BlockId>>,
+    /// model node id of each original vertex (free → its own node,
+    /// contracted → its block's super node).
+    pub model_of: Vec<u32>,
+    /// original vertex behind each free model node (super nodes: None).
+    pub orig_of_free: Vec<Option<u32>>,
+    /// number of free vertices in the model.
+    pub num_free: usize,
+}
+
+/// Select the free vertex set per `mode`, capped at `max_free` (the
+/// `--ilp_limit_nonzeroes` analogue — the model size drives solver cost).
+pub fn select_free(
+    g: &Graph,
+    p: &Partition,
+    mode: FreeMode,
+    max_free: usize,
+) -> Vec<u32> {
+    let (seeds, depth): (Vec<u32>, usize) = match mode {
+        FreeMode::Overlap { runs } => return select_free_overlap(g, p, runs, max_free),
+        FreeMode::Boundary { depth } => {
+            (crate::partition::metrics::boundary_nodes(g, p), depth)
+        }
+        FreeMode::Gain { min_gain, depth } => {
+            let mut scratch = GainScratch::new(p.k());
+            let no_bounds = vec![i64::MAX; p.k() as usize];
+            let seeds = crate::partition::metrics::boundary_nodes(g, p)
+                .into_iter()
+                .filter(|&v| {
+                    scratch
+                        .best_move(g, p, v, &no_bounds)
+                        .is_some_and(|(_, gain)| gain >= min_gain)
+                })
+                .collect();
+            (seeds, depth)
+        }
+    };
+    // BFS ball of `depth` around the seeds
+    let mut level = vec![u32::MAX; g.n()];
+    let mut queue = std::collections::VecDeque::new();
+    let mut free = Vec::new();
+    for &s in &seeds {
+        if level[s as usize] == u32::MAX {
+            level[s as usize] = 0;
+            queue.push_back(s);
+        }
+    }
+    while let Some(v) = queue.pop_front() {
+        free.push(v);
+        if free.len() >= max_free {
+            break;
+        }
+        if (level[v as usize] as usize) < depth {
+            for &u in g.neighbors(v) {
+                if level[u as usize] == u32::MAX {
+                    level[u as usize] = level[v as usize] + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    free
+}
+
+/// Build the model: one pinned super-vertex per block (holding the
+/// block's non-free weight) + one node per free vertex. Edges are
+/// aggregated; edges inside one super-vertex vanish (they are never cut).
+pub fn build_model(g: &Graph, p: &Partition, free: &[u32]) -> IlpModel {
+    let k = p.k();
+    let n = g.n();
+    let mut is_free = vec![false; n];
+    for &v in free {
+        is_free[v as usize] = true;
+    }
+    // model ids: 0..k are super nodes, then free vertices in given order
+    let mut model_of = vec![u32::MAX; n];
+    let mut orig_of_free: Vec<Option<u32>> = vec![None; k as usize];
+    for v in g.nodes() {
+        if !is_free[v as usize] {
+            model_of[v as usize] = p.block_of(v);
+        }
+    }
+    for (i, &v) in free.iter().enumerate() {
+        model_of[v as usize] = k + i as u32;
+        orig_of_free.push(Some(v));
+    }
+    let mn = k as usize + free.len();
+    // node weights
+    let mut vwgt = vec![0i64; mn];
+    for v in g.nodes() {
+        vwgt[model_of[v as usize] as usize] += g.node_weight(v);
+    }
+    // aggregated edges
+    let mut agg: HashMap<(u32, u32), i64> = HashMap::new();
+    for v in g.nodes() {
+        let mv = model_of[v as usize];
+        for (u, w) in g.neighbors_w(v) {
+            let mu = model_of[u as usize];
+            if mv < mu {
+                *agg.entry((mv, mu)).or_insert(0) += w;
+            }
+        }
+    }
+    let mut b = crate::graph::GraphBuilder::new(mn);
+    b.set_node_weights(vwgt);
+    for ((a, c), w) in agg {
+        b.add_edge(a, c, w);
+    }
+    let graph = b.build().expect("model graph is valid");
+    let mut fixed: Vec<Option<BlockId>> = vec![None; mn];
+    for bix in 0..k {
+        fixed[bix as usize] = Some(bix);
+    }
+    IlpModel { graph, fixed, model_of, orig_of_free, num_free: free.len() }
+}
+
+/// Map a model solution back to a full partition of `g`.
+pub fn project_model_solution(
+    g: &Graph,
+    p: &Partition,
+    model: &IlpModel,
+    sol: &Partition,
+) -> Partition {
+    let part = g
+        .nodes()
+        .map(|v| sol.block_of(model.model_of[v as usize]))
+        .collect();
+    Partition::from_assignment(g, p.k(), part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    fn split_partition(g: &Graph, at: u32) -> Partition {
+        let part = g.nodes().map(|v| if v < at { 0 } else { 1 }).collect();
+        Partition::from_assignment(g, 2, part)
+    }
+
+    #[test]
+    fn boundary_selection_on_grid() {
+        let g = generators::grid2d(6, 6);
+        let p = split_partition(&g, 18);
+        let free = select_free(&g, &p, FreeMode::Boundary { depth: 0 }, 1000);
+        // boundary of a straight cut through a 6x6 grid: 12 vertices
+        assert_eq!(free.len(), 12);
+        let free1 = select_free(&g, &p, FreeMode::Boundary { depth: 1 }, 1000);
+        assert!(free1.len() > free.len());
+    }
+
+    #[test]
+    fn gain_mode_selects_fewer() {
+        let g = generators::grid2d(6, 6);
+        let p = split_partition(&g, 17); // slightly unbalanced, varied gains
+        let all = select_free(&g, &p, FreeMode::Boundary { depth: 1 }, 1000);
+        let hi = select_free(&g, &p, FreeMode::Gain { min_gain: 0, depth: 1 }, 1000);
+        assert!(hi.len() <= all.len());
+    }
+
+    #[test]
+    fn cap_is_respected() {
+        let g = generators::grid2d(10, 10);
+        let p = split_partition(&g, 50);
+        let free = select_free(&g, &p, FreeMode::Boundary { depth: 3 }, 7);
+        assert_eq!(free.len(), 7);
+    }
+
+    #[test]
+    fn model_preserves_weight_and_cut() {
+        let g = generators::grid2d(5, 5);
+        let p = split_partition(&g, 13);
+        let free = select_free(&g, &p, FreeMode::Boundary { depth: 0 }, 1000);
+        let model = build_model(&g, &p, &free);
+        assert_eq!(model.graph.total_node_weight(), g.total_node_weight());
+        // the identity solution on the model reproduces the original cut
+        let ident: Vec<u32> = (0..model.graph.n() as u32)
+            .map(|mv| {
+                if (mv as usize) < 2 {
+                    mv
+                } else {
+                    p.block_of(model.orig_of_free[mv as usize].unwrap())
+                }
+            })
+            .collect();
+        let sol = Partition::from_assignment(&model.graph, 2, ident);
+        assert_eq!(
+            metrics::edge_cut(&model.graph, &sol),
+            metrics::edge_cut(&g, &p),
+            "model must preserve the cut of the identity solution"
+        );
+        let back = project_model_solution(&g, &p, &model, &sol);
+        assert_eq!(back.assignment(), p.assignment());
+    }
+
+    #[test]
+    fn overlap_mode_frees_disputed_vertices_only() {
+        let g = generators::grid2d(8, 8);
+        let p = split_partition(&g, 32);
+        let free = select_free(&g, &p, FreeMode::Overlap { runs: 3 }, 1000);
+        // independent runs agree on the bulk of a grid bisection modulo
+        // relabeling: the disputed set is a strict subset of the graph
+        assert!(free.len() < g.n(), "overlap must fix agreed-on cores");
+        // and the cap applies
+        let capped = select_free(&g, &p, FreeMode::Overlap { runs: 3 }, 5);
+        assert!(capped.len() <= 5);
+    }
+
+    #[test]
+    fn overlap_mode_improve_never_degrades() {
+        let g = generators::grid2d(10, 10);
+        let bad: Vec<u32> = g.nodes().map(|v| v % 2).collect();
+        let p = Partition::from_assignment(&g, 2, bad);
+        let before = metrics::edge_cut(&g, &p);
+        let opts = crate::ilp::ImproveOpts {
+            mode: FreeMode::Overlap { runs: 2 },
+            max_free: 24,
+            timeout_secs: 5.0,
+        };
+        let r = crate::ilp::ilp_improve(&g, &p, 0.0, &opts);
+        assert!(r.edge_cut <= before);
+        assert!(r.partition.is_feasible(&g, 0.0));
+    }
+
+    #[test]
+    fn parse_all_ilp_modes() {
+        assert!(matches!(
+            FreeMode::parse("boundary", -1, 2, 3),
+            Some(FreeMode::Boundary { depth: 2 })
+        ));
+        assert!(matches!(
+            FreeMode::parse("gain", 0, 1, 3),
+            Some(FreeMode::Gain { min_gain: 0, depth: 1 })
+        ));
+        assert!(matches!(
+            FreeMode::parse("trees", 0, 1, 3),
+            Some(FreeMode::Gain { .. })
+        ));
+        assert!(matches!(
+            FreeMode::parse("overlap", -1, 2, 4),
+            Some(FreeMode::Overlap { runs: 4 })
+        ));
+        assert!(FreeMode::parse("bogus", -1, 2, 3).is_none());
+    }
+
+    #[test]
+    fn super_nodes_are_pinned() {
+        let g = generators::grid2d(4, 4);
+        let p = split_partition(&g, 8);
+        let free = select_free(&g, &p, FreeMode::Boundary { depth: 0 }, 1000);
+        let model = build_model(&g, &p, &free);
+        assert_eq!(model.fixed[0], Some(0));
+        assert_eq!(model.fixed[1], Some(1));
+        assert!(model.fixed[2..].iter().all(|f| f.is_none()));
+    }
+}

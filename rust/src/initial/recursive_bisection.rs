@@ -1,0 +1,212 @@
+//! Recursive bisection: split k into ⌊k/2⌋ + ⌈k/2⌉, bisect the graph with
+//! proportional target weights, recurse on the two induced subgraphs.
+//! Each bisection is the best of BFS-grown candidates (plus the spectral
+//! sweep when a backend is supplied), polished by 2-way FM.
+
+use super::bfs_growing::best_grown_bisection;
+use super::spectral::{fiedler_bisection, FiedlerBackend};
+use crate::graph::{subgraph, Graph};
+use crate::partition::{metrics, Partition};
+use crate::refinement::fm;
+use crate::rng::Rng;
+use crate::BlockId;
+
+/// Partition `g` into `k` blocks with imbalance `epsilon`.
+pub fn partition(
+    g: &Graph,
+    k: u32,
+    epsilon: f64,
+    rng: &mut Rng,
+    backend: Option<&dyn FiedlerBackend>,
+) -> Partition {
+    assert!(k >= 1);
+    let mut assignment = vec![0u32; g.n()];
+    let nodes: Vec<u32> = g.nodes().collect();
+    // distribute with a slightly tightened epsilon so that per-level
+    // overshoot cannot break the final constraint
+    let eps_level = epsilon / (1.0 + (k as f64).log2().max(1.0));
+    recurse(g, &nodes, k, 0, eps_level, rng, backend, &mut assignment);
+    Partition::from_assignment(g, k, assignment)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    g: &Graph,
+    nodes: &[u32],
+    k: u32,
+    base_block: BlockId,
+    epsilon: f64,
+    rng: &mut Rng,
+    backend: Option<&dyn FiedlerBackend>,
+    assignment: &mut [u32],
+) {
+    if k == 1 {
+        for &v in nodes {
+            assignment[v as usize] = base_block;
+        }
+        return;
+    }
+    let sub = subgraph::induced(g, nodes);
+    let sg = &sub.graph;
+    let k0 = k / 2;
+    let k1 = k - k0;
+    let total = sg.total_node_weight();
+    let target0 = total * k0 as i64 / k as i64;
+
+    let p = bisect(sg, target0, total - target0, epsilon, rng, backend);
+
+    let mut side0: Vec<u32> = Vec::new();
+    let mut side1: Vec<u32> = Vec::new();
+    for v in sg.nodes() {
+        if p.block_of(v) == 0 {
+            side0.push(sub.to_parent[v as usize]);
+        } else {
+            side1.push(sub.to_parent[v as usize]);
+        }
+    }
+    recurse(g, &side0, k0, base_block, epsilon, rng, backend, assignment);
+    recurse(g, &side1, k1, base_block + k0, epsilon, rng, backend, assignment);
+}
+
+/// One bisection with target weights `(t0, t1)` and slack `epsilon`.
+fn bisect(
+    g: &Graph,
+    t0: i64,
+    t1: i64,
+    epsilon: f64,
+    rng: &mut Rng,
+    backend: Option<&dyn FiedlerBackend>,
+) -> Partition {
+    let bound0 = ((1.0 + epsilon) * t0 as f64).floor() as i64;
+    let bound1 = ((1.0 + epsilon) * t1 as f64).floor() as i64;
+    let mut cands: Vec<Partition> = Vec::new();
+    cands.push(best_grown_bisection(g, t0, 3, rng));
+    if let Some(be) = backend {
+        if let Some(p) = fiedler_bisection(g, t0, be, rng) {
+            cands.push(p);
+        }
+    }
+    let mut best: Option<(Partition, i64, bool)> = None;
+    for mut p in cands {
+        fm::refine_bisection(g, &mut p, &[bound0.max(1), bound1.max(1)], 60, rng);
+        rebalance(g, &mut p, &[bound0.max(1), bound1.max(1)], rng);
+        let cut = metrics::edge_cut(g, &p);
+        let feas = p.block_weight(0) <= bound0.max(1) && p.block_weight(1) <= bound1.max(1);
+        let better = match &best {
+            None => true,
+            Some((_, bc, bf)) => match (feas, bf) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => cut < *bc,
+            },
+        };
+        if better {
+            best = Some((p, cut, feas));
+        }
+    }
+    best.unwrap().0
+}
+
+/// Greedy repair: while a side exceeds its bound, move its cheapest
+/// boundary node (by cut increase per unit weight) to the other side.
+fn rebalance(g: &Graph, p: &mut Partition, bounds: &[i64; 2], rng: &mut Rng) {
+    let mut scratch = crate::refinement::gain::GainScratch::new(2);
+    for _ in 0..g.n() {
+        let over = if p.block_weight(0) > bounds[0] {
+            0u32
+        } else if p.block_weight(1) > bounds[1] {
+            1u32
+        } else {
+            return;
+        };
+        let to = 1 - over;
+        // best gain move out of the overloaded side, boundary preferred
+        let mut best: Option<(u32, i64)> = None;
+        let order = rng.permutation(g.n());
+        for &v in &order {
+            if p.block_of(v) != over {
+                continue;
+            }
+            let gain = scratch.gain_to(g, p, v, to);
+            if best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                best = Some((v, gain));
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                p.move_node(g, v, to);
+            }
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::initial::spectral::PowerIteration;
+
+    #[test]
+    fn all_ks_feasible_on_grid() {
+        let g = generators::grid2d(12, 12);
+        for k in [1u32, 2, 3, 5, 8, 16] {
+            let mut rng = Rng::new(k as u64);
+            let p = partition(&g, k, 0.05, &mut rng, None);
+            assert!(p.validate(&g).is_ok());
+            assert_eq!(p.non_empty_blocks(), k as usize, "k={k}");
+            assert!(p.is_feasible(&g, 0.05), "k={k} weights={:?}", p.block_weights());
+        }
+    }
+
+    #[test]
+    fn spectral_backend_helps_or_ties_on_structured_graph() {
+        // barbell of grids: clear best cut at the bridge
+        let mut b = crate::graph::GraphBuilder::new(32);
+        for side in 0..2u32 {
+            let off = side * 16;
+            for y in 0..4u32 {
+                for x in 0..4u32 {
+                    let v = off + y * 4 + x;
+                    if x + 1 < 4 {
+                        b.add_edge(v, v + 1, 1);
+                    }
+                    if y + 1 < 4 {
+                        b.add_edge(v, v + 4, 1);
+                    }
+                }
+            }
+        }
+        b.add_edge(15, 16, 1);
+        let g = b.build().unwrap();
+        let mut r1 = Rng::new(7);
+        let p_spec = partition(&g, 2, 0.05, &mut r1, Some(&PowerIteration));
+        assert_eq!(metrics::edge_cut(&g, &p_spec), 1);
+    }
+
+    #[test]
+    fn odd_k_unequal_targets() {
+        let g = generators::grid2d(9, 9); // 81 nodes, k=3 -> 27 each
+        let mut rng = Rng::new(9);
+        let p = partition(&g, 3, 0.05, &mut rng, None);
+        for b in 0..3 {
+            let w = p.block_weight(b);
+            assert!((24..=29).contains(&w), "block {b} weight {w}");
+        }
+    }
+
+    #[test]
+    fn weighted_nodes_feasible() {
+        let mut rng = Rng::new(11);
+        let g = generators::random_weighted(100, 300, 1, 4, &mut rng);
+        let p = partition(&g, 4, 0.10, &mut rng, None);
+        assert!(p.validate(&g).is_ok());
+        // weighted graphs cannot always hit the bound exactly; it must be close
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 4, 0.10);
+        assert!(
+            p.max_block_weight() <= bound + 4,
+            "max {} vs bound {bound}",
+            p.max_block_weight()
+        );
+    }
+}

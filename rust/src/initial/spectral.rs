@@ -1,0 +1,218 @@
+//! Spectral bisection — the L1/L2/L3 integration point.
+//!
+//! The Fiedler vector (eigenvector of the second-smallest eigenvalue of
+//! the combinatorial Laplacian `L = D − W`) orders nodes so that a sweep
+//! cut at the weight median gives a good bisection of the coarsest graph.
+//!
+//! The eigensolve is *deflated shifted power iteration*: with
+//! `B = σI − L` (σ ≥ λ_max(L)), the dominant eigenvector of `B` restricted
+//! to the complement of the constant vector is exactly the Fiedler vector.
+//! The iteration `x ← normalize(deflate(Bx))` is a chain of matvecs — the
+//! numeric hot-spot that the Pallas kernel implements (L1), the JAX model
+//! lowers (L2) and the PJRT runtime executes from Rust (L3). The
+//! [`PowerIteration`] backend here is the bit-equivalent pure-Rust
+//! fallback and the baseline for the `spectral_runtime` bench.
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Iteration count fixed at AOT-compile time (must match `aot.py`).
+pub const FIEDLER_ITERS: usize = 200;
+
+/// Largest graph a dense spectral solve is applied to.
+pub const MAX_SPECTRAL_N: usize = 512;
+
+/// A provider of Fiedler vectors on zero-padded dense inputs.
+///
+/// Inputs are padded to `size`: `b` is the row-major `size × size` matrix
+/// `σI − L` (zero outside the leading `n × n` block), `u` the normalized
+/// constant vector on the first `n` coordinates (zero elsewhere), `x0` a
+/// random start vector supported on the first `n` coordinates. The result
+/// is the (approximately) normalized Fiedler vector, padded.
+pub trait FiedlerBackend: Send + Sync {
+    /// Pick the padded size used for a graph with `n` nodes
+    /// (None = backend cannot handle n).
+    fn pick_size(&self, n: usize) -> Option<usize>;
+    /// Run the deflated power iteration.
+    fn run(&self, size: usize, b: &[f32], u: &[f32], x0: &[f32]) -> Option<Vec<f32>>;
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust deflated power iteration (the no-artifact fallback).
+pub struct PowerIteration;
+
+impl FiedlerBackend for PowerIteration {
+    fn pick_size(&self, n: usize) -> Option<usize> {
+        (n <= MAX_SPECTRAL_N).then_some(n)
+    }
+
+    fn run(&self, size: usize, b: &[f32], u: &[f32], x0: &[f32]) -> Option<Vec<f32>> {
+        let mut x = x0.to_vec();
+        let mut y = vec![0f32; size];
+        for _ in 0..FIEDLER_ITERS {
+            // y = B x
+            for (i, yi) in y.iter_mut().enumerate() {
+                let row = &b[i * size..(i + 1) * size];
+                let mut acc = 0f32;
+                for (bij, xj) in row.iter().zip(x.iter()) {
+                    acc += bij * xj;
+                }
+                *yi = acc;
+            }
+            // deflate the constant direction and normalize
+            let dot: f32 = y.iter().zip(u.iter()).map(|(a, b)| a * b).sum();
+            for (yi, ui) in y.iter_mut().zip(u.iter()) {
+                *yi -= dot * ui;
+            }
+            let norm: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm < 1e-20 {
+                return None;
+            }
+            for (xi, yi) in x.iter_mut().zip(y.iter()) {
+                *xi = yi / norm;
+            }
+        }
+        Some(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-power-iteration"
+    }
+}
+
+/// Build the padded inputs `(b, u, x0)` for `g`.
+pub fn build_inputs(g: &Graph, size: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = g.n();
+    assert!(n <= size);
+    let mut b = vec![0f32; size * size];
+    // sigma >= lambda_max(L); 2 * max weighted degree is a safe bound
+    let sigma = 2.0 * g.nodes().map(|v| g.weighted_degree(v)).max().unwrap_or(1).max(1) as f32;
+    for v in 0..n {
+        b[v * size + v] = sigma - g.weighted_degree(v as u32) as f32;
+        for (u, w) in g.neighbors_w(v as u32) {
+            b[v * size + u as usize] = w as f32;
+        }
+    }
+    let inv = (1.0 / (n as f32)).sqrt();
+    let mut u = vec![0f32; size];
+    for ui in u.iter_mut().take(n) {
+        *ui = inv;
+    }
+    let mut x0 = vec![0f32; size];
+    for xi in x0.iter_mut().take(n) {
+        *xi = rng.f64() as f32 - 0.5;
+    }
+    // pre-deflate + normalize x0
+    let dot: f32 = x0.iter().zip(u.iter()).map(|(a, b)| a * b).sum();
+    for (xi, ui) in x0.iter_mut().zip(u.iter()) {
+        *xi -= dot * ui;
+    }
+    let norm: f32 = x0.iter().map(|v| v * v).sum::<f32>().sqrt();
+    for xi in x0.iter_mut() {
+        *xi /= norm.max(1e-12);
+    }
+    (b, u, x0)
+}
+
+/// Spectral sweep bisection: order nodes by Fiedler value, cut at the
+/// target weight. Returns None if the backend declines or diverges.
+pub fn fiedler_bisection(
+    g: &Graph,
+    target0: i64,
+    backend: &dyn FiedlerBackend,
+    rng: &mut Rng,
+) -> Option<Partition> {
+    let n = g.n();
+    if n < 4 {
+        return None;
+    }
+    let size = backend.pick_size(n)?;
+    let (b, u, x0) = build_inputs(g, size, rng);
+    let fiedler = backend.run(size, &b, &u, &x0)?;
+    let mut order: Vec<u32> = g.nodes().collect();
+    order.sort_by(|&a, &bn| {
+        fiedler[a as usize]
+            .partial_cmp(&fiedler[bn as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut part = vec![1u32; n];
+    let mut w0 = 0i64;
+    for &v in &order {
+        if w0 >= target0 {
+            break;
+        }
+        part[v as usize] = 0;
+        w0 += g.node_weight(v);
+    }
+    Some(Partition::from_assignment(g, 2, part))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn fiedler_splits_a_barbell_perfectly() {
+        // two K6s joined by one edge: the Fiedler sweep must find the bridge
+        let mut b = crate::graph::GraphBuilder::new(12);
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                b.add_edge(u, v, 1);
+                b.add_edge(u + 6, v + 6, 1);
+            }
+        }
+        b.add_edge(5, 6, 1);
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(1);
+        let p = fiedler_bisection(&g, 6, &PowerIteration, &mut rng).unwrap();
+        assert_eq!(metrics::edge_cut(&g, &p), 1, "sweep must cut the bridge");
+        assert_eq!(p.block_weight(0), 6);
+    }
+
+    #[test]
+    fn fiedler_on_grid_is_a_straight_cut() {
+        let g = generators::grid2d(8, 4);
+        let mut rng = Rng::new(2);
+        let p = fiedler_bisection(&g, 16, &PowerIteration, &mut rng).unwrap();
+        let cut = metrics::edge_cut(&g, &p);
+        assert!(cut <= 6, "spectral grid cut should be near-optimal (4), got {cut}");
+    }
+
+    #[test]
+    fn padding_does_not_change_result_sign_structure() {
+        let g = generators::grid2d(6, 3);
+        let mut rng = Rng::new(3);
+        let (b, u, x0) = build_inputs(&g, 32, &mut rng);
+        let f = PowerIteration.run(32, &b, &u, &x0).unwrap();
+        // padded coordinates stay (near) zero
+        for &v in &f[18..] {
+            assert!(v.abs() < 1e-5, "padding leaked: {v}");
+        }
+        // real coordinates are not all equal (deflation removed constant)
+        let spread = f[..18].iter().cloned().fold(f32::MIN, f32::max)
+            - f[..18].iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 1e-4);
+    }
+
+    #[test]
+    fn declines_tiny_graphs() {
+        let g = generators::path(3);
+        let mut rng = Rng::new(4);
+        assert!(fiedler_bisection(&g, 1, &PowerIteration, &mut rng).is_none());
+    }
+
+    #[test]
+    fn respects_weighted_target() {
+        let mut rng = Rng::new(5);
+        let g = generators::random_weighted(60, 180, 1, 5, &mut rng);
+        let target = g.total_node_weight() / 2;
+        if let Some(p) = fiedler_bisection(&g, target, &PowerIteration, &mut rng) {
+            assert!(p.block_weight(0) >= target);
+            assert!(p.block_weight(0) <= target + 5, "overshoot at most one node weight");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The balancing variant of KaBaPE (§2.3): make an *infeasible* partition
+//! feasible with minimal cut damage by routing weight along minimum-cost
+//! *paths* in the move graph — from an overloaded block to a block with
+//! slack. Each path application shifts one node per arc, decreasing the
+//! overloaded block by one weight class unit without overloading anyone
+//! en route. This is what lets the toolchain *guarantee* feasible output
+//! where Scotch/Jostle/Metis cannot.
+
+use super::gain_graph;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Repeatedly apply min-cost balancing paths until every block is within
+/// `bound`, or no path exists. Returns true on success (feasible).
+pub fn balance(g: &Graph, p: &mut Partition, bound: i64, rng: &mut Rng) -> bool {
+    let k = p.k() as usize;
+    let classes = super::weight_classes_pub(g);
+    let mut guard = 0usize;
+    while p.max_block_weight() > bound {
+        guard += 1;
+        if guard > 4 * g.n().max(4) {
+            return false;
+        }
+        let over = (0..k as u32).max_by_key(|&b| p.block_weight(b)).unwrap();
+        // prefer moving the smallest useful weight class that exists in `over`
+        let mut applied = false;
+        for &w in &classes {
+            if apply_best_path(g, p, over, bound, w, rng) {
+                applied = true;
+                break;
+            }
+        }
+        if !applied {
+            return false;
+        }
+    }
+    true
+}
+
+/// Bellman–Ford shortest path (costs may be negative, graph has no
+/// negative cycles reachable in <= k hops that we care about — we cap
+/// relaxation rounds at k). Moves one `class_weight` node along each arc
+/// of the path from `over` to the best reachable block with slack.
+fn apply_best_path(
+    g: &Graph,
+    p: &mut Partition,
+    over: u32,
+    bound: i64,
+    class_weight: i64,
+    rng: &mut Rng,
+) -> bool {
+    let k = p.k() as usize;
+    let mg = gain_graph::build(g, p, class_weight, rng);
+    // Hop-bounded DP: dp[h][b] = min cost of a path over -> b with exactly
+    // <= h arcs. Robust against negative cycles in the move graph (a plain
+    // Bellman-Ford predecessor chain would loop on them).
+    let max_hops = k.min(8);
+    let mut dp = vec![vec![i64::MAX; k]; max_hops + 1];
+    let mut pre = vec![vec![usize::MAX; k]; max_hops + 1];
+    dp[0][over as usize] = 0;
+    for h in 1..=max_hops {
+        for b in 0..k {
+            dp[h][b] = dp[h - 1][b];
+            pre[h][b] = usize::MAX; // MAX = inherit from h-1 (no new arc)
+        }
+        for a in 0..k {
+            if dp[h - 1][a] == i64::MAX {
+                continue;
+            }
+            for b in 0..k {
+                let c = mg.cost[a * k + b];
+                if c == i64::MAX || a == b {
+                    continue;
+                }
+                let cand = dp[h - 1][a].saturating_add(c);
+                if cand < dp[h][b] {
+                    dp[h][b] = cand;
+                    pre[h][b] = a;
+                }
+            }
+        }
+    }
+    // candidates (target, hops, cost) sorted by cost; paths that ride a
+    // negative cycle repeat an arc and are rejected below, so we fall
+    // through to the next candidate (the 1-hop candidates are always
+    // duplicate-free, guaranteeing progress whenever any single move can
+    // reach a block with slack).
+    let mut candidates: Vec<(usize, usize, i64)> = Vec::new();
+    for b in 0..k {
+        if b == over as usize {
+            continue;
+        }
+        if p.block_weight(b as u32) + class_weight > bound {
+            continue;
+        }
+        for h in 1..=max_hops {
+            if dp[h][b] != i64::MAX && (h == 1 || dp[h][b] < dp[h - 1][b]) {
+                candidates.push((b, h, dp[h][b]));
+            }
+        }
+    }
+    candidates.sort_by_key(|&(_, h, c)| (c, h));
+    'cand: for &(target, hops, _) in &candidates {
+        // reconstruct path (walking the hop levels backwards; pre == MAX
+        // means the value was inherited from the level below, same node)
+        let mut path = vec![target];
+        let mut cur = target;
+        let mut h = hops;
+        while h > 0 {
+            let pa = pre[h][cur];
+            if pa == usize::MAX {
+                h -= 1;
+            } else {
+                path.push(pa);
+                cur = pa;
+                h -= 1;
+            }
+        }
+        if cur != over as usize {
+            continue;
+        }
+        path.reverse();
+        // reject paths that repeat an arc (negative-cycle artifacts): the
+        // same arc means the same designated node moving twice
+        let mut arcs = std::collections::HashSet::new();
+        for w in path.windows(2) {
+            if !arcs.insert((w[0], w[1])) {
+                continue 'cand;
+            }
+        }
+        // apply moves: along each arc (a -> b), move the designated node
+        let mut seen = std::collections::HashSet::new();
+        let mut journal: Vec<(u32, u32)> = Vec::new();
+        let mut failed = false;
+        for wpair in path.windows(2) {
+            let (a, b) = (wpair[0], wpair[1]);
+            let v = match mg.best_node[a * k + b] {
+                Some(v) => v,
+                None => {
+                    failed = true;
+                    break;
+                }
+            };
+            if !seen.insert(v) {
+                failed = true;
+                break;
+            }
+            journal.push((v, p.move_node(g, v, b as u32)));
+        }
+        if failed {
+            for &(v, from) in journal.iter().rev() {
+                p.move_node(g, v, from);
+            }
+            continue 'cand;
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn balances_overloaded_grid() {
+        let g = generators::grid2d(8, 8); // 64 nodes
+        // block 0 has 40 nodes, blocks 1..3 have 8 each: heavily infeasible
+        let part: Vec<u32> = g.nodes().map(|v| if v < 40 { 0 } else { 1 + (v - 40) % 3 }).collect();
+        let mut p = Partition::from_assignment(&g, 4, part);
+        let bound = crate::util::block_weight_bound(64, 4, 0.0); // 16
+        assert!(p.max_block_weight() > bound);
+        let mut rng = Rng::new(1);
+        let ok = balance(&g, &mut p, bound, &mut rng);
+        assert!(ok, "balancing must succeed on unit weights");
+        assert!(p.max_block_weight() <= bound, "{:?}", p.block_weights());
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn feasible_input_is_untouched() {
+        let g = generators::grid2d(4, 4);
+        let part: Vec<u32> = g.nodes().map(|v| v % 4).collect();
+        let mut p = Partition::from_assignment(&g, 4, part.clone());
+        let mut rng = Rng::new(2);
+        assert!(balance(&g, &mut p, 4, &mut rng));
+        assert_eq!(p.assignment(), &part[..]);
+    }
+
+    #[test]
+    fn prop_balancing_reaches_bound_on_unit_weights() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 16 + (case % 10) * 4;
+            let g = generators::random_weighted(n, 3 * n, 1, 1, rng);
+            let k = 2 + (case % 3) as u32;
+            // skewed assignment
+            let part: Vec<u32> = (0..n).map(|i| if i < n / 2 { 0 } else { (i as u32) % k }).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let bound = crate::util::block_weight_bound(g.total_node_weight(), k, 0.05);
+            let ok = balance(&g, &mut p, bound, rng);
+            crate::prop_assert!(ok, "must balance unit-weight graphs");
+            crate::prop_assert!(p.max_block_weight() <= bound);
+            crate::prop_assert!(p.validate(&g).is_ok());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! KaBaPE — strictly balanced graph partitioning (§2.3, [33]).
+//!
+//! KaFFPa-style local search stalls when ε is tiny: any single move breaks
+//! the balance constraint. KaBaPE's technique *relaxes balance per move
+//! but restores it globally* by combining moves along cycles of blocks:
+//! for every ordered block pair (A, B) take the best single-node move
+//! A→B; a *negative cycle* in the resulting move graph is a set of moves
+//! whose gains sum positive while every block's weight is unchanged
+//! (each block on the cycle loses one node and gains one of equal
+//! weight). The same machinery, run on paths from overloaded to
+//! underloaded blocks, yields the balancing variant that can make
+//! infeasible partitions feasible — the property the guide highlights
+//! against Scotch/Jostle/Metis.
+
+pub mod balancing;
+pub mod gain_graph;
+pub mod negative_cycle;
+
+use crate::graph::Graph;
+use crate::partition::{metrics, Partition};
+use crate::rng::Rng;
+
+/// Strictly-balanced refinement: repeatedly find a negative move cycle
+/// and apply it. Every application preserves all block weights exactly
+/// and strictly decreases the cut, so termination is guaranteed.
+/// Returns the total gain.
+pub fn kaba_refine(g: &Graph, p: &mut Partition, rng: &mut Rng, max_rounds: usize) -> i64 {
+    let mut total = 0i64;
+    // move cycles exchange nodes of equal weight; iterate over the weight
+    // classes present (most graphs are unit-weight: one class)
+    let classes = weight_classes(g);
+    for _ in 0..max_rounds {
+        let mut round = 0i64;
+        for &w in &classes {
+            round += one_negative_cycle_pass(g, p, w, rng);
+        }
+        total += round;
+        if round == 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// All distinct node weights, most frequent first (capped at 4 classes).
+pub(crate) fn weight_classes_pub(g: &Graph) -> Vec<i64> {
+    weight_classes(g)
+}
+
+/// All distinct node weights, most frequent first (capped at 4 classes).
+fn weight_classes(g: &Graph) -> Vec<i64> {
+    let mut counts: std::collections::HashMap<i64, usize> = Default::default();
+    for v in g.nodes() {
+        *counts.entry(g.node_weight(v)).or_insert(0) += 1;
+    }
+    let mut cs: Vec<(i64, usize)> = counts.into_iter().collect();
+    cs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    cs.into_iter().take(4).map(|(w, _)| w).collect()
+}
+
+/// One pass: build the move graph for weight class `w`, search a negative
+/// cycle, apply it transactionally (rollback if the realized joint gain
+/// is not positive — gains of adjacent moved nodes interact).
+fn one_negative_cycle_pass(g: &Graph, p: &mut Partition, w: i64, rng: &mut Rng) -> i64 {
+    let mg = gain_graph::build(g, p, w, rng);
+    let Some(cycle) = negative_cycle::find(p.k() as usize, &mg.cost) else {
+        return 0;
+    };
+    // collect the concrete node moves along the cycle
+    let mut moves: Vec<(u32, u32)> = Vec::new(); // (node, to_block)
+    let mut used: std::collections::HashSet<u32> = Default::default();
+    for win in cycle.windows(2) {
+        let (a, b) = (win[0], win[1]);
+        let Some(v) = mg.best_node[a * p.k() as usize + b] else {
+            return 0;
+        };
+        if !used.insert(v) {
+            return 0; // same node on two cycle arcs — skip this cycle
+        }
+        moves.push((v, b as u32));
+    }
+    // transactional apply
+    let before_cut = metrics::edge_cut(g, p);
+    let before_weights = p.block_weights().to_vec();
+    let journal: Vec<(u32, u32)> =
+        moves.iter().map(|&(v, to)| (v, p.move_node(g, v, to))).collect();
+    let after_cut = metrics::edge_cut(g, p);
+    if after_cut < before_cut {
+        debug_assert_eq!(
+            p.block_weights(),
+            &before_weights[..],
+            "cycle must preserve block weights"
+        );
+        before_cut - after_cut
+    } else {
+        for &(v, from) in journal.iter().rev() {
+            p.move_node(g, v, from);
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn preserves_block_weights_exactly() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 12 + case % 30;
+            let g = generators::random_weighted(n, 3 * n, 1, 1, rng); // unit weights
+            let k = 3 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|i| (i as u32) % k).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let weights = p.block_weights().to_vec();
+            let before = metrics::edge_cut(&g, &p);
+            let gain = kaba_refine(&g, &mut p, rng, 10);
+            crate::prop_assert!(p.block_weights() == &weights[..], "weights changed");
+            crate::prop_assert!(
+                metrics::edge_cut(&g, &p) == before - gain,
+                "gain mismatch"
+            );
+            crate::prop_assert!(gain >= 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn improves_perfectly_balanced_grid_where_fm_cannot() {
+        // 6x6 grid, k=4, eps=0: bound = 9 exactly. Plain FM with bound 9
+        // cannot rebalance (every move overloads a block); cycles can.
+        let g = generators::grid2d(6, 6);
+        // feasible but bad: interleaved columns
+        let part: Vec<u32> = g.nodes().map(|v| v % 4).collect();
+        let mut p = Partition::from_assignment(&g, 4, part);
+        assert!(p.is_feasible(&g, 0.0));
+        let mut rng = Rng::new(1);
+        let bound = crate::util::block_weight_bound(36, 4, 0.0);
+        let mut p_fm = p.clone();
+        let fm_gain =
+            crate::refinement::kway_fm::refine(&g, &mut p_fm, &vec![bound; 4], 50, &mut rng);
+        let kaba_gain = kaba_refine(&g, &mut p, &mut rng, 30);
+        assert!(p.is_feasible(&g, 0.0), "still perfectly balanced");
+        assert!(kaba_gain > 0, "negative cycles must find improvements");
+        let _ = fm_gain; // FM may find swaps too; kaba must at least work
+    }
+
+    #[test]
+    fn weighted_graphs_use_weight_classes() {
+        let mut rng = Rng::new(3);
+        let g = generators::random_weighted(40, 120, 1, 3, &mut rng);
+        let part: Vec<u32> = (0..40u32).map(|i| i % 4).collect();
+        let mut p = Partition::from_assignment(&g, 4, part);
+        let weights = p.block_weights().to_vec();
+        kaba_refine(&g, &mut p, &mut rng, 5);
+        assert_eq!(p.block_weights(), &weights[..]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Negative-cycle detection on the dense move graph — Bellman–Ford from a
+//! virtual source, with predecessor walking to extract the cycle. The
+//! paper leans on "the existence of efficient algorithms for this
+//! problem"; k is small (the move graph has k nodes), so the O(k³) dense
+//! Bellman–Ford is plenty.
+
+/// Find a negative-cost cycle in the dense `k × k` cost matrix
+/// (`i64::MAX` = missing arc). Returns the cycle as a closed node list
+/// `[v0, v1, ..., v0]`, or None.
+pub fn find(k: usize, cost: &[i64]) -> Option<Vec<usize>> {
+    assert_eq!(cost.len(), k * k);
+    if k < 2 {
+        return None;
+    }
+    // Bellman–Ford with all nodes as sources (dist 0), k iterations.
+    let mut dist = vec![0i64; k];
+    let mut pred = vec![usize::MAX; k];
+    let mut changed_node = None;
+    for _round in 0..k {
+        changed_node = None;
+        for a in 0..k {
+            if dist[a] == i64::MAX {
+                continue;
+            }
+            for b in 0..k {
+                let c = cost[a * k + b];
+                if c == i64::MAX || a == b {
+                    continue;
+                }
+                if dist[a].saturating_add(c) < dist[b] {
+                    dist[b] = dist[a] + c;
+                    pred[b] = a;
+                    changed_node = Some(b);
+                }
+            }
+        }
+        if changed_node.is_none() {
+            return None; // converged, no negative cycle
+        }
+    }
+    // a node relaxed in round k lies on / leads to a negative cycle:
+    // walk k predecessors to land inside the cycle, then collect it
+    let mut v = changed_node?;
+    for _ in 0..k {
+        v = pred[v];
+        debug_assert!(v != usize::MAX);
+    }
+    let start = v;
+    let mut cycle = vec![start];
+    let mut cur = pred[start];
+    while cur != start {
+        cycle.push(cur);
+        cur = pred[cur];
+    }
+    cycle.push(start);
+    cycle.reverse(); // pred-walk gives the cycle backwards; reverse to arc order
+    Some(cycle)
+}
+
+/// Total cost of a closed walk (for tests / assertions).
+pub fn cycle_cost(k: usize, cost: &[i64], cycle: &[usize]) -> i64 {
+    cycle.windows(2).map(|w| cost[w[0] * k + w[1]]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const X: i64 = i64::MAX;
+
+    #[test]
+    fn detects_simple_negative_cycle() {
+        // 0 -> 1 cost 1, 1 -> 0 cost -3: cycle cost -2
+        let cost = vec![X, 1, -3, X];
+        let cyc = find(2, &cost).expect("cycle exists");
+        assert!(cycle_cost(2, &cost, &cyc) < 0, "{cyc:?}");
+        assert_eq!(cyc.first(), cyc.last());
+    }
+
+    #[test]
+    fn no_cycle_in_positive_graph() {
+        let cost = vec![X, 1, 2, X];
+        assert!(find(2, &cost).is_none());
+    }
+
+    #[test]
+    fn zero_cycle_is_not_negative() {
+        let cost = vec![X, 1, -1, X];
+        assert!(find(2, &cost).is_none());
+    }
+
+    #[test]
+    fn three_cycle() {
+        // 0->1: 2, 1->2: -1, 2->0: -4 => cycle cost -3
+        let cost = vec![X, 2, X, X, X, -1, -4, X, X];
+        let cyc = find(3, &cost).expect("cycle");
+        assert!(cycle_cost(3, &cost, &cyc) < 0);
+        // closed walk visiting distinct nodes
+        let inner = &cyc[..cyc.len() - 1];
+        let mut sorted = inner.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), inner.len(), "cycle visits nodes once: {cyc:?}");
+    }
+
+    #[test]
+    fn prop_found_cycles_are_negative_and_valid() {
+        crate::util::quickcheck::check(|case, rng| {
+            let k = 2 + case % 6;
+            let mut cost = vec![X; k * k];
+            for a in 0..k {
+                for b in 0..k {
+                    if a != b && rng.bool(0.7) {
+                        cost[a * k + b] = rng.range_i64(-5, 10);
+                    }
+                }
+            }
+            if let Some(cyc) = find(k, &cost) {
+                crate::prop_assert!(cyc.len() >= 3, "cycle too short: {cyc:?}");
+                crate::prop_assert!(cyc.first() == cyc.last(), "not closed");
+                for w in cyc.windows(2) {
+                    crate::prop_assert!(
+                        cost[w[0] * k + w[1]] != X,
+                        "cycle uses missing arc"
+                    );
+                }
+                crate::prop_assert!(
+                    cycle_cost(k, &cost, &cyc) < 0,
+                    "cycle not negative: {cyc:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn misses_nothing_obvious() {
+        // if every arc is negative there must be a cycle
+        let k = 4;
+        let mut cost = vec![X; k * k];
+        for a in 0..k {
+            for b in 0..k {
+                if a != b {
+                    cost[a * k + b] = -1;
+                }
+            }
+        }
+        assert!(find(k, &cost).is_some());
+    }
+}

@@ -1,0 +1,59 @@
+//! # KaHIP-rs — Karlsruhe High Quality Partitioning, reproduced in Rust
+//!
+//! A full reproduction of the KaHIP v3.00 framework (Sanders & Schulz):
+//! multilevel graph partitioning (KaFFPa fast/eco/strong and the social
+//! variants), the distributed evolutionary partitioner (KaFFPaE), strictly
+//! balanced partitioning via negative-cycle search (KaBaPE), size-constrained
+//! label propagation, distributed parallel partitioning (ParHIP, simulated
+//! message passing), node separators, nested-dissection node ordering with
+//! data reductions, SPAC edge partitioning, hierarchy-aware process mapping
+//! and an exact branch-and-bound solver standing in for the ILP programs.
+//!
+//! The numeric hot-spot — spectral initial partitioning on the coarsest
+//! graph — is AOT-compiled from JAX + Pallas to HLO text at build time and
+//! executed from Rust through the PJRT CPU client (see [`runtime`] and
+//! [`initial::spectral`]). Python never runs on the partitioning path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use kahip::{api, partition::config::Mode};
+//! // CSR arrays exactly as in the KaHIP / Metis C interface (§5 of the guide)
+//! let xadj = vec![0u32, 2, 5, 7, 9, 12];
+//! let adjncy = vec![1, 4, 0, 2, 4, 1, 3, 2, 4, 0, 1, 3];
+//! let out = api::kaffpa(&xadj, &adjncy, None, None, 2, 0.03, true, 0, Mode::Eco).unwrap();
+//! println!("edge cut {}", out.edgecut);
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod coarsening;
+pub mod coordinator;
+pub mod edgepartition;
+pub mod evolutionary;
+pub mod graph;
+pub mod ilp;
+pub mod initial;
+pub mod kaba;
+pub mod mapping;
+pub mod ordering;
+pub mod parhip;
+pub mod partition;
+pub mod refinement;
+pub mod rng;
+pub mod runtime;
+pub mod separator;
+pub mod util;
+
+pub mod api;
+
+/// Node index into a [`graph::Graph`]. KaHIP numbers nodes `0..n`.
+pub type NodeId = u32;
+/// Index into the `adjncy`/`adjwgt` arrays (a *directed half* of an edge).
+pub type EdgeId = u32;
+/// Block identifier of a partition, `0..k`.
+pub type BlockId = u32;
+/// Node weights (`c` in the paper): non-negative integers.
+pub type NodeWeight = i64;
+/// Edge weights (`ω` in the paper): strictly positive integers.
+pub type EdgeWeight = i64;

@@ -1,0 +1,15 @@
+//! The `kahip` binary: one subcommand per program of the user guide (§4).
+//! `kahip --help` lists them; `kahip <program> --help` shows per-program
+//! usage. See `rust/src/cli/` for the option tables.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        println!("{}", kahip::cli::usage());
+        std::process::exit(if args.is_empty() { 2 } else { 0 });
+    }
+    if let Err(e) = kahip::cli::run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Process mapping (§2.6, §4.8): map the blocks of a partition onto the
+//! PEs of a hierarchically organized machine so that heavily communicating
+//! blocks land on nearby processors.
+//!
+//! The machine is given as in the guide: a hierarchy string `4:8:8`
+//! (4 cores per PE, 8 PEs per rack, 8 racks) and a distance string
+//! `1:10:100` (cores on a chip are at distance 1, PEs in a rack at 10,
+//! racks at 100). The objective is the sparse quadratic assignment
+//! problem (QAP): minimize `Σ_{a,b} C(a,b) · D(σ(a), σ(b))` over
+//! permutations σ, where `C` is the block-level communication graph of
+//! the partition and `D` the processor distance.
+//!
+//! Two construction strategies from the paper are provided:
+//! - [`qap`]: greedy growing construction + pairwise-swap local search on
+//!   an arbitrary k-way partition (the `--enable_mapping` path of kaffpa).
+//! - [`multisection`]: the v3.00 *global multisection* algorithm, which
+//!   partitions the input network along the hierarchy so the identity
+//!   mapping is already topology-aware.
+
+pub mod multisection;
+pub mod qap;
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+
+/// A parsed machine hierarchy: `sizes[l]` children per level-`l` group and
+/// `distances[l]` the distance between PEs whose lowest common level is `l`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HierarchySpec {
+    pub sizes: Vec<usize>,
+    pub distances: Vec<i64>,
+}
+
+impl HierarchySpec {
+    /// Parse the guide's `--hierarchy_parameter_string` /
+    /// `--distance_parameter_string` pair, e.g. `("4:8:8", "1:10:100")`.
+    pub fn parse(hierarchy: &str, distance: &str) -> Result<Self, String> {
+        let sizes: Vec<usize> = hierarchy
+            .split(':')
+            .map(|t| t.trim().parse::<usize>().map_err(|e| format!("bad hierarchy '{t}': {e}")))
+            .collect::<Result<_, _>>()?;
+        let distances: Vec<i64> = distance
+            .split(':')
+            .map(|t| t.trim().parse::<i64>().map_err(|e| format!("bad distance '{t}': {e}")))
+            .collect::<Result<_, _>>()?;
+        if sizes.is_empty() || sizes.len() != distances.len() {
+            return Err(format!(
+                "hierarchy depth {} != distance depth {}",
+                sizes.len(),
+                distances.len()
+            ));
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            return Err("hierarchy levels must be >= 1".into());
+        }
+        if distances.windows(2).any(|w| w[0] > w[1]) {
+            return Err("distances must be non-decreasing up the hierarchy".into());
+        }
+        Ok(Self { sizes, distances })
+    }
+
+    pub fn from_arrays(sizes: &[usize], distances: &[i64]) -> Result<Self, String> {
+        let s = Self { sizes: sizes.to_vec(), distances: distances.to_vec() };
+        // re-validate through the string path's rules
+        if s.sizes.is_empty() || s.sizes.len() != s.distances.len() {
+            return Err("hierarchy/distance arrays must be equal-length and non-empty".into());
+        }
+        if s.sizes.iter().any(|&x| x == 0) {
+            return Err("hierarchy levels must be >= 1".into());
+        }
+        Ok(s)
+    }
+
+    /// Total number of PEs (`k` is implicit in the hierarchy, §4.8).
+    pub fn num_pes(&self) -> usize {
+        self.sizes.iter().product()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Distance between PEs `a` and `b`: the distance label of their
+    /// lowest common hierarchy level. PE ids are mixed-radix numbers with
+    /// `sizes[0]` the fastest-varying digit.
+    pub fn pe_distance(&self, a: usize, b: usize) -> i64 {
+        if a == b {
+            return 0;
+        }
+        let (mut ra, mut rb) = (a, b);
+        let mut level_dist = self.distances[self.depth() - 1];
+        for (sz, d) in self.sizes.iter().zip(self.distances.iter()) {
+            ra /= sz;
+            rb /= sz;
+            if ra == rb {
+                level_dist = *d;
+                break;
+            }
+        }
+        level_dist
+    }
+}
+
+/// Processor distances, either as a dense matrix or recomputed on demand
+/// (`--online_distances`, §4.1/§4.8).
+pub enum Topology {
+    Matrix { k: usize, d: Vec<i64> },
+    Online(HierarchySpec),
+}
+
+impl Topology {
+    pub fn new(spec: &HierarchySpec, online: bool) -> Self {
+        if online {
+            Topology::Online(spec.clone())
+        } else {
+            let k = spec.num_pes();
+            let mut d = vec![0i64; k * k];
+            for a in 0..k {
+                for b in 0..k {
+                    d[a * k + b] = spec.pe_distance(a, b);
+                }
+            }
+            Topology::Matrix { k, d }
+        }
+    }
+
+    #[inline]
+    pub fn dist(&self, a: usize, b: usize) -> i64 {
+        match self {
+            Topology::Matrix { k, d } => d[a * k + b],
+            Topology::Online(spec) => spec.pe_distance(a, b),
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        match self {
+            Topology::Matrix { k, .. } => *k,
+            Topology::Online(spec) => spec.num_pes(),
+        }
+    }
+}
+
+/// Result of a mapping run: the node→PE partition (blocks renumbered by
+/// the mapping), its edge cut, and the QAP communication cost.
+#[derive(Clone, Debug)]
+pub struct MappingResult {
+    pub partition: Partition,
+    pub edge_cut: i64,
+    pub qap_cost: i64,
+    /// block → PE permutation that produced the partition.
+    pub mapping: Vec<u32>,
+}
+
+/// Apply a block→PE permutation to a partition (relabel blocks).
+pub fn apply_mapping(g: &Graph, p: &Partition, mapping: &[u32]) -> Partition {
+    let part = p.assignment().iter().map(|&b| mapping[b as usize]).collect();
+    Partition::from_assignment(g, p.k(), part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_guide_example() {
+        let s = HierarchySpec::parse("4:8:8", "1:10:100").unwrap();
+        assert_eq!(s.num_pes(), 256);
+        assert_eq!(s.depth(), 3);
+        // same chip: ids 0 and 3 share the level-0 group
+        assert_eq!(s.pe_distance(0, 3), 1);
+        assert_eq!(s.pe_distance(3, 0), 1);
+        // same rack, different chip: 0 and 4
+        assert_eq!(s.pe_distance(0, 4), 10);
+        // different rack: 0 and 32
+        assert_eq!(s.pe_distance(0, 32), 100);
+        assert_eq!(s.pe_distance(7, 7), 0);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(HierarchySpec::parse("4:8", "1:10:100").is_err());
+        assert!(HierarchySpec::parse("4:0", "1:10").is_err());
+        assert!(HierarchySpec::parse("4:x", "1:10").is_err());
+        assert!(HierarchySpec::parse("", "").is_err());
+        // decreasing distances rejected
+        assert!(HierarchySpec::parse("2:2", "10:1").is_err());
+    }
+
+    #[test]
+    fn single_level_hierarchy() {
+        let s = HierarchySpec::parse("4", "7").unwrap();
+        assert_eq!(s.num_pes(), 4);
+        assert_eq!(s.pe_distance(1, 2), 7);
+        assert_eq!(s.pe_distance(2, 2), 0);
+    }
+
+    #[test]
+    fn topology_matrix_matches_online() {
+        let s = HierarchySpec::parse("2:3:2", "1:5:20").unwrap();
+        let mat = Topology::new(&s, false);
+        let onl = Topology::new(&s, true);
+        let k = s.num_pes();
+        assert_eq!(mat.num_pes(), k);
+        assert_eq!(onl.num_pes(), k);
+        for a in 0..k {
+            for b in 0..k {
+                assert_eq!(mat.dist(a, b), onl.dist(a, b), "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_mapping_relabels() {
+        let g = crate::graph::generators::path(4);
+        let p = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1]);
+        let q = apply_mapping(&g, &p, &[1, 0]);
+        assert_eq!(q.assignment(), &[1, 1, 0, 0]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Global multisection (§2.6, new in v3.00): partition the input network
+//! *along the machine hierarchy* — first into the top-level groups
+//! (racks), then each group into its children (chips), down to single
+//! PEs — so that the identity block→PE mapping is already topology-aware.
+//! The recursion uses perfectly-balanced-ish KaFFPa calls at every level
+//! (imbalance is split across levels so the final PE blocks stay within
+//! the requested ε).
+
+use super::{qap, HierarchySpec, MappingResult, Topology};
+use crate::coordinator::kaffpa;
+use crate::graph::{subgraph, Graph};
+use crate::partition::config::{Config, Mode};
+use crate::partition::{metrics, Partition};
+use crate::rng::Rng;
+
+/// Multisect `g` along `spec`. Returns the PE-level partition where block
+/// ids are PE ids (mixed-radix, level-0 digit fastest). The QAP cost is
+/// evaluated with the identity mapping, then polished by a swap pass.
+pub fn global_multisection(
+    g: &Graph,
+    spec: &HierarchySpec,
+    mode: Mode,
+    epsilon: f64,
+    seed: u64,
+    online_distances: bool,
+) -> MappingResult {
+    let k = spec.num_pes();
+    assert!(k >= 1);
+    // per-level imbalance so the compounded product stays <= 1+eps:
+    // (1+e)^depth = 1+eps  =>  e = (1+eps)^(1/depth) - 1
+    let depth = spec.depth();
+    let level_eps = (1.0 + epsilon).powf(1.0 / depth as f64) - 1.0;
+
+    // digit place value of each level: level l's digit is multiplied by
+    // prod(sizes[0..l])
+    let mut place = vec![1usize; depth];
+    for l in 1..depth {
+        place[l] = place[l - 1] * spec.sizes[l - 1];
+    }
+
+    // recursively section: start with all nodes in "group" with base PE 0
+    // at the top level and descend.
+    let mut pe_of: Vec<u32> = vec![0; g.n()];
+    let all: Vec<u32> = g.nodes().collect();
+    let mut stack: Vec<(Vec<u32>, usize, usize)> = vec![(all, depth, 0)];
+    let mut seed_counter = seed;
+    while let Some((nodes, level, base)) = stack.pop() {
+        if level == 0 || nodes.is_empty() {
+            continue;
+        }
+        let parts = spec.sizes[level - 1];
+        if parts == 1 {
+            stack.push((nodes, level - 1, base));
+            continue;
+        }
+        let sub = subgraph::induced(g, &nodes);
+        let cfg = Config::from_mode(mode, parts as u32, level_eps, seed_counter);
+        seed_counter += 1;
+        let res = kaffpa(&sub.graph, &cfg, None, None);
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
+        for (i, &parent) in sub.to_parent.iter().enumerate() {
+            let b = res.partition.block_of(i as u32) as usize;
+            groups[b].push(parent);
+        }
+        for (digit, group) in groups.into_iter().enumerate() {
+            let child_base = base + digit * place[level - 1];
+            if level == 1 {
+                for &v in &group {
+                    pe_of[v as usize] = child_base as u32;
+                }
+            } else {
+                stack.push((group, level - 1, child_base));
+            }
+        }
+    }
+
+    let partition = Partition::from_assignment(g, k as u32, pe_of);
+    let topo = Topology::new(spec, online_distances);
+    let c = qap::CommGraph::from_partition(g, &partition);
+    let mut sigma = qap::identity_mapping(k);
+    // polish: multisection already encodes locality; swaps can only help
+    let mut rng = Rng::new(seed ^ 0x9e3779b97f4a7c15);
+    qap::swap_local_search(&c, &topo, &mut sigma, &mut rng, 10);
+    let mapped = super::apply_mapping(g, &partition, &sigma);
+    MappingResult {
+        edge_cut: metrics::edge_cut(g, &mapped),
+        qap_cost: qap::qap_cost(&c, &topo, &sigma),
+        partition: mapped,
+        mapping: sigma,
+    }
+}
+
+/// The `--enable_mapping` path of kaffpa (§4.1): k-way partition with
+/// k = #PEs, then construct + improve a block→PE mapping on the comm graph.
+pub fn partition_and_map(
+    g: &Graph,
+    spec: &HierarchySpec,
+    mode: Mode,
+    epsilon: f64,
+    seed: u64,
+    online_distances: bool,
+) -> MappingResult {
+    let k = spec.num_pes();
+    let cfg = Config::from_mode(mode, k as u32, epsilon, seed);
+    let res = kaffpa(g, &cfg, None, None);
+    let topo = Topology::new(spec, online_distances);
+    let c = qap::CommGraph::from_partition(g, &res.partition);
+    // start from the better of greedy construction and identity — the
+    // identity is often strong when the partitioner's recursive splits
+    // already mirror the hierarchy, and local search keeps whatever wins
+    let greedy = qap::greedy_mapping(&c, &topo);
+    let ident = qap::identity_mapping(k);
+    let mut sigma = if qap::qap_cost(&c, &topo, &greedy) <= qap::qap_cost(&c, &topo, &ident) {
+        greedy
+    } else {
+        ident
+    };
+    let mut rng = Rng::new(seed.wrapping_add(1));
+    qap::swap_local_search(&c, &topo, &mut sigma, &mut rng, 20);
+    let mapped = super::apply_mapping(g, &res.partition, &sigma);
+    MappingResult {
+        edge_cut: metrics::edge_cut(g, &mapped),
+        qap_cost: qap::qap_cost(&c, &topo, &sigma),
+        partition: mapped,
+        mapping: sigma,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn multisection_produces_feasible_pe_partition() {
+        let g = generators::grid2d(16, 16);
+        let spec = HierarchySpec::parse("2:2:2", "1:10:100").unwrap();
+        let r = global_multisection(&g, &spec, Mode::Eco, 0.05, 1, false);
+        assert_eq!(r.partition.k(), 8);
+        assert!(r.partition.validate(&g).is_ok());
+        assert_eq!(r.partition.non_empty_blocks(), 8);
+        assert!(
+            r.partition.is_feasible(&g, 0.06),
+            "block weights {:?}",
+            r.partition.block_weights()
+        );
+        assert!(r.qap_cost > 0);
+    }
+
+    #[test]
+    fn multisection_beats_random_mapping_on_qap() {
+        let g = generators::grid2d(20, 20);
+        let spec = HierarchySpec::parse("4:4", "1:10").unwrap();
+        let ms = global_multisection(&g, &spec, Mode::Eco, 0.05, 2, false);
+
+        // baseline: plain kaffpa + random assignment of blocks to PEs
+        let cfg = Config::from_mode(Mode::Eco, 16, 0.05, 2);
+        let res = kaffpa(&g, &cfg, None, None);
+        let topo = Topology::new(&spec, false);
+        let c = qap::CommGraph::from_partition(&g, &res.partition);
+        let mut rng = Rng::new(3);
+        let worst = (0..5)
+            .map(|_| qap::qap_cost(&c, &topo, &qap::random_mapping(16, &mut rng)))
+            .max()
+            .unwrap();
+        assert!(
+            ms.qap_cost < worst,
+            "multisection {} should beat worst random {}",
+            ms.qap_cost,
+            worst
+        );
+    }
+
+    #[test]
+    fn partition_and_map_improves_on_identity() {
+        let g = generators::grid2d(18, 18);
+        let spec = HierarchySpec::parse("2:4", "1:100").unwrap();
+        let r = partition_and_map(&g, &spec, Mode::Eco, 0.05, 4, true);
+        assert_eq!(r.partition.k(), 8);
+        assert!(r.partition.validate(&g).is_ok());
+        // mapping is a permutation of 0..8
+        let mut s = r.mapping.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn trivial_hierarchy_single_pe() {
+        let g = generators::grid2d(4, 4);
+        let spec = HierarchySpec::parse("1", "1").unwrap();
+        let r = global_multisection(&g, &spec, Mode::Fast, 0.03, 5, false);
+        assert_eq!(r.partition.k(), 1);
+        assert_eq!(r.edge_cut, 0);
+        assert_eq!(r.qap_cost, 0);
+    }
+}

@@ -1,0 +1,287 @@
+//! The sparse QAP core (§2.6): the block-level communication graph, the
+//! QAP objective, greedy construction and pairwise-swap local search.
+//!
+//! Exploits the paper's two assumptions: communication graphs are
+//! *sparse* (C is stored as adjacency lists, cost deltas touch only a
+//! block's neighbors) and distances come from a *hierarchy* (evaluated
+//! through [`Topology`], which may be an O(1) matrix or recomputed).
+
+use super::Topology;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Block-level communication graph: `comm[a]` lists `(b, weight)` with the
+/// total cut weight between blocks `a` and `b` (symmetric, no self pairs).
+#[derive(Clone, Debug)]
+pub struct CommGraph {
+    pub k: usize,
+    pub comm: Vec<Vec<(u32, i64)>>,
+}
+
+impl CommGraph {
+    /// Accumulate the cut weights between every pair of adjacent blocks.
+    pub fn from_partition(g: &Graph, p: &Partition) -> CommGraph {
+        let k = p.k() as usize;
+        let mut map = std::collections::HashMap::<(u32, u32), i64>::new();
+        for v in g.nodes() {
+            let bv = p.block_of(v);
+            for (u, w) in g.neighbors_w(v) {
+                let bu = p.block_of(u);
+                if bv < bu {
+                    *map.entry((bv, bu)).or_insert(0) += w;
+                }
+            }
+        }
+        let mut comm = vec![Vec::new(); k];
+        for ((a, b), w) in map {
+            comm[a as usize].push((b, w));
+            comm[b as usize].push((a, w));
+        }
+        for row in &mut comm {
+            row.sort_unstable();
+        }
+        CommGraph { k, comm }
+    }
+
+    /// Total communication volume Σ C(a,b) over unordered pairs.
+    pub fn total_comm(&self) -> i64 {
+        self.comm.iter().flatten().map(|&(_, w)| w).sum::<i64>() / 2
+    }
+
+    /// Heaviest communication edge `(a, b, w)`.
+    pub fn heaviest_pair(&self) -> Option<(u32, u32, i64)> {
+        let mut best = None;
+        for (a, row) in self.comm.iter().enumerate() {
+            for &(b, w) in row {
+                if (a as u32) < b && best.map(|(_, _, bw)| w > bw).unwrap_or(true) {
+                    best = Some((a as u32, b, w));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// QAP objective: Σ over communicating pairs of `C(a,b) · D(σ(a), σ(b))`.
+pub fn qap_cost(c: &CommGraph, topo: &Topology, sigma: &[u32]) -> i64 {
+    let mut cost = 0i64;
+    for (a, row) in c.comm.iter().enumerate() {
+        for &(b, w) in row {
+            if (a as u32) < b {
+                cost += w * topo.dist(sigma[a] as usize, sigma[b as usize] as usize);
+            }
+        }
+    }
+    cost
+}
+
+/// Cost contribution of block `a` under `sigma` (its half of each pair).
+fn block_cost(c: &CommGraph, topo: &Topology, sigma: &[u32], a: usize) -> i64 {
+    c.comm[a]
+        .iter()
+        .map(|&(b, w)| w * topo.dist(sigma[a] as usize, sigma[b as usize] as usize))
+        .sum()
+}
+
+/// The identity mapping σ(a) = a.
+pub fn identity_mapping(k: usize) -> Vec<u32> {
+    (0..k as u32).collect()
+}
+
+/// A uniformly random permutation (baseline in the mapping bench).
+pub fn random_mapping(k: usize, rng: &mut Rng) -> Vec<u32> {
+    rng.permutation(k)
+}
+
+/// Greedy growing construction (the paper's `GreedyAllC`-style start):
+/// repeatedly take the unmapped block with the largest communication to
+/// already-mapped blocks and put it on the free PE minimizing the added
+/// cost.
+pub fn greedy_mapping(c: &CommGraph, topo: &Topology) -> Vec<u32> {
+    let k = c.k;
+    assert_eq!(topo.num_pes(), k, "blocks must equal PEs");
+    let mut sigma = vec![u32::MAX; k];
+    let mut pe_used = vec![false; k];
+    let mut mapped = vec![false; k];
+    // attach the heaviest communicating pair first, to PEs 0 and its nearest
+    let (first, second) = match c.heaviest_pair() {
+        Some((a, b, _)) => (a as usize, b as usize),
+        None => (0, usize::MAX), // no communication at all
+    };
+    sigma[first] = 0;
+    pe_used[0] = true;
+    mapped[first] = true;
+    if second != usize::MAX {
+        let pe = (0..k).filter(|&p| !pe_used[p]).min_by_key(|&p| topo.dist(0, p)).unwrap();
+        sigma[second] = pe as u32;
+        pe_used[pe] = true;
+        mapped[second] = true;
+    }
+    for _ in 0..k {
+        // most attached unmapped block
+        let mut best: Option<(usize, i64)> = None;
+        for a in 0..k {
+            if mapped[a] {
+                continue;
+            }
+            let attach: i64 =
+                c.comm[a].iter().filter(|&&(b, _)| mapped[b as usize]).map(|&(_, w)| w).sum();
+            if best.map(|(_, bw)| attach > bw).unwrap_or(true) {
+                best = Some((a, attach));
+            }
+        }
+        let Some((a, _)) = best else { break };
+        // cheapest free PE for it
+        let pe = (0..k)
+            .filter(|&p| !pe_used[p])
+            .min_by_key(|&p| {
+                c.comm[a]
+                    .iter()
+                    .filter(|&&(b, _)| mapped[b as usize])
+                    .map(|&(b, w)| w * topo.dist(p, sigma[b as usize] as usize))
+                    .sum::<i64>()
+            })
+            .expect("a free PE must remain");
+        sigma[a] = pe as u32;
+        pe_used[pe] = true;
+        mapped[a] = true;
+    }
+    debug_assert!(sigma.iter().all(|&p| p != u32::MAX));
+    sigma
+}
+
+/// Pairwise-swap local search: repeatedly scan communicating block pairs
+/// (plus a random sample of non-communicating ones) and apply the best
+/// improving swap until no improvement is found. Returns the improvement.
+pub fn swap_local_search(
+    c: &CommGraph,
+    topo: &Topology,
+    sigma: &mut [u32],
+    rng: &mut Rng,
+    max_rounds: usize,
+) -> i64 {
+    let k = c.k;
+    let mut total_gain = 0i64;
+    for _ in 0..max_rounds {
+        let mut round_gain = 0i64;
+        // candidate pairs: endpoints of communication edges × blocks nearby
+        let mut order = rng.permutation(k);
+        order.truncate(k);
+        for &a32 in &order {
+            let a = a32 as usize;
+            // try swapping a with every communicating partner's PE and a
+            // random other block
+            let mut candidates: Vec<usize> =
+                c.comm[a].iter().map(|&(b, _)| b as usize).collect();
+            candidates.push(rng.index(k));
+            let mut best: Option<(usize, i64)> = None;
+            for &b in &candidates {
+                if b == a {
+                    continue;
+                }
+                let before = block_cost(c, topo, sigma, a) + block_cost(c, topo, sigma, b);
+                sigma.swap(a, b);
+                let after = block_cost(c, topo, sigma, a) + block_cost(c, topo, sigma, b);
+                sigma.swap(a, b);
+                // swapping changes the a-b pair's term twice; both halves
+                // are inside `before`/`after`, so the delta is exact.
+                let gain = before - after;
+                if gain > 0 && best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                    best = Some((b, gain));
+                }
+            }
+            if let Some((b, gain)) = best {
+                sigma.swap(a, b);
+                round_gain += gain;
+            }
+        }
+        total_gain += round_gain;
+        if round_gain == 0 {
+            break;
+        }
+    }
+    total_gain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::HierarchySpec;
+
+    /// A comm graph with two cliques of heavy traffic.
+    fn two_cluster_comm() -> CommGraph {
+        // blocks 0,1 talk a lot; blocks 2,3 talk a lot; light cross traffic
+        let comm = vec![
+            vec![(1u32, 100i64), (2, 1)],
+            vec![(0, 100), (3, 1)],
+            vec![(3, 100), (0, 1)],
+            vec![(2, 100), (1, 1)],
+        ];
+        CommGraph { k: 4, comm }
+    }
+
+    fn topo22() -> Topology {
+        // 2 cores per chip, 2 chips; close = 1, far = 10
+        Topology::new(&HierarchySpec::parse("2:2", "1:10").unwrap(), false)
+    }
+
+    #[test]
+    fn comm_graph_from_partition() {
+        let g = crate::graph::generators::grid2d(4, 1); // path 0-1-2-3
+        let p = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1]);
+        let c = CommGraph::from_partition(&g, &p);
+        assert_eq!(c.total_comm(), 1);
+        assert_eq!(c.comm[0], vec![(1, 1)]);
+        assert_eq!(c.heaviest_pair(), Some((0, 1, 1)));
+    }
+
+    #[test]
+    fn qap_cost_identity_vs_bad() {
+        let c = two_cluster_comm();
+        let t = topo22();
+        // identity: heavy pairs (0,1) and (2,3) both intra-chip (dist 1)
+        let good = qap_cost(&c, &t, &[0, 1, 2, 3]);
+        assert_eq!(good, 100 + 100 + 10 + 10);
+        // interleave: heavy pairs straddle chips
+        let bad = qap_cost(&c, &t, &[0, 2, 1, 3]);
+        assert!(bad > good, "bad {bad} good {good}");
+    }
+
+    #[test]
+    fn greedy_keeps_heavy_pairs_close() {
+        let c = two_cluster_comm();
+        let t = topo22();
+        let sigma = greedy_mapping(&c, &t);
+        let cost = qap_cost(&c, &t, &sigma);
+        assert_eq!(cost, 220, "greedy should find the optimal layout");
+    }
+
+    #[test]
+    fn local_search_fixes_interleaving() {
+        let c = two_cluster_comm();
+        let t = topo22();
+        let mut sigma = vec![0u32, 2, 1, 3]; // pessimal
+        let before = qap_cost(&c, &t, &sigma);
+        let mut rng = Rng::new(7);
+        let gain = swap_local_search(&c, &t, &mut sigma, &mut rng, 20);
+        let after = qap_cost(&c, &t, &sigma);
+        assert_eq!(before - after, gain);
+        assert_eq!(after, 220);
+        // sigma stays a permutation
+        let mut s = sigma.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_comm_graph_is_fine() {
+        let c = CommGraph { k: 3, comm: vec![Vec::new(), Vec::new(), Vec::new()] };
+        let t = Topology::new(&HierarchySpec::parse("3", "5").unwrap(), true);
+        let sigma = greedy_mapping(&c, &t);
+        assert_eq!(qap_cost(&c, &t, &sigma), 0);
+        let mut s = sigma;
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Fill-in of an elimination ordering: eliminating node v connects all of
+//! v's not-yet-eliminated neighbors into a clique; every edge created
+//! this way is *fill*. The ordering objective is to minimize it (§2.9).
+
+use crate::graph::Graph;
+
+/// Count fill edges produced by eliminating in `order`.
+/// Straightforward simulation with adjacency sets — O(Σ deg²) with the
+/// fill edges included; fine for the graph sizes the orderer targets.
+pub fn fill_in(g: &Graph, order: &[u32]) -> u64 {
+    let n = g.n();
+    assert_eq!(order.len(), n);
+    let mut pos = vec![0u32; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v as usize] = i as u32;
+    }
+    // adjacency as hash sets, mutated during elimination
+    let mut adj: Vec<std::collections::BTreeSet<u32>> = (0..n as u32)
+        .map(|v| g.neighbors(v).iter().copied().collect())
+        .collect();
+    let mut fill = 0u64;
+    for &v in order {
+        // neighbors eliminated later than v
+        let later: Vec<u32> = adj[v as usize]
+            .iter()
+            .copied()
+            .filter(|&u| pos[u as usize] > pos[v as usize])
+            .collect();
+        for i in 0..later.len() {
+            for j in (i + 1)..later.len() {
+                let (a, b) = (later[i], later[j]);
+                if adj[a as usize].insert(b) {
+                    adj[b as usize].insert(a);
+                    fill += 1;
+                }
+            }
+        }
+    }
+    fill
+}
+
+/// Fill plus original edges = nonzeros of the Cholesky factor (upper half).
+pub fn factor_nonzeros(g: &Graph, order: &[u32]) -> u64 {
+    g.m() as u64 + fill_in(g, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn path_has_zero_fill_in_order() {
+        let g = generators::path(6);
+        let order: Vec<u32> = (0..6).collect();
+        assert_eq!(fill_in(&g, &order), 0);
+    }
+
+    #[test]
+    fn star_center_first_fills_everything() {
+        let g = generators::star(5);
+        // eliminating the hub first connects all 5 leaves: C(5,2) = 10 fill
+        let order: Vec<u32> = (0..6).collect();
+        assert_eq!(fill_in(&g, &order), 10);
+        // leaves first: zero fill
+        let order: Vec<u32> = vec![1, 2, 3, 4, 5, 0];
+        assert_eq!(fill_in(&g, &order), 0);
+    }
+
+    #[test]
+    fn cycle_fill_known() {
+        let g = generators::cycle(5);
+        // any elimination order of a cycle yields n-3 fill edges
+        let order: Vec<u32> = (0..5).collect();
+        assert_eq!(fill_in(&g, &order), 2);
+    }
+
+    #[test]
+    fn factor_nonzeros_includes_edges() {
+        let g = generators::path(4);
+        let order: Vec<u32> = (0..4).collect();
+        assert_eq!(factor_nonzeros(&g, &order), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! Nested dissection (George [13]): find a small node separator, order
+//! both sides recursively, the separator last. Separators come from the
+//! §2.8 machinery (bipartition + vertex cover + flow improvement).
+
+use crate::graph::{subgraph, Graph};
+use crate::partition::config::{Config, Mode};
+use crate::rng::Rng;
+
+/// Below this size, switch to minimum degree.
+const ND_BASE_SIZE: usize = 48;
+
+/// Nested-dissection ordering of `g`.
+pub fn dissect(g: &Graph, mode: Mode, seed: u64) -> Vec<u32> {
+    let mut order = Vec::with_capacity(g.n());
+    let nodes: Vec<u32> = g.nodes().collect();
+    let mut rng = Rng::new(seed);
+    recurse(g, &nodes, mode, &mut rng, &mut order);
+    order
+}
+
+fn recurse(g: &Graph, nodes: &[u32], mode: Mode, rng: &mut Rng, out: &mut Vec<u32>) {
+    if nodes.len() <= ND_BASE_SIZE {
+        let sub = subgraph::induced(g, nodes);
+        let base = super::min_degree::order(&sub.graph);
+        out.extend(base.iter().map(|&v| sub.to_parent[v as usize]));
+        return;
+    }
+    let sub = subgraph::induced(g, nodes);
+    let sg = &sub.graph;
+    // bipartition with generous imbalance (the node_separator default is 20%)
+    let mut cfg = Config::from_mode(mode, 2, 0.20, rng.next_u64());
+    cfg.time_limit = 0.0;
+    cfg.initial_attempts = cfg.initial_attempts.min(4);
+    cfg.global_cycles = 0;
+    let res = crate::coordinator::kaffpa(sg, &cfg, None, None);
+    let sep = crate::separator::bisep::separator_from_bipartition(sg, &res.partition);
+    let in_sep: std::collections::HashSet<u32> = sep.separator.iter().copied().collect();
+    let mut side0: Vec<u32> = Vec::new();
+    let mut side1: Vec<u32> = Vec::new();
+    for v in sg.nodes() {
+        if in_sep.contains(&v) {
+            continue;
+        }
+        if sep.part[v as usize] == 0 {
+            side0.push(sub.to_parent[v as usize]);
+        } else {
+            side1.push(sub.to_parent[v as usize]);
+        }
+    }
+    // degenerate separator (everything swallowed): fall back to min degree
+    if side0.is_empty() && side1.is_empty() {
+        let base = super::min_degree::order(sg);
+        out.extend(base.iter().map(|&v| sub.to_parent[v as usize]));
+        return;
+    }
+    recurse(g, &side0, mode, rng, out);
+    recurse(g, &side1, mode, rng, out);
+    // the separator is ordered last (by min degree among itself)
+    let sep_parents: Vec<u32> =
+        sep.separator.iter().map(|&v| sub.to_parent[v as usize]).collect();
+    let sep_sub = subgraph::induced(g, &sep_parents);
+    let sep_order = super::min_degree::order(&sep_sub.graph);
+    out.extend(sep_order.iter().map(|&v| sep_sub.to_parent[v as usize]));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::ordering::fill_in::fill_in;
+    use crate::ordering::is_permutation;
+
+    #[test]
+    fn nd_is_permutation() {
+        let g = generators::grid2d(10, 10);
+        let o = dissect(&g, Mode::Eco, 1);
+        assert!(is_permutation(&o, g.n()));
+    }
+
+    #[test]
+    fn nd_beats_identity_significantly_on_grids() {
+        let g = generators::grid2d(12, 12);
+        let nd = dissect(&g, Mode::Eco, 2);
+        let id: Vec<u32> = g.nodes().collect();
+        // At n=144 the banded identity order of a grid is already decent;
+        // ND wins by a clear margin (its asymptotic edge shows at larger
+        // sizes — see benches/ordering.rs). Require >= 25% improvement.
+        let (f_nd, f_id) = (fill_in(&g, &nd), fill_in(&g, &id));
+        assert!(
+            (f_nd as f64) < 0.75 * f_id as f64,
+            "nested dissection should clearly beat identity fill: {f_nd} vs {f_id}"
+        );
+    }
+
+    #[test]
+    fn nd_handles_disconnected_graphs() {
+        let mut b = crate::graph::GraphBuilder::new(60);
+        // two disjoint 30-node paths — ND must not panic on disconnection
+        for v in 0..29u32 {
+            b.add_edge(v, v + 1, 1);
+            b.add_edge(v + 30, v + 31, 1);
+        }
+        let g = b.build().unwrap();
+        let o = dissect(&g, Mode::Fast, 3);
+        assert!(is_permutation(&o, 60));
+    }
+
+    #[test]
+    fn small_graph_uses_base_case() {
+        let g = generators::complete(8);
+        let o = dissect(&g, Mode::Fast, 4);
+        assert!(is_permutation(&o, 8));
+        assert_eq!(fill_in(&g, &o), 0);
+    }
+}

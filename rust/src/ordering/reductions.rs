@@ -1,0 +1,378 @@
+//! Data reductions for node ordering (§2.9): applied exhaustively before
+//! nested dissection, they shrink the instance while provably not
+//! hurting the achievable fill-in:
+//!
+//! * **simplicial node** — a node whose alive neighborhood is a clique
+//!   eliminates with zero fill: order it in the prefix.
+//! * **degree-2 node** — eliminate early; its single fill edge (between
+//!   its two neighbors) is added to the reduced graph.
+//! * **path compression** — a maximal chain of degree-2 nodes is the
+//!   degree-2 rule applied along the chain.
+//! * **indistinguishable nodes** (N[u] = N[v]) and **twins**
+//!   (N(u) = N(v)) — merge v into u; v is placed immediately before u in
+//!   the expanded order (symmetric roles, no fill beyond u's own clique).
+//! * **triangle contraction** — the adjacent-domination case
+//!   N[v] ⊆ N[u]: merge v into u; v is eliminated immediately before u,
+//!   where its fill is contained in the clique u creates anyway.
+//!
+//! The expansion replays the reduction log, so
+//! `fill(expanded) = fill(reduction prefix) + fill(core order)`.
+
+use super::Reduction;
+use crate::graph::{Graph, GraphBuilder};
+use std::collections::{BTreeSet, HashMap};
+
+/// Result of the reduction phase.
+pub struct Reduced {
+    /// the reduced ("core") graph over renumbered alive nodes
+    pub core: Graph,
+    /// core node id -> original node id
+    pub core_to_orig: Vec<u32>,
+    /// original ids eliminated into the order prefix, in elimination order
+    prefix: Vec<u32>,
+    /// rep original id -> merged nodes to emit right after it
+    attached: HashMap<u32, Vec<u32>>,
+}
+
+impl Reduced {
+    /// Expand a core ordering into a full ordering of the original graph.
+    pub fn expand_order(&self, core_order: &[u32]) -> Vec<u32> {
+        let mut out = Vec::new();
+        // prefix nodes may also carry attachments
+        for &v in &self.prefix {
+            self.emit(v, &mut out);
+        }
+        for &c in core_order {
+            self.emit(self.core_to_orig[c as usize], &mut out);
+        }
+        out
+    }
+
+    fn emit(&self, v: u32, out: &mut Vec<u32>) {
+        // attachments first: a merged node w satisfies N[w] ⊆ N[v] (or
+        // N(w) = N(v)) at merge time, so eliminating w *before* v incurs
+        // only fill contained in the clique v's elimination creates
+        // anyway. The reverse order is strictly worse for domination
+        // merges (it adds edges between w and all of N(v)).
+        if let Some(att) = self.attached.get(&v) {
+            for &w in att {
+                self.emit(w, out);
+            }
+        }
+        out.push(v);
+    }
+}
+
+/// Apply the reductions in `order` with *priority semantics*: each rule
+/// is swept exhaustively, and whenever a later rule changes the graph the
+/// pass restarts from the first rule. Earlier rules are therefore always
+/// at a fixpoint when a later one fires — e.g. with the default order,
+/// degree-2 elimination (which pays one fill edge) never preempts a
+/// zero-fill simplicial elimination, so trees reduce away fill-free.
+pub fn apply(g: &Graph, order: &[Reduction]) -> Reduced {
+    let n = g.n();
+    let mut adj: Vec<BTreeSet<u32>> = (0..n as u32)
+        .map(|v| g.neighbors(v).iter().copied().collect())
+        .collect();
+    let mut alive = vec![true; n];
+    let mut prefix: Vec<u32> = Vec::new();
+    let mut attached: HashMap<u32, Vec<u32>> = HashMap::new();
+
+    const MAX_SIMPLICIAL_DEG: usize = 12;
+
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &rule in order {
+            match rule {
+                Reduction::SimplicialNodes => {
+                    for v in 0..n as u32 {
+                        if !alive[v as usize] {
+                            continue;
+                        }
+                        let d = adj[v as usize].len();
+                        if d > MAX_SIMPLICIAL_DEG {
+                            continue;
+                        }
+                        if is_clique(&adj, &adj[v as usize]) {
+                            eliminate_no_fill(&mut adj, &mut alive, v, &mut prefix);
+                            changed = true;
+                        }
+                    }
+                }
+                Reduction::Degree2Nodes | Reduction::PathCompression => {
+                    // path compression == exhaustive degree-2 elimination
+                    // walked chain-wise; both reduce to this loop
+                    for v in 0..n as u32 {
+                        if !alive[v as usize] || adj[v as usize].len() != 2 {
+                            continue;
+                        }
+                        let mut it = adj[v as usize].iter();
+                        let a = *it.next().unwrap();
+                        let b = *it.next().unwrap();
+                        // remove v, connect a-b (fill edge, already there if triangle)
+                        adj[a as usize].remove(&v);
+                        adj[b as usize].remove(&v);
+                        adj[a as usize].insert(b);
+                        adj[b as usize].insert(a);
+                        adj[v as usize].clear();
+                        alive[v as usize] = false;
+                        prefix.push(v);
+                        changed = true;
+                    }
+                }
+                Reduction::IndistinguishableNodes
+                | Reduction::Twins
+                | Reduction::TriangleContraction => {
+                    // bucket by a neighborhood hash to find candidates fast
+                    let closed = rule == Reduction::IndistinguishableNodes;
+                    if rule == Reduction::TriangleContraction {
+                        // adjacent domination N[v] ⊆ N[u]
+                        for v in 0..n as u32 {
+                            if !alive[v as usize]
+                                || adj[v as usize].is_empty()
+                                || adj[v as usize].len() > MAX_SIMPLICIAL_DEG
+                            {
+                                continue;
+                            }
+                            let nbrs: Vec<u32> = adj[v as usize].iter().copied().collect();
+                            for &u in &nbrs {
+                                if !alive[u as usize] {
+                                    continue;
+                                }
+                                // N[v] ⊆ N[u]?
+                                let dominated = adj[v as usize]
+                                    .iter()
+                                    .all(|&w| w == u || adj[u as usize].contains(&w));
+                                if dominated {
+                                    merge(&mut adj, &mut alive, &mut attached, u, v);
+                                    changed = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if changed {
+                            break; // restart from the first rule
+                        }
+                        continue;
+                    }
+                    let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+                    for v in 0..n as u32 {
+                        if !alive[v as usize] {
+                            continue;
+                        }
+                        let h = hash_neighborhood(&adj[v as usize], if closed { Some(v) } else { None });
+                        buckets.entry(h).or_default().push(v);
+                    }
+                    for (_, cand) in buckets {
+                        if cand.len() < 2 {
+                            continue;
+                        }
+                        for i in 0..cand.len() {
+                            let u = cand[i];
+                            if !alive[u as usize] {
+                                continue;
+                            }
+                            for &v in &cand[i + 1..] {
+                                if !alive[v as usize] {
+                                    continue;
+                                }
+                                let equal = if closed {
+                                    closed_eq(&adj, u, v)
+                                } else {
+                                    adj[u as usize] == adj[v as usize]
+                                };
+                                if equal {
+                                    merge(&mut adj, &mut alive, &mut attached, u, v);
+                                    changed = true;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if changed {
+                break; // restart from the first rule (priority semantics)
+            }
+        }
+    }
+
+    // build the core graph over alive nodes
+    let alive_nodes: Vec<u32> = (0..n as u32).filter(|&v| alive[v as usize]).collect();
+    let mut orig_to_core = vec![u32::MAX; n];
+    for (i, &v) in alive_nodes.iter().enumerate() {
+        orig_to_core[v as usize] = i as u32;
+    }
+    let mut b = GraphBuilder::new(alive_nodes.len());
+    for &v in &alive_nodes {
+        for &u in &adj[v as usize] {
+            debug_assert!(alive[u as usize]);
+            if v < u {
+                b.add_edge(orig_to_core[v as usize], orig_to_core[u as usize], 1);
+            }
+        }
+    }
+    Reduced {
+        core: b.build().expect("reduced graph valid"),
+        core_to_orig: alive_nodes,
+        prefix,
+        attached,
+    }
+}
+
+fn is_clique(adj: &[BTreeSet<u32>], nodes: &BTreeSet<u32>) -> bool {
+    for &a in nodes {
+        for &b in nodes {
+            if a < b && !adj[a as usize].contains(&b) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn eliminate_no_fill(
+    adj: &mut [BTreeSet<u32>],
+    alive: &mut [bool],
+    v: u32,
+    prefix: &mut Vec<u32>,
+) {
+    let nbrs: Vec<u32> = adj[v as usize].iter().copied().collect();
+    for u in nbrs {
+        adj[u as usize].remove(&v);
+    }
+    adj[v as usize].clear();
+    alive[v as usize] = false;
+    prefix.push(v);
+}
+
+/// Merge v into u: v disappears from the reduced graph, emitted right
+/// before u on expansion.
+fn merge(
+    adj: &mut [BTreeSet<u32>],
+    alive: &mut [bool],
+    attached: &mut HashMap<u32, Vec<u32>>,
+    u: u32,
+    v: u32,
+) {
+    let nbrs: Vec<u32> = adj[v as usize].iter().copied().collect();
+    for w in nbrs {
+        adj[w as usize].remove(&v);
+    }
+    adj[v as usize].clear();
+    alive[v as usize] = false;
+    attached.entry(u).or_default().push(v);
+}
+
+fn hash_neighborhood(nbrs: &BTreeSet<u32>, include_self: Option<u32>) -> u64 {
+    let mut h = 1469598103934665603u64;
+    let mut mix = |x: u32| {
+        // order-independent: sum of per-element hashes
+        let mut z = x as u64;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        h = h.wrapping_add(z);
+    };
+    for &x in nbrs {
+        mix(x);
+    }
+    if let Some(s) = include_self {
+        mix(s);
+    }
+    h
+}
+
+fn closed_eq(adj: &[BTreeSet<u32>], u: u32, v: u32) -> bool {
+    // N[u] == N[v] requires u ~ v
+    if !adj[u as usize].contains(&v) {
+        return false;
+    }
+    if adj[u as usize].len() != adj[v as usize].len() {
+        return false;
+    }
+    adj[u as usize]
+        .iter()
+        .all(|&w| w == v || adj[v as usize].contains(&w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::ordering::fill_in::fill_in;
+    use crate::ordering::{is_permutation, Reduction};
+
+    #[test]
+    fn path_graph_fully_reduces() {
+        let g = generators::path(10);
+        let r = apply(&g, &Reduction::DEFAULT_ORDER);
+        assert!(r.core.n() <= 2, "a path should reduce away, core={}", r.core.n());
+        let order = r.expand_order(&(0..r.core.n() as u32).collect::<Vec<_>>());
+        assert!(is_permutation(&order, 10));
+        assert_eq!(fill_in(&g, &order), 0, "path must order with zero fill");
+    }
+
+    #[test]
+    fn tree_reduces_to_nothing_with_zero_fill() {
+        let g = generators::binary_tree(5); // 31 nodes
+        let r = apply(&g, &Reduction::DEFAULT_ORDER);
+        assert_eq!(r.core.n(), 0, "trees are fully reducible");
+        let order = r.expand_order(&[]);
+        assert!(is_permutation(&order, g.n()));
+        assert_eq!(fill_in(&g, &order), 0);
+    }
+
+    #[test]
+    fn complete_graph_reduces_fully() {
+        let g = generators::complete(6);
+        let r = apply(&g, &Reduction::DEFAULT_ORDER);
+        // every node of a clique is simplicial
+        assert_eq!(r.core.n(), 0);
+        let order = r.expand_order(&[]);
+        assert_eq!(fill_in(&g, &order), 0);
+    }
+
+    #[test]
+    fn twins_merge() {
+        // two non-adjacent nodes with the same neighborhood
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge(0, 2, 1);
+        b.add_edge(0, 3, 1);
+        b.add_edge(1, 2, 1);
+        b.add_edge(1, 3, 1);
+        let g = b.build().unwrap(); // 0 and 1 are twins (N = {2,3}); 2,3 twins too
+        let r = apply(&g, &[Reduction::Twins]);
+        assert!(r.core.n() <= 2);
+        let order = r.expand_order(&(0..r.core.n() as u32).collect::<Vec<_>>());
+        assert!(is_permutation(&order, 4));
+        // C4 needs exactly 1 fill edge; twin-aware order achieves it
+        assert_eq!(fill_in(&g, &order), 1);
+    }
+
+    #[test]
+    fn grid_partially_reduces_without_hurting_fill() {
+        let g = generators::grid2d(7, 7);
+        let r = apply(&g, &Reduction::DEFAULT_ORDER);
+        // corners are degree-2: at least those go
+        assert!(r.core.n() < g.n());
+        let core_order = crate::ordering::min_degree::order(&r.core);
+        let order = r.expand_order(&core_order);
+        assert!(is_permutation(&order, g.n()));
+        let direct = crate::ordering::min_degree::order(&g);
+        // reductions should not make things dramatically worse
+        assert!(fill_in(&g, &order) <= fill_in(&g, &direct) + g.n() as u64);
+    }
+
+    #[test]
+    fn prop_expansion_is_permutation() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 4 + case % 50;
+            let g = generators::random_weighted(n, 2 * n, 1, 1, rng);
+            let r = apply(&g, &Reduction::DEFAULT_ORDER);
+            let mut core_order: Vec<u32> = (0..r.core.n() as u32).collect();
+            rng.shuffle(&mut core_order);
+            let order = r.expand_order(&core_order);
+            crate::prop_assert!(is_permutation(&order, n), "expansion broke permutation");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! A simulated message-passing world — the MPI stand-in for ParHIP,
+//! kaffpaE's rumor spreading and distributed edge partitioning.
+//!
+//! Ranks are OS threads; messages are `(from, tag, Vec<u64>)` over mpsc
+//! channels; collectives (barrier, allreduce, bcast, alltoallv) are built
+//! from point-to-point exactly like a textbook MPI layer. The algorithms
+//! above see only this interface, so their communication structure is the
+//! same as with real MPI — the wire is the only thing missing.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// Message payloads are flat u64 vectors (ids/weights packed by caller).
+pub type Payload = Vec<u64>;
+
+struct Mailbox {
+    rx: Receiver<(usize, u32, Payload)>,
+    /// out-of-order buffer
+    stash: Vec<(usize, u32, Payload)>,
+}
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    pub rank: usize,
+    pub size: usize,
+    txs: Vec<Sender<(usize, u32, Payload)>>,
+    mailbox: Mailbox,
+    barrier: Arc<Barrier>,
+}
+
+impl Comm {
+    /// Send `payload` to `to` with `tag`.
+    pub fn send(&self, to: usize, tag: u32, payload: Payload) {
+        self.txs[to].send((self.rank, tag, payload)).expect("peer alive");
+    }
+
+    /// Blocking receive of a message from `from` with `tag`.
+    pub fn recv(&mut self, from: usize, tag: u32) -> Payload {
+        // check the stash first
+        if let Some(pos) = self
+            .mailbox
+            .stash
+            .iter()
+            .position(|(f, t, _)| *f == from && *t == tag)
+        {
+            return self.mailbox.stash.swap_remove(pos).2;
+        }
+        loop {
+            let (f, t, p) = self.mailbox.rx.recv().expect("world alive");
+            if f == from && t == tag {
+                return p;
+            }
+            self.mailbox.stash.push((f, t, p));
+        }
+    }
+
+    /// Synchronize all ranks.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// All-to-all personalized exchange: `out[r]` goes to rank `r`;
+    /// returns `in_[r]` = what rank `r` sent here.
+    pub fn alltoallv(&mut self, tag: u32, mut out: Vec<Payload>) -> Vec<Payload> {
+        assert_eq!(out.len(), self.size);
+        let mine = std::mem::take(&mut out[self.rank]);
+        for (r, payload) in out.into_iter().enumerate() {
+            if r != self.rank {
+                self.send(r, tag, payload);
+            }
+        }
+        let mut result: Vec<Payload> = (0..self.size).map(|_| Vec::new()).collect();
+        result[self.rank] = mine;
+        for r in 0..self.size {
+            if r != self.rank {
+                result[r] = self.recv(r, tag);
+            }
+        }
+        result
+    }
+
+    /// Sum-allreduce of a u64 vector (tree-free: gather at 0, bcast).
+    pub fn allreduce_sum(&mut self, tag: u32, mut values: Vec<u64>) -> Vec<u64> {
+        if self.size == 1 {
+            return values;
+        }
+        if self.rank == 0 {
+            for r in 1..self.size {
+                let v = self.recv(r, tag);
+                for (a, b) in values.iter_mut().zip(v.iter()) {
+                    *a = a.wrapping_add(*b);
+                }
+            }
+            for r in 1..self.size {
+                self.send(r, tag + 1, values.clone());
+            }
+            values
+        } else {
+            self.send(0, tag, values);
+            self.recv(0, tag + 1)
+        }
+    }
+
+    /// Broadcast from `root`.
+    pub fn bcast(&mut self, tag: u32, root: usize, value: Payload) -> Payload {
+        if self.size == 1 {
+            return value;
+        }
+        if self.rank == root {
+            for r in 0..self.size {
+                if r != root {
+                    self.send(r, tag, value.clone());
+                }
+            }
+            value
+        } else {
+            self.recv(root, tag)
+        }
+    }
+
+    /// Gather variable-size payloads at `root`; Some(all) at root.
+    pub fn gather(&mut self, tag: u32, root: usize, value: Payload) -> Option<Vec<Payload>> {
+        if self.rank == root {
+            let mut all: Vec<Payload> = (0..self.size).map(|_| Vec::new()).collect();
+            all[root] = value;
+            for r in 0..self.size {
+                if r != root {
+                    all[r] = self.recv(r, tag);
+                }
+            }
+            Some(all)
+        } else {
+            self.send(root, tag, value);
+            None
+        }
+    }
+}
+
+/// Run `f(comm)` on `size` ranks; returns per-rank results in rank order.
+pub fn run_world<T, F>(size: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Comm) -> T + Sync,
+{
+    assert!(size >= 1);
+    let mut txs = Vec::with_capacity(size);
+    let mut rxs = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(size));
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(size);
+        for (rank, rx) in rxs.into_iter().enumerate() {
+            let comm = Comm {
+                rank,
+                size,
+                txs: txs.clone(),
+                mailbox: Mailbox { rx, stash: Vec::new() },
+                barrier: Arc::clone(&barrier),
+            };
+            let f = &f;
+            handles.push(s.spawn(move || f(comm)));
+        }
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_ring() {
+        let out = run_world(4, |mut c| {
+            let next = (c.rank + 1) % c.size;
+            let prev = (c.rank + c.size - 1) % c.size;
+            c.send(next, 1, vec![c.rank as u64]);
+            let got = c.recv(prev, 1);
+            got[0]
+        });
+        assert_eq!(out, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        let out = run_world(5, |mut c| c.allreduce_sum(10, vec![c.rank as u64, 1]));
+        for v in out {
+            assert_eq!(v, vec![0 + 1 + 2 + 3 + 4, 5]);
+        }
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let out = run_world(3, |mut c| {
+            let v = if c.rank == 2 { vec![42, 7] } else { vec![] };
+            c.bcast(20, 2, v)
+        });
+        for v in out {
+            assert_eq!(v, vec![42, 7]);
+        }
+    }
+
+    #[test]
+    fn alltoallv_exchanges() {
+        let out = run_world(3, |mut c| {
+            let outmsgs: Vec<Vec<u64>> =
+                (0..3).map(|r| vec![(c.rank * 10 + r) as u64]).collect();
+            c.alltoallv(30, outmsgs)
+        });
+        // rank r receives from each sender s: s*10 + r
+        for (r, inbox) in out.iter().enumerate() {
+            for (s, msg) in inbox.iter().enumerate() {
+                assert_eq!(msg, &vec![(s * 10 + r) as u64]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_at_root() {
+        let out = run_world(4, |mut c| c.gather(40, 1, vec![c.rank as u64; c.rank + 1]));
+        for (r, res) in out.iter().enumerate() {
+            if r == 1 {
+                let all = res.as_ref().unwrap();
+                for (s, v) in all.iter().enumerate() {
+                    assert_eq!(v.len(), s + 1);
+                }
+            } else {
+                assert!(res.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_world() {
+        let out = run_world(1, |mut c| {
+            let r = c.allreduce_sum(1, vec![5]);
+            let b = c.bcast(2, 0, vec![9]);
+            (r[0], b[0])
+        });
+        assert_eq!(out, vec![(5, 9)]);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let out = run_world(2, |mut c| {
+            if c.rank == 0 {
+                c.send(1, 5, vec![50]);
+                c.send(1, 6, vec![60]);
+                0
+            } else {
+                // receive in reverse tag order
+                let b = c.recv(0, 6);
+                let a = c.recv(0, 5);
+                (a[0] * 100 + b[0]) as usize
+            }
+        });
+        assert_eq!(out[1], 50 * 100 + 60);
+    }
+}

@@ -1,0 +1,165 @@
+//! The distributed graph: nodes are split into contiguous ranges, one per
+//! rank; each rank stores the CSR rows of its own nodes (with *global*
+//! column ids) plus a ghost table for remote endpoints it is adjacent to.
+//! This mirrors ParHIP's distribution of the binary format (§3.1.2).
+
+use crate::graph::Graph;
+
+/// One rank's share of the graph.
+#[derive(Clone, Debug)]
+pub struct DistGraph {
+    pub rank: usize,
+    pub size: usize,
+    /// global number of nodes
+    pub global_n: usize,
+    /// owned range [begin, end)
+    pub begin: u32,
+    pub end: u32,
+    /// CSR over owned nodes; columns are global ids
+    pub xadj: Vec<u32>,
+    pub adjncy: Vec<u32>,
+    pub adjwgt: Vec<i64>,
+    pub vwgt: Vec<i64>,
+    /// sorted global ids of ghost (remote, adjacent) nodes
+    pub ghosts: Vec<u32>,
+}
+
+/// Where node `v` lives under the balanced contiguous distribution.
+pub fn owner_of(global_n: usize, size: usize, v: u32) -> usize {
+    let per = global_n.div_ceil(size);
+    (v as usize / per).min(size - 1)
+}
+
+/// Range owned by `rank`.
+pub fn range_of(global_n: usize, size: usize, rank: usize) -> (u32, u32) {
+    let per = global_n.div_ceil(size);
+    let b = (rank * per).min(global_n);
+    let e = ((rank + 1) * per).min(global_n);
+    (b as u32, e as u32)
+}
+
+impl DistGraph {
+    /// Carve rank `rank`'s share out of a full graph (the simulation of
+    /// parallel I/O on the binary format).
+    pub fn from_graph(g: &Graph, rank: usize, size: usize) -> DistGraph {
+        let (begin, end) = range_of(g.n(), size, rank);
+        let local_n = (end - begin) as usize;
+        let mut xadj = Vec::with_capacity(local_n + 1);
+        xadj.push(0u32);
+        let mut adjncy = Vec::new();
+        let mut adjwgt = Vec::new();
+        let mut vwgt = Vec::with_capacity(local_n);
+        let mut ghost_set = std::collections::BTreeSet::new();
+        for v in begin..end {
+            vwgt.push(g.node_weight(v));
+            for (u, w) in g.neighbors_w(v) {
+                adjncy.push(u);
+                adjwgt.push(w);
+                if !(begin..end).contains(&u) {
+                    ghost_set.insert(u);
+                }
+            }
+            xadj.push(adjncy.len() as u32);
+        }
+        DistGraph {
+            rank,
+            size,
+            global_n: g.n(),
+            begin,
+            end,
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt,
+            ghosts: ghost_set.into_iter().collect(),
+        }
+    }
+
+    pub fn local_n(&self) -> usize {
+        (self.end - self.begin) as usize
+    }
+
+    pub fn owns(&self, v: u32) -> bool {
+        (self.begin..self.end).contains(&v)
+    }
+
+    /// Neighbors (global ids) of an owned node (global id).
+    pub fn neighbors_w(&self, v: u32) -> impl Iterator<Item = (u32, i64)> + '_ {
+        debug_assert!(self.owns(v));
+        let l = (v - self.begin) as usize;
+        let r = self.xadj[l] as usize..self.xadj[l + 1] as usize;
+        self.adjncy[r.clone()].iter().copied().zip(self.adjwgt[r].iter().copied())
+    }
+
+    pub fn node_weight(&self, v: u32) -> i64 {
+        debug_assert!(self.owns(v));
+        self.vwgt[(v - self.begin) as usize]
+    }
+
+    /// Ranks owning at least one of this rank's ghosts (its comm peers).
+    pub fn peer_ranks(&self) -> Vec<usize> {
+        let mut peers: Vec<usize> = self
+            .ghosts
+            .iter()
+            .map(|&v| owner_of(self.global_n, self.size, v))
+            .collect();
+        peers.sort_unstable();
+        peers.dedup();
+        peers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn ranges_cover_everything() {
+        for n in [1usize, 7, 16, 100] {
+            for size in [1usize, 2, 3, 5] {
+                let mut covered = 0usize;
+                for r in 0..size {
+                    let (b, e) = range_of(n, size, r);
+                    covered += (e - b) as usize;
+                    for v in b..e {
+                        assert_eq!(owner_of(n, size, v), r);
+                    }
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn shards_cover_all_edges() {
+        let g = generators::grid2d(8, 5);
+        let size = 3;
+        let mut half_edges = 0usize;
+        for r in 0..size {
+            let d = DistGraph::from_graph(&g, r, size);
+            half_edges += d.adjncy.len();
+            // every listed neighbor is a real edge
+            for v in d.begin..d.end {
+                for (u, w) in d.neighbors_w(v) {
+                    let found = g.neighbors_w(v).any(|(gu, gw)| gu == u && gw == w);
+                    assert!(found);
+                }
+            }
+        }
+        assert_eq!(half_edges, g.half_edges());
+    }
+
+    #[test]
+    fn ghosts_are_remote_and_adjacent() {
+        let g = generators::grid2d(6, 6);
+        let d = DistGraph::from_graph(&g, 1, 3);
+        for &ghost in &d.ghosts {
+            assert!(!d.owns(ghost));
+            let adjacent = (d.begin..d.end)
+                .any(|v| d.neighbors_w(v).any(|(u, _)| u == ghost));
+            assert!(adjacent);
+        }
+        assert!(!d.peer_ranks().contains(&1));
+    }
+}

@@ -1,0 +1,241 @@
+//! Distributed size-constrained label propagation (§2.5, [24]) — the
+//! workhorse ParHIP uses for both coarsening (labels = cluster ids) and
+//! refinement (labels = block ids, bound = the balance constraint).
+//!
+//! Each iteration: every rank sweeps its owned nodes, moving each to the
+//! strongest feasible neighboring label using its cached ghost labels;
+//! then boundary label updates travel to peer ranks with one alltoallv
+//! and label weights are re-synchronized with an allreduce of deltas —
+//! ParHIP's "approximate weights, exact at iteration boundaries" scheme.
+
+use super::comm::Comm;
+use super::dist_graph::{owner_of, DistGraph};
+use std::collections::HashMap;
+
+/// Distributed LP. `labels` holds the label of every *global* node this
+/// rank knows (owned + ghosts); on entry it must agree across ranks for
+/// shared nodes. `weight_of_label` must be globally consistent.
+/// Returns the final labels of the *owned* range.
+#[allow(clippy::too_many_arguments)]
+pub struct DistLpParams {
+    pub iterations: usize,
+    /// max total node weight per label (i64::MAX = unconstrained)
+    pub upper_bound: i64,
+    /// base tag for this LP run's messages
+    pub tag: u32,
+}
+
+pub fn run(
+    dg: &DistGraph,
+    comm: &mut Comm,
+    params: &DistLpParams,
+    init_label: impl Fn(u32) -> u32,
+    init_label_weight: &HashMap<u32, i64>,
+) -> Vec<u32> {
+    let mut label: HashMap<u32, u32> = HashMap::new();
+    for v in dg.begin..dg.end {
+        label.insert(v, init_label(v));
+    }
+    for &gst in &dg.ghosts {
+        label.insert(gst, init_label(gst));
+    }
+    let mut weights: HashMap<u32, i64> = init_label_weight.clone();
+    let mut conn: HashMap<u32, i64> = HashMap::new();
+    assert!(dg.size <= 64, "simulated world capped at 64 ranks");
+
+    for it in 0..params.iterations {
+        let tag = params.tag + (it as u32) * 4;
+        let mut moved: Vec<(u32, u32)> = Vec::new(); // (node, new label)
+        let mut deltas: HashMap<u32, i64> = HashMap::new();
+        // Capacity splitting: `weights` is globally exact at iteration
+        // start (re-synced below); each rank may claim at most a 1/size
+        // share of any label's remaining capacity this iteration, so the
+        // bound holds globally without per-move communication. (ParHIP
+        // races optimistically and repairs later; splitting is the
+        // deterministic variant — see DESIGN.md.)
+        let mut local_added: HashMap<u32, i64> = HashMap::new();
+        for v in dg.begin..dg.end {
+            let own = label[&v];
+            let vw = dg.node_weight(v);
+            conn.clear();
+            for (u, w) in dg.neighbors_w(v) {
+                *conn.entry(label[&u]).or_insert(0) += w;
+            }
+            let own_conn = conn.get(&own).copied().unwrap_or(0);
+            let mut best = own;
+            let mut best_conn = own_conn;
+            // deterministic tie-break: smaller label id wins among equals
+            let mut cands: Vec<(&u32, &i64)> = conn.iter().collect();
+            cands.sort_unstable_by_key(|(l, _)| **l);
+            for (&l, &c) in cands {
+                if l == own {
+                    continue;
+                }
+                let fits = if params.upper_bound == i64::MAX {
+                    true
+                } else {
+                    let share = (params.upper_bound
+                        - weights.get(&l).copied().unwrap_or(0))
+                        / dg.size as i64;
+                    local_added.get(&l).copied().unwrap_or(0) + vw <= share
+                };
+                if fits && c > best_conn {
+                    best = l;
+                    best_conn = c;
+                }
+            }
+            if best != own {
+                label.insert(v, best);
+                *local_added.entry(best).or_insert(0) += vw;
+                *deltas.entry(own).or_insert(0) -= vw;
+                *deltas.entry(best).or_insert(0) += vw;
+                moved.push((v, best));
+            }
+        }
+        // exchange boundary label updates with peers
+        let mut out: Vec<Vec<u64>> = (0..dg.size).map(|_| Vec::new()).collect();
+        for &(v, l) in &moved {
+            // send to every peer that might hold v as a ghost: ranks owning
+            // a neighbor of v
+            let mut sent = [false; 64];
+            for (u, _) in dg.neighbors_w(v) {
+                let r = owner_of(dg.global_n, dg.size, u);
+                if r != dg.rank && !sent[r % 64] {
+                    out[r].push(v as u64);
+                    out[r].push(l as u64);
+                    sent[r % 64] = true;
+                }
+            }
+        }
+        let inbox = comm.alltoallv(tag, out);
+        for msgs in inbox {
+            for pair in msgs.chunks(2) {
+                label.insert(pair[0] as u32, pair[1] as u32);
+            }
+        }
+        // re-synchronize label weights exactly: allreduce the deltas others
+        // made (our own already applied). Pack as (label, delta+bias).
+        let mut flat: Vec<u64> = Vec::with_capacity(deltas.len() * 2);
+        for (&l, &d) in &deltas {
+            flat.push(l as u64);
+            flat.push((d + (1i64 << 40)) as u64); // bias to keep it unsigned
+        }
+        let all = comm.gather(tag + 2, 0, flat);
+        let merged: Vec<u64> = if dg.rank == 0 {
+            let mut m: HashMap<u32, i64> = HashMap::new();
+            for msgs in all.unwrap() {
+                for pair in msgs.chunks(2) {
+                    *m.entry(pair[0] as u32).or_insert(0) +=
+                        pair[1] as i64 - (1i64 << 40);
+                }
+            }
+            let mut flat = Vec::with_capacity(m.len() * 2);
+            let mut items: Vec<(u32, i64)> = m.into_iter().collect();
+            items.sort_unstable();
+            for (l, d) in items {
+                flat.push(l as u64);
+                flat.push((d + (1i64 << 40)) as u64);
+            }
+            flat
+        } else {
+            Vec::new()
+        };
+        let merged = comm.bcast(tag + 3, 0, merged);
+        // apply the merged global deltas (local deltas were tracked
+        // separately and are included in `merged`)
+        for pair in merged.chunks(2) {
+            *weights.entry(pair[0] as u32).or_insert(0) += pair[1] as i64 - (1i64 << 40);
+        }
+    }
+    (dg.begin..dg.end).map(|v| label[&v]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::parhip::comm::run_world;
+    use crate::parhip::dist_graph::DistGraph;
+
+    /// Distributed LP must respect the size constraint globally.
+    #[test]
+    fn respects_global_size_constraint() {
+        let g = generators::grid2d(10, 10);
+        let bound = 20i64;
+        let size = 3;
+        let init_weights: HashMap<u32, i64> =
+            g.nodes().map(|v| (v, g.node_weight(v))).collect();
+        let results = run_world(size, |mut comm| {
+            let dg = DistGraph::from_graph(&g, comm.rank, size);
+            let params = DistLpParams { iterations: 6, upper_bound: bound, tag: 100 };
+            run(&dg, &mut comm, &params, |v| v, &init_weights)
+        });
+        // stitch the global labeling
+        let mut labels = Vec::new();
+        for r in results {
+            labels.extend(r);
+        }
+        assert_eq!(labels.len(), g.n());
+        let mut w: HashMap<u32, i64> = HashMap::new();
+        for v in g.nodes() {
+            *w.entry(labels[v as usize]).or_insert(0) += g.node_weight(v);
+        }
+        for (&l, &lw) in &w {
+            assert!(lw <= bound, "label {l} weight {lw} > {bound}");
+        }
+        // and it must actually cluster (fewer labels than nodes)
+        assert!(w.len() < g.n(), "LP should merge nodes: {} labels", w.len());
+    }
+
+    /// One rank behaves like the sequential algorithm family.
+    #[test]
+    fn single_rank_clusters_cliques() {
+        let mut b = crate::graph::GraphBuilder::new(8);
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                b.add_edge(u, v, 1);
+                b.add_edge(u + 4, v + 4, 1);
+            }
+        }
+        b.add_edge(3, 4, 1);
+        let g = b.build().unwrap();
+        let init_weights: HashMap<u32, i64> = g.nodes().map(|v| (v, 1)).collect();
+        let results = run_world(1, |mut comm| {
+            let dg = DistGraph::from_graph(&g, 0, 1);
+            let params = DistLpParams { iterations: 8, upper_bound: 4, tag: 200 };
+            run(&dg, &mut comm, &params, |v| v, &init_weights)
+        });
+        let labels = &results[0];
+        assert!(labels[..4].iter().all(|&l| l == labels[0]));
+        assert!(labels[4..].iter().all(|&l| l == labels[4]));
+        assert_ne!(labels[0], labels[4]);
+    }
+
+    /// Rank count must not change the invariants (determinism modulo
+    /// sweep interleaving is too strong to demand; constraints are not).
+    #[test]
+    fn various_rank_counts_valid() {
+        let mut rng = crate::rng::Rng::new(1);
+        let g = generators::barabasi_albert(120, 3, &mut rng);
+        let init_weights: HashMap<u32, i64> = g.nodes().map(|v| (v, 1)).collect();
+        for size in [1usize, 2, 4] {
+            let bound = 30i64;
+            let results = run_world(size, |mut comm| {
+                let dg = DistGraph::from_graph(&g, comm.rank, size);
+                let params = DistLpParams { iterations: 5, upper_bound: bound, tag: 300 };
+                run(&dg, &mut comm, &params, |v| v, &init_weights)
+            });
+            let mut labels = Vec::new();
+            for r in results {
+                labels.extend(r);
+            }
+            let mut w: HashMap<u32, i64> = HashMap::new();
+            for v in g.nodes() {
+                *w.entry(labels[v as usize]).or_insert(0) += 1;
+            }
+            for (_, lw) in w {
+                assert!(lw <= bound, "size={size}");
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Preconfigurations (§4.1): `fast`, `eco`, `strong` for mesh-like graphs
+//! and `fastsocial`, `ecosocial`, `strongsocial` for social networks /
+//! web graphs. Each mode fixes a bundle of algorithmic knobs, mirroring
+//! how KaFFPa's configurations trade quality against running time:
+//!
+//! - *fast*: matching coarsening, one initial partition, one round of
+//!   quotient-graph FM — partitioning speed first.
+//! - *eco*: better edge rating, more initial attempts, k-way FM + 2-way FM
+//!   on block pairs — the quality/time tradeoff default.
+//! - *strong*: everything eco does plus flow-based refinement, multi-try
+//!   FM and an F-cycle — quality is paramount.
+//! - *social* variants swap matching for size-constrained label
+//!   propagation clustering (§2.4), which shrinks irregular graphs where
+//!   matchings stall, and use LP as an extra fast local search.
+
+/// The six preconfiguration names of the guide (§4.1, §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Fast,
+    Eco,
+    Strong,
+    FastSocial,
+    EcoSocial,
+    StrongSocial,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fast" => Some(Mode::Fast),
+            "eco" => Some(Mode::Eco),
+            "strong" => Some(Mode::Strong),
+            "fastsocial" => Some(Mode::FastSocial),
+            "ecosocial" => Some(Mode::EcoSocial),
+            "strongsocial" => Some(Mode::StrongSocial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Fast => "fast",
+            Mode::Eco => "eco",
+            Mode::Strong => "strong",
+            Mode::FastSocial => "fastsocial",
+            Mode::EcoSocial => "ecosocial",
+            Mode::StrongSocial => "strongsocial",
+        }
+    }
+
+    pub fn is_social(&self) -> bool {
+        matches!(self, Mode::FastSocial | Mode::EcoSocial | Mode::StrongSocial)
+    }
+
+    pub const ALL: [Mode; 6] = [
+        Mode::Fast,
+        Mode::Eco,
+        Mode::Strong,
+        Mode::FastSocial,
+        Mode::EcoSocial,
+        Mode::StrongSocial,
+    ];
+}
+
+/// How the coarsening phase groups nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coarsening {
+    /// Sorted heavy-edge matching on an edge rating.
+    Matching,
+    /// Size-constrained label propagation clustering (§2.4).
+    ClusterLp,
+}
+
+/// Edge ratings guiding the matching (KaFFPa's `expansion*2` is the
+/// strong-config default in the papers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeRating {
+    /// Plain edge weight.
+    Weight,
+    /// ω(e)² / (c(u)·c(v)) — favors heavy edges between light nodes.
+    ExpansionSquared,
+    /// ω(e) / (c(u)·c(v)).
+    WeightOverSize,
+}
+
+/// All knobs of one KaFFPa run. Constructed via [`Config::from_mode`] and
+/// then adjusted by CLI flags (`--imbalance`, `--time_limit`, ...).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub mode: Mode,
+    pub k: u32,
+    /// Allowed imbalance ε (0.03 = the guide's 3% default).
+    pub epsilon: f64,
+    pub seed: u64,
+
+    // --- coarsening ---
+    pub coarsening: Coarsening,
+    pub edge_rating: EdgeRating,
+    /// Stop coarsening once `n <= contraction_limit_factor * k`.
+    pub contraction_limit_factor: usize,
+    /// Give up when a level shrinks by less than this factor.
+    pub min_shrink: f64,
+    /// LP clustering: iterations per level.
+    pub lp_iterations: usize,
+
+    // --- initial partitioning ---
+    /// Independent initial partition attempts (best kept).
+    pub initial_attempts: usize,
+    /// Use the AOT spectral (Fiedler) bisection among the attempts when a
+    /// PJRT artifact is available.
+    pub use_spectral_initial: bool,
+
+    // --- refinement ---
+    /// Rounds of k-way FM per level.
+    pub kway_fm_rounds: usize,
+    /// Per-round node-move budget fraction before giving up on negative
+    /// streaks (adaptive stopping stand-in).
+    pub fm_unsuccessful_limit: usize,
+    /// Run pairwise 2-way FM on adjacent block pairs (quotient graph).
+    pub use_pairwise_fm: bool,
+    /// Flow-based min-cut improvement on adjacent block pairs (§2.1).
+    pub use_flow_refinement: bool,
+    /// Region growth around the boundary as a multiple of the cut.
+    pub flow_region_factor: f64,
+    /// Most-balanced-minimum-cut heuristic inside flow refinement.
+    pub use_most_balanced_cut: bool,
+    /// Localized multi-try FM (§2.1).
+    pub use_multitry_fm: bool,
+    pub multitry_rounds: usize,
+    /// LP-based fast local search on social configs (§2.4).
+    pub use_lp_refinement: bool,
+
+    // --- global search ---
+    /// Additional V-cycles over the hierarchy (iterated multilevel).
+    pub global_cycles: usize,
+    /// Use an F-cycle instead of plain V-cycles (strong).
+    pub use_fcycle: bool,
+
+    // --- program-level options ---
+    pub time_limit: f64,
+    pub enforce_balance: bool,
+    pub balance_edges: bool,
+}
+
+impl Config {
+    /// The preconfiguration table. Numbers are scaled-down analogues of
+    /// KaFFPa's published configurations, tuned for the graph sizes the
+    /// test-suite and benches exercise.
+    pub fn from_mode(mode: Mode, k: u32, epsilon: f64, seed: u64) -> Self {
+        let mut c = Config {
+            mode,
+            k,
+            epsilon,
+            seed,
+            coarsening: if mode.is_social() { Coarsening::ClusterLp } else { Coarsening::Matching },
+            edge_rating: EdgeRating::ExpansionSquared,
+            contraction_limit_factor: 20,
+            min_shrink: 0.95,
+            lp_iterations: 10,
+            initial_attempts: 4,
+            use_spectral_initial: false,
+            kway_fm_rounds: 3,
+            fm_unsuccessful_limit: 100,
+            use_pairwise_fm: true,
+            use_flow_refinement: false,
+            flow_region_factor: 2.0,
+            use_most_balanced_cut: false,
+            use_multitry_fm: false,
+            multitry_rounds: 2,
+            use_lp_refinement: mode.is_social(),
+            global_cycles: 0,
+            use_fcycle: false,
+            time_limit: 0.0,
+            enforce_balance: false,
+            balance_edges: false,
+        };
+        match mode {
+            Mode::Fast | Mode::FastSocial => {
+                c.edge_rating = EdgeRating::Weight;
+                c.initial_attempts = 1;
+                c.kway_fm_rounds = 1;
+                c.use_pairwise_fm = false;
+                c.lp_iterations = 3;
+            }
+            Mode::Eco | Mode::EcoSocial => {
+                c.initial_attempts = 4;
+                c.kway_fm_rounds = 3;
+            }
+            Mode::Strong | Mode::StrongSocial => {
+                c.initial_attempts = 8;
+                c.kway_fm_rounds = 5;
+                c.use_flow_refinement = true;
+                c.use_most_balanced_cut = true;
+                c.use_multitry_fm = true;
+                c.global_cycles = 1;
+                c.use_fcycle = true;
+                c.contraction_limit_factor = 15;
+            }
+        }
+        c
+    }
+
+    /// The balance bound `L_max` for a given total weight.
+    pub fn bound(&self, total_weight: i64) -> i64 {
+        crate::util::block_weight_bound(total_weight, self.k, self.epsilon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_modes() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mode::parse("STRONG"), Some(Mode::Strong));
+        assert_eq!(Mode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn social_uses_lp_coarsening() {
+        let c = Config::from_mode(Mode::EcoSocial, 4, 0.03, 0);
+        assert_eq!(c.coarsening, Coarsening::ClusterLp);
+        assert!(c.use_lp_refinement);
+        let c = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        assert_eq!(c.coarsening, Coarsening::Matching);
+    }
+
+    #[test]
+    fn strong_enables_flow_and_multitry() {
+        let c = Config::from_mode(Mode::Strong, 4, 0.03, 0);
+        assert!(c.use_flow_refinement);
+        assert!(c.use_multitry_fm);
+        assert!(c.use_fcycle);
+        let f = Config::from_mode(Mode::Fast, 4, 0.03, 0);
+        assert!(!f.use_flow_refinement);
+        assert!(!f.use_multitry_fm);
+    }
+
+    #[test]
+    fn quality_knobs_are_ordered() {
+        let f = Config::from_mode(Mode::Fast, 8, 0.03, 0);
+        let e = Config::from_mode(Mode::Eco, 8, 0.03, 0);
+        let s = Config::from_mode(Mode::Strong, 8, 0.03, 0);
+        assert!(f.initial_attempts <= e.initial_attempts);
+        assert!(e.initial_attempts <= s.initial_attempts);
+        assert!(f.kway_fm_rounds <= e.kway_fm_rounds);
+        assert!(e.kway_fm_rounds <= s.kway_fm_rounds);
+    }
+
+    #[test]
+    fn bound_matches_guide() {
+        let c = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        assert_eq!(c.bound(1000), 257);
+    }
+}

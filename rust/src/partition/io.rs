@@ -1,0 +1,122 @@
+//! Partition output formats (§3.2): text files with one block id per line
+//! (`tmppartition<k>`), the separator variant where separator nodes carry
+//! id `k`, the edge-partition variant with `m` lines, and ParHIP's binary
+//! partition format.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Write a node partition: line `i` holds the block of node `i` (§3.2.1).
+pub fn write_partition<W: Write>(part: &[u32], mut w: W) -> std::io::Result<()> {
+    let mut s = String::with_capacity(part.len() * 2);
+    for &b in part {
+        s.push_str(&b.to_string());
+        s.push('\n');
+    }
+    w.write_all(s.as_bytes())
+}
+
+pub fn write_partition_file(part: &[u32], path: impl AsRef<Path>) -> std::io::Result<()> {
+    write_partition(part, std::io::BufWriter::new(std::fs::File::create(path)?))
+}
+
+/// Default output name `tmppartition<k>` (§3.2.1).
+pub fn default_partition_name(k: u32) -> String {
+    format!("tmppartition{k}")
+}
+
+/// Read a partition file (used by `--input_partition`).
+pub fn read_partition<R: Read>(r: R) -> std::io::Result<Vec<u32>> {
+    let reader = BufReader::new(r);
+    let mut out = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let b: u32 = t.parse().map_err(|e| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: bad block id: {e}", i + 1),
+            )
+        })?;
+        out.push(b);
+    }
+    Ok(out)
+}
+
+pub fn read_partition_file(path: impl AsRef<Path>) -> std::io::Result<Vec<u32>> {
+    read_partition(std::fs::File::open(path)?)
+}
+
+/// Separator output (§3.2.2): separator nodes get block id `k`, others keep
+/// their block.
+pub fn separator_assignment(part: &[u32], k: u32, separator: &[u32]) -> Vec<u32> {
+    let mut out = part.to_vec();
+    for &v in separator {
+        out[v as usize] = k;
+    }
+    out
+}
+
+/// Binary partition format (ParHIP `--save_partition_binary`):
+/// `u64 n` followed by `n` block ids as u64 little-endian.
+pub fn write_partition_binary<W: Write>(part: &[u32], mut w: W) -> std::io::Result<()> {
+    w.write_all(&(part.len() as u64).to_le_bytes())?;
+    for &b in part {
+        w.write_all(&(b as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_partition_binary<R: Read>(mut r: R) -> std::io::Result<Vec<u32>> {
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.read_exact(&mut buf8)?;
+        out.push(u64::from_le_bytes(buf8) as u32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let part = vec![0u32, 1, 2, 1, 0];
+        let mut buf = Vec::new();
+        write_partition(&part, &mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf.clone()).unwrap(), "0\n1\n2\n1\n0\n");
+        assert_eq!(read_partition(&buf[..]).unwrap(), part);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let part = vec![3u32, 0, 7, 7, 1];
+        let mut buf = Vec::new();
+        write_partition_binary(&part, &mut buf).unwrap();
+        assert_eq!(read_partition_binary(&buf[..]).unwrap(), part);
+    }
+
+    #[test]
+    fn separator_ids() {
+        let part = vec![0u32, 0, 1, 1];
+        let with_sep = separator_assignment(&part, 2, &[1, 2]);
+        assert_eq!(with_sep, vec![0, 2, 2, 1]);
+    }
+
+    #[test]
+    fn default_name_matches_guide() {
+        assert_eq!(default_partition_name(8), "tmppartition8");
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        assert!(read_partition("1\nx\n".as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Partition quality metrics — the `evaluator` / `toolbox --evaluate`
+//! programs: edge cut, balance, boundary size, communication volume
+//! (§1 and §2.4 mention the maximum communication volume objective).
+
+use super::Partition;
+use crate::graph::Graph;
+use crate::util::block_weight_bound;
+
+/// Total weight of edges crossing between blocks (each undirected edge
+/// counted once) — the primary KaHIP objective.
+pub fn edge_cut(g: &Graph, p: &Partition) -> i64 {
+    let mut cut = 0i64;
+    for v in g.nodes() {
+        let bv = p.block_of(v);
+        for (u, w) in g.neighbors_w(v) {
+            if u > v && p.block_of(u) != bv {
+                cut += w;
+            }
+        }
+    }
+    cut
+}
+
+/// `max_i c(V_i) / ceil(c(V)/k)` — 1.0 is perfectly balanced; the guide's
+/// default constraint allows 1.03.
+pub fn balance(g: &Graph, p: &Partition) -> f64 {
+    let avg = crate::util::ceil_div(g.total_node_weight(), p.k() as i64);
+    if avg == 0 {
+        return 1.0;
+    }
+    p.max_block_weight() as f64 / avg as f64
+}
+
+/// Nodes with at least one neighbor in a different block.
+pub fn boundary_nodes(g: &Graph, p: &Partition) -> Vec<u32> {
+    g.nodes()
+        .filter(|&v| {
+            let b = p.block_of(v);
+            g.neighbors(v).iter().any(|&u| p.block_of(u) != b)
+        })
+        .collect()
+}
+
+/// Communication volume of node v: the number of *distinct other blocks*
+/// adjacent to v (data sent once per remote block).
+fn node_comm_volume(g: &Graph, p: &Partition, v: u32) -> i64 {
+    let b = p.block_of(v);
+    let mut blocks: Vec<u32> = g
+        .neighbors(v)
+        .iter()
+        .map(|&u| p.block_of(u))
+        .filter(|&bu| bu != b)
+        .collect();
+    blocks.sort_unstable();
+    blocks.dedup();
+    blocks.len() as i64
+}
+
+/// Per-block communication volume: sum of `node_comm_volume` over the
+/// block's nodes. Returns (total, max over blocks).
+pub fn communication_volume(g: &Graph, p: &Partition) -> (i64, i64) {
+    let mut per_block = vec![0i64; p.k() as usize];
+    for v in g.nodes() {
+        per_block[p.block_of(v) as usize] += node_comm_volume(g, p, v);
+    }
+    let total = per_block.iter().sum();
+    let max = per_block.iter().copied().max().unwrap_or(0);
+    (total, max)
+}
+
+/// Are all blocks connected inside the graph? (Not required by KaHIP but
+/// reported by the evaluator; flow refinement tends to produce connected
+/// blocks on meshes.)
+pub fn blocks_connected(g: &Graph, p: &Partition) -> bool {
+    let (comp, _) = g.connected_components();
+    // For each block, all its nodes must share one "block-restricted"
+    // component. Run a BFS per block over same-block edges.
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut stack = Vec::new();
+    let mut ok = true;
+    let mut visited_block = vec![false; p.k() as usize];
+    for s in g.nodes() {
+        if seen[s as usize] {
+            continue;
+        }
+        let b = p.block_of(s) as usize;
+        if visited_block[b] {
+            // second component of this block (unless the graph itself is
+            // disconnected across these nodes in the same underlying comp)
+            ok = false;
+        }
+        visited_block[b] = true;
+        seen[s as usize] = true;
+        stack.push(s);
+        while let Some(v) = stack.pop() {
+            for &u in g.neighbors(v) {
+                if !seen[u as usize] && p.block_of(u) == p.block_of(s) {
+                    seen[u as usize] = true;
+                    stack.push(u);
+                }
+            }
+        }
+    }
+    let _ = comp;
+    ok
+}
+
+/// The full evaluator report.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub k: u32,
+    pub edge_cut: i64,
+    pub balance: f64,
+    pub feasible_3pct: bool,
+    pub boundary_nodes: usize,
+    pub comm_volume_total: i64,
+    pub comm_volume_max: i64,
+    pub min_block_weight: i64,
+    pub max_block_weight: i64,
+    pub non_empty_blocks: usize,
+}
+
+pub fn evaluate(g: &Graph, p: &Partition) -> Report {
+    let (cv_total, cv_max) = communication_volume(g, p);
+    Report {
+        k: p.k(),
+        edge_cut: edge_cut(g, p),
+        balance: balance(g, p),
+        feasible_3pct: p.max_block_weight()
+            <= block_weight_bound(g.total_node_weight(), p.k(), 0.03),
+        boundary_nodes: boundary_nodes(g, p).len(),
+        comm_volume_total: cv_total,
+        comm_volume_max: cv_max,
+        min_block_weight: p.min_block_weight(),
+        max_block_weight: p.max_block_weight(),
+        non_empty_blocks: p.non_empty_blocks(),
+    }
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        format!(
+            "k                    = {}\n\
+             edge cut             = {}\n\
+             balance              = {:.5}\n\
+             feasible (eps=3%)    = {}\n\
+             boundary nodes       = {}\n\
+             comm volume (total)  = {}\n\
+             comm volume (max)    = {}\n\
+             block weight min/max = {} / {}\n\
+             non-empty blocks     = {}\n",
+            self.k,
+            self.edge_cut,
+            self.balance,
+            self.feasible_3pct,
+            self.boundary_nodes,
+            self.comm_volume_total,
+            self.comm_volume_max,
+            self.min_block_weight,
+            self.max_block_weight,
+            self.non_empty_blocks
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn half_grid() -> (Graph, Partition) {
+        let g = generators::grid2d(4, 4);
+        // left half block 0, right half block 1 -> vertical cut of 4 edges
+        let part: Vec<u32> = g.nodes().map(|v| if v % 4 < 2 { 0 } else { 1 }).collect();
+        let p = Partition::from_assignment(&g, 2, part);
+        (g, p)
+    }
+
+    #[test]
+    fn cut_of_half_grid() {
+        let (g, p) = half_grid();
+        assert_eq!(edge_cut(&g, &p), 4);
+    }
+
+    #[test]
+    fn balance_of_half_grid() {
+        let (g, p) = half_grid();
+        assert!((balance(&g, &p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundary_of_half_grid() {
+        let (g, p) = half_grid();
+        assert_eq!(boundary_nodes(&g, &p).len(), 8); // two middle columns
+    }
+
+    #[test]
+    fn comm_volume_half_grid() {
+        let (g, p) = half_grid();
+        let (total, max) = communication_volume(&g, &p);
+        assert_eq!(total, 8); // each boundary node talks to 1 other block
+        assert_eq!(max, 4);
+    }
+
+    #[test]
+    fn weighted_cut() {
+        let mut b = crate::graph::GraphBuilder::new(2);
+        b.add_edge(0, 1, 7);
+        let g = b.build().unwrap();
+        let p = Partition::from_assignment(&g, 2, vec![0, 1]);
+        assert_eq!(edge_cut(&g, &p), 7);
+    }
+
+    #[test]
+    fn zero_cut_single_block() {
+        let g = generators::grid2d(3, 3);
+        let p = Partition::trivial(&g, 2);
+        assert_eq!(edge_cut(&g, &p), 0);
+        assert_eq!(boundary_nodes(&g, &p).len(), 0);
+    }
+
+    #[test]
+    fn connected_blocks_detection() {
+        let g = generators::path(4);
+        let good = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1]);
+        assert!(blocks_connected(&g, &good));
+        let bad = Partition::from_assignment(&g, 2, vec![0, 1, 0, 1]);
+        assert!(!blocks_connected(&g, &bad));
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let (g, p) = half_grid();
+        let r = evaluate(&g, &p);
+        assert_eq!(r.edge_cut, 4);
+        assert!(r.feasible_3pct);
+        assert_eq!(r.non_empty_blocks, 2);
+        assert!(r.render().contains("edge cut"));
+    }
+}

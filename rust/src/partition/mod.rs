@@ -1,0 +1,191 @@
+//! Partitions and their objectives.
+//!
+//! A [`Partition`] assigns every node a block in `0..k` and maintains block
+//! weights incrementally so local search can move nodes in O(degree).
+
+pub mod config;
+pub mod io;
+pub mod metrics;
+
+use crate::graph::Graph;
+use crate::util::block_weight_bound;
+use crate::{BlockId, NodeId};
+
+/// A k-way partition of a specific graph's node set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    k: u32,
+    part: Vec<BlockId>,
+    block_weights: Vec<i64>,
+}
+
+impl Partition {
+    /// Build from an assignment vector. Panics if an id is >= k.
+    pub fn from_assignment(g: &Graph, k: u32, part: Vec<BlockId>) -> Self {
+        assert_eq!(part.len(), g.n(), "assignment length != n");
+        let mut block_weights = vec![0i64; k as usize];
+        for (v, &b) in part.iter().enumerate() {
+            assert!(b < k, "block id {b} out of range 0..{k}");
+            block_weights[b as usize] += g.node_weight(v as u32);
+        }
+        Self { k, part, block_weights }
+    }
+
+    /// All nodes in block 0 (the state before initial partitioning).
+    pub fn trivial(g: &Graph, k: u32) -> Self {
+        assert!(k >= 1);
+        let mut block_weights = vec![0i64; k as usize];
+        block_weights[0] = g.total_node_weight();
+        Self { k, part: vec![0; g.n()], block_weights }
+    }
+
+    #[inline]
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.part.len()
+    }
+
+    #[inline]
+    pub fn block_of(&self, v: NodeId) -> BlockId {
+        self.part[v as usize]
+    }
+
+    #[inline]
+    pub fn block_weight(&self, b: BlockId) -> i64 {
+        self.block_weights[b as usize]
+    }
+
+    pub fn block_weights(&self) -> &[i64] {
+        &self.block_weights
+    }
+
+    pub fn assignment(&self) -> &[BlockId] {
+        &self.part
+    }
+
+    pub fn into_assignment(self) -> Vec<BlockId> {
+        self.part
+    }
+
+    /// Move `v` to `to`, maintaining block weights. Returns the old block.
+    #[inline]
+    pub fn move_node(&mut self, g: &Graph, v: NodeId, to: BlockId) -> BlockId {
+        let from = self.part[v as usize];
+        if from != to {
+            let w = g.node_weight(v);
+            self.block_weights[from as usize] -= w;
+            self.block_weights[to as usize] += w;
+            self.part[v as usize] = to;
+        }
+        from
+    }
+
+    /// Heaviest block's weight.
+    pub fn max_block_weight(&self) -> i64 {
+        self.block_weights.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Lightest block's weight.
+    pub fn min_block_weight(&self) -> i64 {
+        self.block_weights.iter().copied().min().unwrap_or(0)
+    }
+
+    /// The balance constraint `max_i c(V_i) <= L_max(ε)`.
+    pub fn is_feasible(&self, g: &Graph, epsilon: f64) -> bool {
+        self.max_block_weight() <= block_weight_bound(g.total_node_weight(), self.k, epsilon)
+    }
+
+    /// Number of non-empty blocks.
+    pub fn non_empty_blocks(&self) -> usize {
+        self.block_weights.iter().filter(|&&w| w > 0).count()
+    }
+
+    /// Consistency check used by tests and debug assertions.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.part.len() != g.n() {
+            return Err(format!("len {} != n {}", self.part.len(), g.n()));
+        }
+        let mut bw = vec![0i64; self.k as usize];
+        for (v, &b) in self.part.iter().enumerate() {
+            if b >= self.k {
+                return Err(format!("node {v} in block {b} >= k {}", self.k));
+            }
+            bw[b as usize] += g.node_weight(v as u32);
+        }
+        if bw != self.block_weights {
+            return Err(format!("cached block weights {:?} != actual {bw:?}", self.block_weights));
+        }
+        Ok(())
+    }
+
+    /// Project through a coarsening map: `coarse_of[v_fine] = v_coarse`.
+    /// Every fine node inherits its coarse node's block.
+    pub fn project(&self, fine_graph: &Graph, coarse_of: &[NodeId]) -> Partition {
+        let part: Vec<BlockId> =
+            coarse_of.iter().map(|&cv| self.part[cv as usize]).collect();
+        Partition::from_assignment(fine_graph, self.k, part)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn from_assignment_and_weights() {
+        let g = generators::grid2d(4, 2);
+        let p = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1, 0, 0, 1, 1]);
+        assert_eq!(p.block_weight(0), 4);
+        assert_eq!(p.block_weight(1), 4);
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn move_node_updates_weights() {
+        let g = generators::grid2d(4, 2);
+        let mut p = Partition::from_assignment(&g, 2, vec![0; 8]);
+        let from = p.move_node(&g, 3, 1);
+        assert_eq!(from, 0);
+        assert_eq!(p.block_weight(0), 7);
+        assert_eq!(p.block_weight(1), 1);
+        assert!(p.validate(&g).is_ok());
+        // no-op move
+        p.move_node(&g, 3, 1);
+        assert_eq!(p.block_weight(1), 1);
+    }
+
+    #[test]
+    fn feasibility() {
+        let g = generators::grid2d(10, 10); // 100 unit nodes
+        let part: Vec<u32> = g.nodes().map(|v| if v < 50 { 0 } else { 1 }).collect();
+        let p = Partition::from_assignment(&g, 2, part);
+        assert!(p.is_feasible(&g, 0.0));
+        let part: Vec<u32> = g.nodes().map(|v| if v < 60 { 0 } else { 1 }).collect();
+        let p = Partition::from_assignment(&g, 2, part);
+        assert!(!p.is_feasible(&g, 0.03));
+        assert!(p.is_feasible(&g, 0.25));
+    }
+
+    #[test]
+    fn projection_inherits_blocks() {
+        let g_fine = generators::grid2d(4, 1); // path of 4
+        let g_coarse = generators::grid2d(2, 1); // 2 coarse nodes
+        let coarse_of = vec![0u32, 0, 1, 1];
+        let p_coarse = Partition::from_assignment(&g_coarse, 2, vec![0, 1]);
+        let p_fine = p_coarse.project(&g_fine, &coarse_of);
+        assert_eq!(p_fine.assignment(), &[0, 0, 1, 1]);
+        assert!(p_fine.validate(&g_fine).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_block() {
+        let g = generators::path(3);
+        Partition::from_assignment(&g, 2, vec![0, 1, 2]);
+    }
+}

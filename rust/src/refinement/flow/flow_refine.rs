@@ -1,0 +1,273 @@
+//! Flow-based two-way refinement (§2.1): contract everything outside the
+//! grown region into terminals s (rest of block A) and t (rest of block
+//! B), compute a minimum s-t cut, and re-label the region by cut side.
+//! By the region's budget construction every s-t cut is feasible, and the
+//! current assignment is itself an s-t cut — so the minimum can only be
+//! better or equal. With `most_balanced` the heuristic picks, among the
+//! two canonical minimum cuts, the one whose block weights are closer.
+
+use super::max_flow::FlowNetwork;
+use super::region::{grow, Region};
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::refinement::quotient::adjacent_pairs;
+use crate::rng::Rng;
+use crate::BlockId;
+
+/// Apply flow refinement to every adjacent block pair (repeating while it
+/// improves, like KaFFPa's iterated application). Returns total gain.
+pub fn refine_all_pairs(
+    g: &Graph,
+    p: &mut Partition,
+    bound: i64,
+    alpha: f64,
+    most_balanced: bool,
+    rng: &mut Rng,
+) -> i64 {
+    let mut total = 0i64;
+    for _round in 0..2 {
+        let mut pairs = adjacent_pairs(g, p);
+        rng.shuffle(&mut pairs);
+        let mut round_gain = 0i64;
+        for (a, b, cut) in pairs {
+            round_gain += refine_pair_flow(g, p, a, b, bound, alpha, most_balanced, cut);
+        }
+        total += round_gain;
+        if round_gain == 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// One flow improvement step on pair `(a, b)`. Returns the gain (>= 0).
+#[allow(clippy::too_many_arguments)]
+pub fn refine_pair_flow(
+    g: &Graph,
+    p: &mut Partition,
+    a: BlockId,
+    b: BlockId,
+    bound: i64,
+    alpha: f64,
+    most_balanced: bool,
+    pair_cut_hint: i64,
+) -> i64 {
+    let region = grow(g, p, a, b, bound, alpha, pair_cut_hint);
+    if region.is_empty() {
+        return 0;
+    }
+    let Some(sol) = solve_region(g, p, a, b, &region, most_balanced) else {
+        return 0;
+    };
+    let (new_a_side, gain) = sol;
+    if gain <= 0 {
+        return 0;
+    }
+    // apply: region nodes on the s side go to a, the rest to b
+    for (i, &v) in region.in_a.iter().chain(region.in_b.iter()).enumerate() {
+        let target = if new_a_side[i] { a } else { b };
+        if p.block_of(v) != target {
+            p.move_node(g, v, target);
+        }
+    }
+    debug_assert!(p.validate(g).is_ok());
+    gain
+}
+
+/// Build + solve the flow network over the region. Returns
+/// `(side_assignment_per_region_node, gain)` where the assignment order
+/// matches `region.in_a ++ region.in_b`.
+fn solve_region(
+    g: &Graph,
+    p: &Partition,
+    a: BlockId,
+    b: BlockId,
+    region: &Region,
+    most_balanced: bool,
+) -> Option<(Vec<bool>, i64)> {
+    let rn = region.in_a.len() + region.in_b.len();
+    // local ids: 0..rn for region nodes, s = rn, t = rn + 1
+    let s = rn as u32;
+    let t = rn as u32 + 1;
+    let mut local = std::collections::HashMap::with_capacity(rn);
+    for (i, &v) in region.in_a.iter().chain(region.in_b.iter()).enumerate() {
+        local.insert(v, i as u32);
+    }
+    let mut net = FlowNetwork::new(rn + 2);
+    // current pair cut (edges between a-side and b-side of the pair),
+    // which we compare against the min cut of the region network
+    let mut current_pair_cut = 0i64;
+    let mut constant = 0i64; // cut edges not represented in the network
+    let mut seen_pairs = std::collections::HashSet::new();
+    for v in g.nodes() {
+        let bv = p.block_of(v);
+        if bv != a && bv != b {
+            continue;
+        }
+        for (u, w) in g.neighbors_w(v) {
+            if u < v {
+                continue; // each undirected edge once
+            }
+            let bu = p.block_of(u);
+            if bu != a && bu != b {
+                continue;
+            }
+            if bv != bu {
+                current_pair_cut += w;
+            }
+            let lv = local.get(&v).copied();
+            let lu = local.get(&u).copied();
+            match (lv, lu) {
+                (Some(x), Some(y)) => net.add_edge(x, y, w, w),
+                (Some(x), None) => {
+                    // u outside region: contracted into its block terminal
+                    let term = if bu == a { s } else { t };
+                    net.add_edge(term, x, w, w);
+                }
+                (None, Some(y)) => {
+                    let term = if bv == a { s } else { t };
+                    net.add_edge(term, y, w, w);
+                }
+                (None, None) => {
+                    // both outside: constant contribution if cut
+                    if bv != bu {
+                        constant += w;
+                    }
+                }
+            }
+            let _ = seen_pairs.insert((v, u));
+        }
+    }
+    let flow = net.max_flow(s, t);
+    let new_cut = flow + constant;
+    let gain = current_pair_cut - new_cut;
+    if gain < 0 {
+        // cannot happen: the current assignment is a valid s-t cut, so the
+        // min cut is at most current_pair_cut - constant. Defensive.
+        return None;
+    }
+    let side_min = net.source_side_min(s);
+    let choose = |side: &Vec<bool>| -> Vec<bool> { side[..rn].to_vec() };
+    let assignment = if most_balanced {
+        let side_max = net.source_side_max(t);
+        // pick the min cut whose resulting |c(A) - c(B)| is smaller
+        let imbalance = |side: &Vec<bool>| -> i64 {
+            let mut ca = p.block_weight(a);
+            let mut cb = p.block_weight(b);
+            for (i, &v) in region.in_a.iter().chain(region.in_b.iter()).enumerate() {
+                let w = g.node_weight(v);
+                let now_a = side[i];
+                let was_a = p.block_of(v) == a;
+                if was_a && !now_a {
+                    ca -= w;
+                    cb += w;
+                } else if !was_a && now_a {
+                    ca += w;
+                    cb -= w;
+                }
+            }
+            (ca - cb).abs()
+        };
+        let min_side = choose(&side_min);
+        let max_side = choose(&side_max);
+        if imbalance(&max_side) < imbalance(&min_side) {
+            max_side
+        } else {
+            min_side
+        }
+    } else {
+        choose(&side_min)
+    };
+    Some((assignment, gain))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn straightens_a_jagged_cut() {
+        let g = generators::grid2d(8, 6);
+        // jagged vertical boundary: column < 4 except a bump at row 0 col 4
+        let part: Vec<u32> = g
+            .nodes()
+            .map(|v| {
+                let (x, y) = (v % 8, v / 8);
+                if x < 4 || (y == 0 && x == 4) {
+                    0
+                } else {
+                    1
+                }
+            })
+            .collect();
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let before = metrics::edge_cut(&g, &p);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 2, 0.10);
+        let mut rng = Rng::new(1);
+        let gain = refine_all_pairs(&g, &mut p, bound, 4.0, true, &mut rng);
+        let after = metrics::edge_cut(&g, &p);
+        assert_eq!(before - after, gain);
+        assert!(after <= 6, "flow should straighten the cut: {before} -> {after}");
+        assert!(p.is_feasible(&g, 0.10));
+    }
+
+    #[test]
+    fn never_worsens_never_breaks_balance() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 10 + case % 40;
+            let g = generators::random_weighted(n, 3 * n, 1, 3, rng);
+            let k = 2 + (case % 2) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let before = metrics::edge_cut(&g, &p);
+            let bound = p.max_block_weight().max(1) + 3; // small slack
+            let gain = refine_all_pairs(&g, &mut p, bound, 3.0, case % 2 == 0, rng);
+            let after = metrics::edge_cut(&g, &p);
+            crate::prop_assert!(after <= before, "worsened {before} -> {after}");
+            crate::prop_assert!(before - after == gain, "gain mismatch");
+            crate::prop_assert!(
+                p.max_block_weight() <= bound,
+                "balance bound violated"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eps_zero_is_a_noop() {
+        let g = generators::grid2d(8, 4);
+        let part: Vec<u32> = g.nodes().map(|v| if v % 8 < 4 { 0 } else { 1 }).collect();
+        let mut p = Partition::from_assignment(&g, 2, part.clone());
+        let bound = g.total_node_weight() / 2; // exactly tight
+        let mut rng = Rng::new(2);
+        let gain = refine_all_pairs(&g, &mut p, bound, 4.0, true, &mut rng);
+        assert_eq!(gain, 0);
+        assert_eq!(p.assignment(), &part[..]);
+    }
+
+    #[test]
+    fn finds_the_min_cut_on_a_barbell() {
+        // two K4s joined by one edge, but start with a bad split through
+        // one clique
+        let mut b = crate::graph::GraphBuilder::new(8);
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                b.add_edge(u, v, 1);
+                b.add_edge(u + 4, v + 4, 1);
+            }
+        }
+        b.add_edge(3, 4, 1);
+        let g = b.build().unwrap();
+        // bad: {0,1,2,7} vs {3,4,5,6} -> cut = 3+1+2=..., good: {0..3} vs {4..7} -> 1
+        let part = vec![0, 0, 0, 1, 1, 1, 1, 0];
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let before = metrics::edge_cut(&g, &p);
+        assert!(before > 1);
+        let mut rng = Rng::new(3);
+        let bound = crate::util::block_weight_bound(8, 2, 0.25);
+        refine_all_pairs(&g, &mut p, bound, 8.0, true, &mut rng);
+        assert_eq!(metrics::edge_cut(&g, &p), 1, "flow must find the bridge cut");
+    }
+}

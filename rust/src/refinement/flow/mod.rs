@@ -1,0 +1,8 @@
+//! Max-flow min-cut local improvement (§2.1, [30]): build a flow problem
+//! in an area around the boundary of a pair of blocks such that *every*
+//! s-t cut in the area yields a feasible bipartition, then replace the
+//! current cut with a minimum cut of the area.
+
+pub mod flow_refine;
+pub mod max_flow;
+pub mod region;

@@ -1,0 +1,149 @@
+//! Region growing around the boundary of a block pair (§2.1): BFS from
+//! the pair's boundary nodes into each block, accumulating nodes under a
+//! weight budget chosen so that *any* reassignment of region nodes keeps
+//! both blocks feasible: if the whole A-region defected to B we'd have
+//! `c(B) + c(region_A) <= L_max`, hence `budget_A = L_max - c(B)` (and
+//! symmetrically). The `alpha` factor additionally caps the region at
+//! `alpha * cut` so regions stay proportional to the boundary.
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::BlockId;
+use std::collections::VecDeque;
+
+/// The grown area around one pair's boundary.
+#[derive(Debug)]
+pub struct Region {
+    /// Region nodes that currently belong to block `a`.
+    pub in_a: Vec<u32>,
+    /// Region nodes that currently belong to block `b`.
+    pub in_b: Vec<u32>,
+}
+
+impl Region {
+    /// A region is useless only when *both* sides are empty; a one-sided
+    /// region still admits improving s-t cuts (nodes of one block drifting
+    /// to the other).
+    pub fn is_empty(&self) -> bool {
+        self.in_a.is_empty() && self.in_b.is_empty()
+    }
+}
+
+/// Grow the region for pair `(a, b)`.
+///
+/// * `bound` — the balance bound `L_max`.
+/// * `alpha` — region size factor relative to the current pair cut.
+/// * `pair_cut` — current cut weight between `a` and `b`.
+pub fn grow(
+    g: &Graph,
+    p: &Partition,
+    a: BlockId,
+    b: BlockId,
+    bound: i64,
+    alpha: f64,
+    pair_cut: i64,
+) -> Region {
+    // cap each budget at c(side) - 1 so at least one node stays outside the
+    // region on each side: the contracted terminals s/t must be non-empty,
+    // otherwise a min cut could empty a block entirely.
+    let budget_a = (bound - p.block_weight(b))
+        .min((alpha * pair_cut as f64) as i64)
+        .min(p.block_weight(a) - 1);
+    let budget_b = (bound - p.block_weight(a))
+        .min((alpha * pair_cut as f64) as i64)
+        .min(p.block_weight(b) - 1);
+    Region {
+        in_a: grow_side(g, p, a, b, budget_a),
+        in_b: grow_side(g, p, b, a, budget_b),
+    }
+}
+
+/// BFS into `side` starting from its boundary with `other`, taking nodes
+/// while the accumulated weight stays within `budget`.
+fn grow_side(g: &Graph, p: &Partition, side: BlockId, other: BlockId, budget: i64) -> Vec<u32> {
+    if budget <= 0 {
+        return Vec::new();
+    }
+    let mut taken: Vec<u32> = Vec::new();
+    let mut weight = 0i64;
+    let mut seen = std::collections::HashSet::new();
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    // seeds: boundary nodes of `side` facing `other`, in node order
+    for v in g.nodes() {
+        if p.block_of(v) == side && g.neighbors(v).iter().any(|&u| p.block_of(u) == other) {
+            queue.push_back(v);
+            seen.insert(v);
+        }
+    }
+    while let Some(v) = queue.pop_front() {
+        let w = g.node_weight(v);
+        if weight + w > budget {
+            continue; // node too heavy for remaining budget; try others
+        }
+        weight += w;
+        taken.push(v);
+        for &u in g.neighbors(v) {
+            if p.block_of(u) == side && seen.insert(u) {
+                queue.push_back(u);
+            }
+        }
+    }
+    taken
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    fn split_grid() -> (Graph, Partition) {
+        let g = generators::grid2d(8, 4); // 32 nodes
+        let part: Vec<u32> = g.nodes().map(|v| if v % 8 < 4 { 0 } else { 1 }).collect();
+        let p = Partition::from_assignment(&g, 2, part);
+        (g, p)
+    }
+
+    #[test]
+    fn region_weight_within_budget() {
+        let (g, p) = split_grid();
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 2, 0.25);
+        let cut = metrics::edge_cut(&g, &p);
+        let r = grow(&g, &p, 0, 1, bound, 10.0, cut);
+        let wa: i64 = r.in_a.iter().map(|&v| g.node_weight(v)).sum();
+        let wb: i64 = r.in_b.iter().map(|&v| g.node_weight(v)).sum();
+        assert!(wa <= bound - p.block_weight(1));
+        assert!(wb <= bound - p.block_weight(0));
+        assert!(!r.is_empty());
+        // sides really belong to their blocks
+        assert!(r.in_a.iter().all(|&v| p.block_of(v) == 0));
+        assert!(r.in_b.iter().all(|&v| p.block_of(v) == 1));
+    }
+
+    #[test]
+    fn zero_budget_when_perfectly_tight() {
+        let (g, p) = split_grid();
+        // eps = 0: L_max = 16 = c(B) exactly -> empty regions
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 2, 0.0);
+        let r = grow(&g, &p, 0, 1, bound, 10.0, 4);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn alpha_caps_region() {
+        let (g, p) = split_grid();
+        let bound = 100; // huge slack
+        let cut = metrics::edge_cut(&g, &p); // 4
+        let r = grow(&g, &p, 0, 1, bound, 1.0, cut); // budget 4 per side
+        let wa: i64 = r.in_a.iter().map(|&v| g.node_weight(v)).sum();
+        assert!(wa <= 4);
+    }
+
+    #[test]
+    fn grows_from_boundary_inward() {
+        let (g, p) = split_grid();
+        let r = grow(&g, &p, 0, 1, 100, 2.0, 4);
+        // with budget 8, both column 3 (boundary) and column 2 nodes appear
+        assert!(r.in_a.iter().all(|&v| v % 8 >= 2), "region stays near boundary: {:?}", r.in_a);
+    }
+}

@@ -1,0 +1,177 @@
+//! Two-way FM on a designated pair of blocks — the classic
+//! Fiduccia–Mattheyses bipartition refinement [11], used by recursive
+//! bisection on the coarsest graph and by the quotient-graph pair
+//! scheduling during uncoarsening.
+//!
+//! This is k-way FM restricted to nodes of the two blocks, but with the
+//! two-sided alternation that keeps perfectly balanced bisections mobile:
+//! when both directions are feasible the higher gain wins; under
+//! perfectly tight bounds moves alternate by necessity.
+
+use super::gain::GainScratch;
+use super::pq::AddressablePQ;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+use crate::BlockId;
+
+/// Refine the pair `(a, b)` of blocks in-place. Nodes of other blocks are
+/// frozen. `bounds` are global per-block weight bounds. Returns cut gain.
+pub fn refine_pair(
+    g: &Graph,
+    p: &mut Partition,
+    a: BlockId,
+    b: BlockId,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    debug_assert!(a != b);
+    let n = g.n();
+    let mut scratch = GainScratch::new(p.k());
+    let mut pq = AddressablePQ::new(n);
+    let mut moved = vec![false; n];
+
+    // only nodes of the pair that touch the other side participate
+    let other = |p: &Partition, v: u32| -> Option<BlockId> {
+        let bv = p.block_of(v);
+        if bv == a {
+            Some(b)
+        } else if bv == b {
+            Some(a)
+        } else {
+            None
+        }
+    };
+
+    let order = rng.permutation(n);
+    for &v in &order {
+        if let Some(to) = other(p, v) {
+            if is_boundary_to(g, p, v, to) {
+                let gain = scratch.gain_to(g, p, v, to);
+                pq.insert(v, gain);
+            }
+        }
+    }
+
+    let mut journal: Vec<(u32, u32)> = Vec::new();
+    let mut cur = 0i64;
+    let mut best = 0i64;
+    let mut best_len = 0usize;
+    let mut since_best = 0usize;
+
+    while let Some((v, _)) = pq.pop() {
+        if moved[v as usize] {
+            continue;
+        }
+        let Some(to) = other(p, v) else { continue };
+        // feasibility against the target bound
+        if p.block_weight(to) + g.node_weight(v) > bounds[to as usize] {
+            continue;
+        }
+        let gain = scratch.gain_to(g, p, v, to);
+        let from = p.move_node(g, v, to);
+        moved[v as usize] = true;
+        journal.push((v, from));
+        cur += gain;
+        if cur > best {
+            best = cur;
+            best_len = journal.len();
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best > unsuccessful_limit {
+                break;
+            }
+        }
+        for &u in g.neighbors(v) {
+            if moved[u as usize] {
+                continue;
+            }
+            if let Some(to_u) = other(p, u) {
+                let ug = scratch.gain_to(g, p, u, to_u);
+                pq.push(u, ug);
+            }
+        }
+    }
+    for &(v, from) in journal[best_len..].iter().rev() {
+        p.move_node(g, v, from);
+    }
+    best
+}
+
+fn is_boundary_to(g: &Graph, p: &Partition, v: u32, to: BlockId) -> bool {
+    g.neighbors(v).iter().any(|&u| p.block_of(u) == to)
+}
+
+/// Balanced 2-way FM for bisections where both sides must stay under their
+/// own target weight (used on subgraphs during recursive bisection where
+/// targets differ: `target[0]` for block 0, `target[1]` for block 1).
+pub fn refine_bisection(
+    g: &Graph,
+    p: &mut Partition,
+    targets: &[i64; 2],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    debug_assert_eq!(p.k(), 2);
+    refine_pair(g, p, 0, 1, &[targets[0], targets[1]], unsuccessful_limit, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn pair_refinement_ignores_other_blocks() {
+        let g = generators::grid2d(8, 4);
+        // blocks: columns 0-1 -> 0, 2-3 -> 1, 4-5 -> 2, 6-7 -> 3
+        let part: Vec<u32> = g.nodes().map(|v| (v % 8) / 2).collect();
+        let mut p = Partition::from_assignment(&g, 4, part.clone());
+        let mut rng = Rng::new(1);
+        let bounds = vec![12i64; 4];
+        refine_pair(&g, &mut p, 0, 1, &bounds, 20, &mut rng);
+        // blocks 2 and 3 untouched
+        for v in g.nodes() {
+            if part[v as usize] >= 2 {
+                assert_eq!(p.block_of(v), part[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn fixes_bad_bisection() {
+        let g = generators::grid2d(10, 10);
+        // diagonal-ish bad split that is balanced
+        let part: Vec<u32> = g.nodes().map(|v| ((v / 10 + v % 10) % 2) as u32).collect();
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let before = metrics::edge_cut(&g, &p);
+        let mut rng = Rng::new(2);
+        let bound = crate::util::block_weight_bound(100, 2, 0.03);
+        let gain = refine_pair(&g, &mut p, 0, 1, &[bound, bound], 100, &mut rng);
+        let after = metrics::edge_cut(&g, &p);
+        assert_eq!(before - after, gain);
+        assert!(after < before, "checkerboard must improve: {before} -> {after}");
+        assert!(p.is_feasible(&g, 0.03));
+    }
+
+    #[test]
+    fn never_worsens_property() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 8 + case % 30;
+            let g = generators::random_weighted(n, 2 * n, 1, 3, rng);
+            let part: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+            let mut p = Partition::from_assignment(&g, 2, part);
+            let before = metrics::edge_cut(&g, &p);
+            let maxw = p.max_block_weight().max(1);
+            let gain = refine_pair(&g, &mut p, 0, 1, &[maxw, maxw], 20, rng);
+            let after = metrics::edge_cut(&g, &p);
+            crate::prop_assert!(after <= before);
+            crate::prop_assert!(before - after == gain);
+            crate::prop_assert!(p.max_block_weight() <= maxw);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! k-way FM local search, organized in rounds exactly as §2.1 describes:
+//! a priority queue is initialized with all boundary vertices in random
+//! order, prioritized by the best gain over target blocks; the highest
+//! gain node moves to its best feasible block; each node moves at most
+//! once per round; after a node moves its unmoved neighbors become
+//! eligible; when the stopping criterion triggers, all moves after the
+//! best feasible prefix are rolled back — so a round can never worsen
+//! the cut.
+
+use super::gain::{is_boundary, GainScratch};
+use super::pq::AddressablePQ;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// One-shot k-way FM: runs rounds until a round yields no improvement.
+/// `bounds[b]` is the max allowed weight of block `b` (the balance
+/// constraint); a move is only performed if the target stays under its
+/// bound, so feasible inputs stay feasible.
+/// Returns the total cut reduction (>= 0).
+pub fn refine(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    let mut total = 0;
+    loop {
+        let gained = one_round(g, p, bounds, unsuccessful_limit, rng);
+        total += gained;
+        if gained <= 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// A single FM round. Returns the cut reduction achieved (>= 0).
+pub fn one_round(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    let n = g.n();
+    let mut scratch = GainScratch::new(p.k());
+    let mut pq = AddressablePQ::new(n);
+    let mut moved = vec![false; n];
+
+    // random insertion order over boundary nodes (§2.1)
+    let order = rng.permutation(n);
+    for &v in &order {
+        if is_boundary(g, p, v) {
+            if let Some((_, gain)) = scratch.best_move(g, p, v, bounds) {
+                pq.insert(v, gain);
+            }
+        }
+    }
+
+    // move journal for rollback: (node, from_block)
+    let mut journal: Vec<(u32, u32)> = Vec::new();
+    let mut cur_gain = 0i64;
+    let mut best_gain = 0i64;
+    let mut best_len = 0usize;
+    let mut since_best = 0usize;
+
+    while let Some((v, _stale_key)) = pq.pop() {
+        if moved[v as usize] {
+            continue;
+        }
+        // recompute: neighbor moves may have changed the stored key
+        let Some((to, gain)) = scratch.best_move(g, p, v, bounds) else {
+            continue;
+        };
+        let from = p.move_node(g, v, to);
+        moved[v as usize] = true;
+        journal.push((v, from));
+        cur_gain += gain;
+        if cur_gain > best_gain {
+            best_gain = cur_gain;
+            best_len = journal.len();
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best > unsuccessful_limit {
+                break;
+            }
+        }
+        // neighbors become eligible / need re-keying
+        for &u in g.neighbors(v) {
+            if moved[u as usize] {
+                continue;
+            }
+            match scratch.best_move(g, p, u, bounds) {
+                Some((_, ug)) => pq.push(u, ug),
+                None => pq.remove(u),
+            }
+        }
+    }
+
+    // roll back past the best prefix
+    for &(v, from) in journal[best_len..].iter().rev() {
+        p.move_node(g, v, from);
+    }
+    debug_assert!(p.validate(g).is_ok());
+    best_gain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn improves_striped_grid() {
+        let g = generators::grid2d(12, 12);
+        let part: Vec<u32> = g.nodes().map(|v| v % 2).collect(); // awful
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let before = metrics::edge_cut(&g, &p);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 2, 0.03);
+        let mut rng = Rng::new(1);
+        let gain = refine(&g, &mut p, &[bound, bound], 50, &mut rng);
+        let after = metrics::edge_cut(&g, &p);
+        assert_eq!(before - after, gain);
+        assert!(after < before / 2, "FM should fix stripes: {before} -> {after}");
+        assert!(p.is_feasible(&g, 0.03));
+    }
+
+    #[test]
+    fn never_worsens() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 8 + case % 40;
+            let g = generators::random_weighted(n, 3 * n, 1, 3, rng);
+            let k = 2 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let before = metrics::edge_cut(&g, &p);
+            let max_bw = p.block_weights().iter().copied().max().unwrap();
+            // bounds at current max weight: refinement may not degrade balance
+            let bounds = vec![max_bw.max(1); k as usize];
+            let gain = refine(&g, &mut p, &bounds, 30, rng);
+            let after = metrics::edge_cut(&g, &p);
+            crate::prop_assert!(after <= before, "cut worsened {before} -> {after}");
+            crate::prop_assert!(before - after == gain, "gain mismatch");
+            crate::prop_assert!(
+                p.max_block_weight() <= max_bw,
+                "balance degraded beyond bound"
+            );
+            crate::prop_assert!(p.validate(&g).is_ok());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn respects_tight_bounds() {
+        // ε=0-style bounds: every block exactly at ceil(total/k)
+        let g = generators::grid2d(8, 8);
+        let part: Vec<u32> = g.nodes().map(|v| if (v / 8) % 2 == 0 { 0 } else { 1 }).collect();
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let bound = g.total_node_weight() / 2; // exactly half
+        let mut rng = Rng::new(3);
+        refine(&g, &mut p, &[bound, bound], 50, &mut rng);
+        assert!(p.block_weight(0) <= bound);
+        assert!(p.block_weight(1) <= bound);
+    }
+
+    #[test]
+    fn already_optimal_is_stable() {
+        let g = generators::grid2d(8, 8);
+        let part: Vec<u32> = g.nodes().map(|v| if v % 8 < 4 { 0 } else { 1 }).collect();
+        let mut p = Partition::from_assignment(&g, 2, part);
+        let before = metrics::edge_cut(&g, &p);
+        assert_eq!(before, 8);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 2, 0.0);
+        let mut rng = Rng::new(4);
+        let gain = refine(&g, &mut p, &[bound, bound], 50, &mut rng);
+        assert_eq!(gain, 0);
+        assert_eq!(metrics::edge_cut(&g, &p), 8);
+    }
+}

@@ -1,0 +1,85 @@
+//! Label-propagation refinement (§2.4): the size-constrained label
+//! propagation algorithm reused "during uncoarsening as a fast and very
+//! simple local search". Unlike clustering, labels here are the k blocks
+//! and moves must keep blocks under their weight bounds; unlike FM it has
+//! no rollback, so we only perform strictly positive-gain moves (plus
+//! zero-gain moves toward lighter blocks to nudge balance).
+
+use super::gain::GainScratch;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Returns total cut gain (>= 0 by construction).
+pub fn refine(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    iterations: usize,
+    rng: &mut Rng,
+) -> i64 {
+    let n = g.n();
+    let mut scratch = GainScratch::new(p.k());
+    let mut total = 0i64;
+    for _ in 0..iterations.max(1) {
+        let order = rng.permutation(n);
+        let mut round = 0i64;
+        for &v in &order {
+            let Some((to, gain)) = scratch.best_move(g, p, v, bounds) else {
+                continue;
+            };
+            let improves_balance =
+                p.block_weight(to) + g.node_weight(v) < p.block_weight(p.block_of(v));
+            if gain > 0 || (gain == 0 && improves_balance) {
+                p.move_node(g, v, to);
+                round += gain;
+            }
+        }
+        total += round;
+        if round == 0 {
+            break;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn improves_random_partition_on_ba() {
+        let mut rng = Rng::new(1);
+        let g = generators::barabasi_albert(400, 3, &mut rng);
+        let part: Vec<u32> = (0..g.n()).map(|_| rng.below(4) as u32).collect();
+        let mut p = Partition::from_assignment(&g, 4, part);
+        let before = metrics::edge_cut(&g, &p);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 4, 0.10);
+        let gain = refine(&g, &mut p, &vec![bound; 4], 8, &mut rng);
+        let after = metrics::edge_cut(&g, &p);
+        assert_eq!(before - after, gain);
+        assert!(after < before, "LP refinement should improve random: {before} -> {after}");
+        assert!(p.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn never_worsens_property() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 8 + case % 40;
+            let g = generators::random_weighted(n, 2 * n, 1, 4, rng);
+            let k = 2 + (case % 4) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let before = metrics::edge_cut(&g, &p);
+            let maxw = p.max_block_weight().max(1);
+            let gain = refine(&g, &mut p, &vec![maxw; k as usize], 4, rng);
+            let after = metrics::edge_cut(&g, &p);
+            crate::prop_assert!(after <= before);
+            crate::prop_assert!(before - after == gain);
+            crate::prop_assert!(p.max_block_weight() <= maxw);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! Uncoarsening-phase local search (§2.1): FM variants, quotient-graph
+//! pair scheduling, flow-based min-cut improvement, and the label
+//! propagation refinement used by the social configurations.
+
+pub mod fm;
+pub mod flow;
+pub mod gain;
+pub mod kway_fm;
+pub mod label_prop_refine;
+pub mod multitry_fm;
+pub mod pq;
+pub mod quotient;
+
+use crate::graph::Graph;
+use crate::partition::config::Config;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Run the full refinement stack configured by `cfg` on one level.
+/// Returns the total cut improvement (>= 0).
+pub fn refine(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) -> i64 {
+    let bound = cfg.bound(g.total_node_weight());
+    let bounds = vec![bound; cfg.k as usize];
+    let mut total = 0i64;
+    if cfg.use_lp_refinement {
+        total += label_prop_refine::refine(g, p, &bounds, cfg.lp_iterations.min(5), rng);
+    }
+    for _ in 0..cfg.kway_fm_rounds {
+        let gained = kway_fm::refine(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+        total += gained;
+        if gained == 0 {
+            break;
+        }
+    }
+    if cfg.use_multitry_fm {
+        // localized searches use a tighter stopping limit than global FM
+        // (§2.1: "a more localized search"); a quarter of the global limit
+        // keeps each try small — see EXPERIMENTS.md §Perf L3.
+        let local_limit = (cfg.fm_unsuccessful_limit / 4).max(15);
+        total += multitry_fm::refine(g, p, &bounds, cfg.multitry_rounds, local_limit, rng);
+    }
+    if cfg.use_pairwise_fm {
+        total += quotient::pairwise_fm(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+    }
+    if cfg.use_flow_refinement {
+        let flow_gain = flow::flow_refine::refine_all_pairs(
+            g,
+            p,
+            bound,
+            cfg.flow_region_factor,
+            cfg.use_most_balanced_cut,
+            rng,
+        );
+        total += flow_gain;
+        if flow_gain > 0 {
+            // min-cut corridors can leave jagged boundaries that seed the
+            // next-finer level badly; one FM smoothing round fixes that
+            // (§Perf: +0 cost when flow found nothing)
+            total += kway_fm::refine(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::Mode;
+    use crate::partition::metrics;
+
+    #[test]
+    fn full_stack_only_improves() {
+        let g = generators::grid2d(16, 16);
+        let mut rng = Rng::new(1);
+        for mode in [Mode::Fast, Mode::Eco, Mode::Strong] {
+            let cfg = Config::from_mode(mode, 4, 0.03, 0);
+            // striped (bad) but feasible partition
+            let part: Vec<u32> = g.nodes().map(|v| v % 4).collect();
+            let mut p = Partition::from_assignment(&g, 4, part);
+            let before = metrics::edge_cut(&g, &p);
+            let gain = refine(&g, &mut p, &cfg, &mut rng);
+            let after = metrics::edge_cut(&g, &p);
+            assert_eq!(before - after, gain, "reported gain must match cut delta");
+            assert!(after <= before, "{mode:?} must not worsen the cut");
+            assert!(p.is_feasible(&g, 0.03), "{mode:?} must stay feasible");
+            assert!(p.validate(&g).is_ok());
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Multi-try FM (§2.1, [30, 37]): a k-way local search *initialized with a
+//! single boundary node* instead of the whole boundary, repeated from many
+//! random seeds. The localized start gives the search a higher chance to
+//! escape local optima that whole-boundary FM is stuck in.
+
+use super::gain::{is_boundary, GainScratch};
+use super::pq::AddressablePQ;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+
+/// Run `rounds` passes; in each pass every boundary node (in random order)
+/// seeds one localized search. Returns total gain (>= 0 per search by
+/// rollback).
+pub fn refine(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    rounds: usize,
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    // §Perf: one search context for ALL localized searches — the PQ, gain
+    // scratch, epoch-stamped moved-marker and journal are reused, so a
+    // search costs O(moves·deg·log) instead of O(n) allocation each.
+    let mut ctx = Ctx {
+        scratch: GainScratch::new(p.k()),
+        pq: AddressablePQ::new(g.n()),
+        moved_epoch: vec![0u32; g.n()],
+        epoch: 0,
+        consumed_round: vec![0u32; g.n()],
+        round: 0,
+        journal: Vec::new(),
+    };
+    let mut total = 0i64;
+    for _ in 0..rounds {
+        let mut boundary: Vec<u32> =
+            g.nodes().filter(|&v| is_boundary(g, p, v)).collect();
+        rng.shuffle(&mut boundary);
+        let mut round_gain = 0i64;
+        // §2.1: "in each round a node is moved at most once" — nodes a
+        // search touched are not eligible as SEEDS again this round (the
+        // consumed marker), which bounds a round's searches; movement
+        // eligibility stays per-search so searches remain thorough.
+        ctx.round += 1;
+        for &seed in &boundary {
+            // skip seeds consumed by an earlier search of this round, and
+            // nodes that stopped being boundary due to earlier moves
+            if ctx.consumed_round[seed as usize] == ctx.round || !is_boundary(g, p, seed) {
+                continue;
+            }
+            round_gain += localized_search(g, p, bounds, seed, unsuccessful_limit, &mut ctx);
+        }
+        total += round_gain;
+        if round_gain == 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// Reusable buffers of the localized searches.
+struct Ctx {
+    scratch: GainScratch,
+    pq: AddressablePQ,
+    moved_epoch: Vec<u32>,
+    epoch: u32,
+    /// round-stamp of nodes already claimed by some search this round
+    consumed_round: Vec<u32>,
+    round: u32,
+    journal: Vec<(u32, u32)>,
+}
+
+/// One localized FM search seeded at `seed`. The PQ starts with only the
+/// seed; neighbors become eligible as nodes move. Rollback to the best
+/// prefix guarantees non-negative gain.
+fn localized_search(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    seed: u32,
+    unsuccessful_limit: usize,
+    ctx: &mut Ctx,
+) -> i64 {
+    ctx.epoch += 1;
+    let epoch = ctx.epoch;
+    ctx.pq.clear();
+    ctx.journal.clear();
+    let moved = &mut ctx.moved_epoch;
+
+    match ctx.scratch.best_move(g, p, seed, bounds) {
+        Some((_, gain)) => ctx.pq.insert(seed, gain),
+        None => return 0,
+    }
+
+    let mut cur = 0i64;
+    let mut best = 0i64;
+    let mut best_len = 0usize;
+    let mut since_best = 0usize;
+    // localized searches stay small: cap the number of moves
+    let move_cap = (unsuccessful_limit * 4).max(16);
+
+    while let Some((v, _)) = ctx.pq.pop() {
+        if moved[v as usize] == epoch {
+            continue;
+        }
+        let Some((to, gain)) = ctx.scratch.best_move(g, p, v, bounds) else {
+            continue;
+        };
+        let from = p.move_node(g, v, to);
+        moved[v as usize] = epoch;
+        ctx.journal.push((v, from));
+        cur += gain;
+        if cur > best {
+            best = cur;
+            best_len = ctx.journal.len();
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best > unsuccessful_limit || ctx.journal.len() >= move_cap {
+                break;
+            }
+        }
+        for &u in g.neighbors(v) {
+            if moved[u as usize] == epoch || ctx.pq.contains(u) {
+                // lazy priorities: queued nodes keep their stale key — the
+                // pop re-validates with a fresh best_move anyway. This
+                // turns the hub-quadratic O(Σ deg(u)·deg(u)) neighbor
+                // refresh on social graphs into O(Σ deg(u)).
+                continue;
+            }
+            if let Some((_, ug)) = ctx.scratch.best_move(g, p, u, bounds) {
+                ctx.pq.insert(u, ug);
+            }
+        }
+    }
+    for &(v, from) in ctx.journal[best_len..].iter().rev() {
+        p.move_node(g, v, from);
+    }
+    // every node this search touched is consumed for the round
+    for &(v, _) in &ctx.journal {
+        ctx.consumed_round[v as usize] = ctx.round;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn never_worsens_and_respects_bounds() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 10 + case % 40;
+            let g = generators::random_weighted(n, 3 * n, 1, 3, rng);
+            let k = 2 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let mut p = Partition::from_assignment(&g, k, part);
+            let before = metrics::edge_cut(&g, &p);
+            let maxw = p.max_block_weight().max(1);
+            let bounds = vec![maxw; k as usize];
+            let gain = refine(&g, &mut p, &bounds, 2, 25, rng);
+            let after = metrics::edge_cut(&g, &p);
+            crate::prop_assert!(after <= before, "worsened {before} -> {after}");
+            crate::prop_assert!(before - after == gain, "gain mismatch");
+            crate::prop_assert!(p.max_block_weight() <= maxw);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn improves_quartered_noise() {
+        let g = generators::grid2d(12, 12);
+        let mut rng = Rng::new(7);
+        // quadrant partition with noise swaps
+        let mut part: Vec<u32> = g
+            .nodes()
+            .map(|v| {
+                let (x, y) = (v % 12, v / 12);
+                (if x < 6 { 0 } else { 1 }) + (if y < 6 { 0 } else { 2 })
+            })
+            .collect();
+        for _ in 0..30 {
+            let i = rng.index(part.len());
+            part[i] = rng.below(4) as u32;
+        }
+        let mut p = Partition::from_assignment(&g, 4, part);
+        let before = metrics::edge_cut(&g, &p);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 4, 0.10);
+        let gain = refine(&g, &mut p, &vec![bound; 4], 3, 40, &mut rng);
+        assert!(gain > 0, "noisy quadrants should improve");
+        assert_eq!(metrics::edge_cut(&g, &p), before - gain);
+    }
+}

@@ -1,0 +1,245 @@
+//! Addressable max-priority queue keyed by integer gain.
+//!
+//! A binary heap with a position index so `update`/`remove` by node id are
+//! O(log n). FM needs exactly this: priorities change whenever a neighbor
+//! moves. Ties are broken by an insertion stamp so behaviour is
+//! deterministic under a fixed seed (the *order of insertion* is what
+//! KaFFPa randomizes).
+
+/// Max-PQ over node ids `0..capacity` with i64 keys.
+#[derive(Clone, Debug)]
+pub struct AddressablePQ {
+    // heap of (key, stamp, id)
+    heap: Vec<(i64, u64, u32)>,
+    // pos[id] = index in heap, or usize::MAX if absent
+    pos: Vec<usize>,
+    stamp: u64,
+}
+
+impl AddressablePQ {
+    pub fn new(capacity: usize) -> Self {
+        Self { heap: Vec::new(), pos: vec![usize::MAX; capacity], stamp: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.pos[id as usize] != usize::MAX
+    }
+
+    pub fn key_of(&self, id: u32) -> Option<i64> {
+        let p = self.pos[id as usize];
+        if p == usize::MAX {
+            None
+        } else {
+            Some(self.heap[p].0)
+        }
+    }
+
+    /// Remove all entries in O(len) — lets FM reuse one PQ allocation
+    /// across the many localized searches of multi-try FM.
+    pub fn clear(&mut self) {
+        for &(_, _, id) in &self.heap {
+            self.pos[id as usize] = usize::MAX;
+        }
+        self.heap.clear();
+    }
+
+    /// Insert a new id (must not be present).
+    pub fn insert(&mut self, id: u32, key: i64) {
+        debug_assert!(!self.contains(id));
+        self.stamp += 1;
+        let idx = self.heap.len();
+        self.heap.push((key, self.stamp, id));
+        self.pos[id as usize] = idx;
+        self.sift_up(idx);
+    }
+
+    /// Change the key of a present id.
+    pub fn update(&mut self, id: u32, key: i64) {
+        let idx = self.pos[id as usize];
+        debug_assert!(idx != usize::MAX);
+        let old = self.heap[idx].0;
+        self.heap[idx].0 = key;
+        if key > old {
+            self.sift_up(idx);
+        } else if key < old {
+            self.sift_down(idx);
+        }
+    }
+
+    /// Insert or update.
+    pub fn push(&mut self, id: u32, key: i64) {
+        if self.contains(id) {
+            self.update(id, key);
+        } else {
+            self.insert(id, key);
+        }
+    }
+
+    /// Remove an id if present.
+    pub fn remove(&mut self, id: u32) {
+        let idx = self.pos[id as usize];
+        if idx == usize::MAX {
+            return;
+        }
+        let last = self.heap.len() - 1;
+        self.swap(idx, last);
+        self.heap.pop();
+        self.pos[id as usize] = usize::MAX;
+        if idx < self.heap.len() {
+            self.sift_down(idx);
+            self.sift_up(idx);
+        }
+    }
+
+    /// Pop the maximum (key, id).
+    pub fn pop(&mut self) -> Option<(u32, i64)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let (key, _, id) = self.heap[0];
+        self.remove(id);
+        Some((id, key))
+    }
+
+    /// Peek the maximum key.
+    pub fn peek_key(&self) -> Option<i64> {
+        self.heap.first().map(|&(k, _, _)| k)
+    }
+
+    #[inline]
+    fn better(&self, a: usize, b: usize) -> bool {
+        // larger key wins; older stamp wins ties (FIFO among equal gains)
+        let (ka, sa, _) = self.heap[a];
+        let (kb, sb, _) = self.heap[b];
+        ka > kb || (ka == kb && sa < sb)
+    }
+
+    #[inline]
+    fn swap(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].2 as usize] = a;
+        self.pos[self.heap[b].2 as usize] = b;
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.better(i, parent) {
+                self.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && self.better(l, best) {
+                best = l;
+            }
+            if r < self.heap.len() && self.better(r, best) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pop_order_is_descending() {
+        let mut pq = AddressablePQ::new(10);
+        for (id, k) in [(3u32, 5i64), (1, 9), (7, 2), (4, 7)] {
+            pq.insert(id, k);
+        }
+        assert_eq!(pq.pop(), Some((1, 9)));
+        assert_eq!(pq.pop(), Some((4, 7)));
+        assert_eq!(pq.pop(), Some((3, 5)));
+        assert_eq!(pq.pop(), Some((7, 2)));
+        assert_eq!(pq.pop(), None);
+    }
+
+    #[test]
+    fn update_moves_elements() {
+        let mut pq = AddressablePQ::new(4);
+        pq.insert(0, 1);
+        pq.insert(1, 2);
+        pq.insert(2, 3);
+        pq.update(0, 10);
+        assert_eq!(pq.pop(), Some((0, 10)));
+        pq.update(2, -5);
+        assert_eq!(pq.pop(), Some((1, 2)));
+        assert_eq!(pq.pop(), Some((2, -5)));
+    }
+
+    #[test]
+    fn remove_absent_is_noop() {
+        let mut pq = AddressablePQ::new(3);
+        pq.remove(1);
+        pq.insert(1, 4);
+        pq.remove(1);
+        assert!(pq.is_empty());
+        assert!(!pq.contains(1));
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut pq = AddressablePQ::new(5);
+        pq.insert(2, 7);
+        pq.insert(4, 7);
+        pq.insert(0, 7);
+        assert_eq!(pq.pop(), Some((2, 7)));
+        assert_eq!(pq.pop(), Some((4, 7)));
+        assert_eq!(pq.pop(), Some((0, 7)));
+    }
+
+    #[test]
+    fn prop_matches_reference_sort() {
+        crate::util::quickcheck::check(|case, rng: &mut Rng| {
+            let n = 2 + case % 64;
+            let mut pq = AddressablePQ::new(n);
+            let mut keys: Vec<(u32, i64)> =
+                (0..n as u32).map(|i| (i, rng.range_i64(-50, 50))).collect();
+            for &(i, k) in &keys {
+                pq.insert(i, k);
+            }
+            // random updates
+            for _ in 0..n / 2 {
+                let i = rng.index(n) as u32;
+                let k = rng.range_i64(-50, 50);
+                pq.update(i, k);
+                keys[i as usize].1 = k;
+            }
+            keys.sort_by(|a, b| b.1.cmp(&a.1));
+            let mut popped = Vec::new();
+            while let Some((_, k)) = pq.pop() {
+                popped.push(k);
+            }
+            let expect: Vec<i64> = keys.iter().map(|&(_, k)| k).collect();
+            crate::prop_assert!(popped == expect, "pop order mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! The quotient graph: which block pairs share a boundary, and the
+//! pairwise scheduling of 2-way refinements over them (§2.1 applies both
+//! the pair FM and the flow method "between all pairs of blocks that
+//! share a non-empty boundary").
+
+use super::fm::refine_pair;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::rng::Rng;
+use crate::BlockId;
+
+/// All block pairs `(a < b)` with at least one cut edge between them,
+/// together with the weight of that pair's cut.
+pub fn adjacent_pairs(g: &Graph, p: &Partition) -> Vec<(BlockId, BlockId, i64)> {
+    let mut cutw: std::collections::HashMap<(u32, u32), i64> = Default::default();
+    for v in g.nodes() {
+        let bv = p.block_of(v);
+        for (u, w) in g.neighbors_w(v) {
+            if u > v {
+                let bu = p.block_of(u);
+                if bu != bv {
+                    let key = (bv.min(bu), bv.max(bu));
+                    *cutw.entry(key).or_insert(0) += w;
+                }
+            }
+        }
+    }
+    let mut out: Vec<(u32, u32, i64)> =
+        cutw.into_iter().map(|((a, b), w)| (a, b, w)).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Run 2-way FM over all adjacent block pairs in random order; repeat
+/// while any pair improves (capped to avoid pathological cycling).
+/// Returns the total gain.
+pub fn pairwise_fm(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+) -> i64 {
+    let mut total = 0i64;
+    for _round in 0..3 {
+        let mut pairs = adjacent_pairs(g, p);
+        if pairs.is_empty() {
+            break;
+        }
+        rng.shuffle(&mut pairs);
+        let mut round_gain = 0i64;
+        for (a, b, _) in pairs {
+            round_gain += refine_pair(g, p, a, b, bounds, unsuccessful_limit, rng);
+        }
+        total += round_gain;
+        if round_gain == 0 {
+            break;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::metrics;
+
+    #[test]
+    fn pairs_of_quartered_grid() {
+        let g = generators::grid2d(8, 8);
+        // quadrants
+        let part: Vec<u32> = g
+            .nodes()
+            .map(|v| {
+                let (x, y) = (v % 8, v / 8);
+                (if x < 4 { 0 } else { 1 }) + (if y < 4 { 0 } else { 2 })
+            })
+            .collect();
+        let p = Partition::from_assignment(&g, 4, part);
+        let pairs = adjacent_pairs(&g, &p);
+        // quadrants touch horizontally and vertically, not diagonally
+        let keys: Vec<(u32, u32)> = pairs.iter().map(|&(a, b, _)| (a, b)).collect();
+        assert_eq!(keys, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+        for &(_, _, w) in &pairs {
+            assert_eq!(w, 4); // 4 boundary edges per adjacent quadrant pair
+        }
+    }
+
+    #[test]
+    fn no_pairs_single_block() {
+        let g = generators::grid2d(4, 4);
+        let p = Partition::trivial(&g, 3);
+        assert!(adjacent_pairs(&g, &p).is_empty());
+    }
+
+    #[test]
+    fn pairwise_improves_and_respects_balance() {
+        let g = generators::grid2d(12, 12);
+        let part: Vec<u32> = g.nodes().map(|v| v % 4).collect();
+        let mut p = Partition::from_assignment(&g, 4, part);
+        let before = metrics::edge_cut(&g, &p);
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 4, 0.03);
+        let mut rng = Rng::new(1);
+        let gain = pairwise_fm(&g, &mut p, &vec![bound; 4], 50, &mut rng);
+        let after = metrics::edge_cut(&g, &p);
+        assert_eq!(before - after, gain);
+        assert!(after < before);
+        assert!(p.is_feasible(&g, 0.03));
+        assert!(p.validate(&g).is_ok());
+    }
+}

@@ -1,0 +1,135 @@
+//! Artifact discovery: the `manifest.json` written by `python/compile/aot.py`
+//! plus a filename-scan fallback so a directory of bare `*.hlo.txt` files
+//! still loads.
+
+use std::path::{Path, PathBuf};
+
+/// One Fiedler size variant on disk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FiedlerArtifact {
+    pub size: usize,
+    pub path: PathBuf,
+}
+
+/// One LP shape variant on disk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LpArtifact {
+    pub n: usize,
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+/// Everything found in an artifact directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSet {
+    pub fiedler: Vec<FiedlerArtifact>,
+    pub lp: Vec<LpArtifact>,
+}
+
+impl ArtifactSet {
+    /// Scan `dir`. Files are recognized by name:
+    /// `fiedler_<size>.hlo.txt` and `lp_<n>_<k>.hlo.txt` (exactly what
+    /// `aot.py` emits; the manifest is informational).
+    pub fn discover(dir: &Path) -> std::io::Result<ArtifactSet> {
+        let mut set = ArtifactSet::default();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            if let Some(sz) = stem.strip_prefix("fiedler_") {
+                if let Ok(size) = sz.parse::<usize>() {
+                    set.fiedler.push(FiedlerArtifact { size, path: entry.path() });
+                }
+            } else if let Some(rest) = stem.strip_prefix("lp_") {
+                let mut it = rest.split('_');
+                if let (Some(n), Some(k), None) = (it.next(), it.next(), it.next()) {
+                    if let (Ok(n), Ok(k)) = (n.parse(), k.parse()) {
+                        set.lp.push(LpArtifact { n, k, path: entry.path() });
+                    }
+                }
+            }
+        }
+        set.fiedler.sort_by_key(|a| a.size);
+        set.lp.sort_by_key(|a| (a.n, a.k));
+        Ok(set)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fiedler.is_empty() && self.lp.is_empty()
+    }
+
+    /// Smallest Fiedler variant that fits `n` padded nodes.
+    pub fn fiedler_for(&self, n: usize) -> Option<&FiedlerArtifact> {
+        self.fiedler.iter().find(|a| a.size >= n)
+    }
+
+    /// Smallest LP variant fitting `n` nodes and `k` blocks.
+    pub fn lp_for(&self, n: usize, k: usize) -> Option<&LpArtifact> {
+        self.lp.iter().find(|a| a.n >= n && a.k >= k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("kahip_artifacts_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn touch(dir: &Path, name: &str) {
+        let mut f = std::fs::File::create(dir.join(name)).unwrap();
+        writeln!(f, "HloModule dummy").unwrap();
+    }
+
+    #[test]
+    fn discovers_and_sorts() {
+        let d = tempdir("discover");
+        touch(&d, "fiedler_512.hlo.txt");
+        touch(&d, "fiedler_64.hlo.txt");
+        touch(&d, "lp_256_8.hlo.txt");
+        touch(&d, "lp_128_4.hlo.txt");
+        touch(&d, "manifest.json");
+        touch(&d, "unrelated.txt");
+        let set = ArtifactSet::discover(&d).unwrap();
+        assert_eq!(set.fiedler.iter().map(|a| a.size).collect::<Vec<_>>(), vec![64, 512]);
+        assert_eq!(set.lp.len(), 2);
+        assert_eq!(set.lp[0].n, 128);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn picks_smallest_fitting_variant() {
+        let d = tempdir("fit");
+        for s in [64, 128, 512] {
+            touch(&d, &format!("fiedler_{s}.hlo.txt"));
+        }
+        let set = ArtifactSet::discover(&d).unwrap();
+        assert_eq!(set.fiedler_for(10).unwrap().size, 64);
+        assert_eq!(set.fiedler_for(64).unwrap().size, 64);
+        assert_eq!(set.fiedler_for(65).unwrap().size, 128);
+        assert_eq!(set.fiedler_for(400).unwrap().size, 512);
+        assert!(set.fiedler_for(513).is_none());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_is_empty_set() {
+        let d = tempdir("empty");
+        let set = ArtifactSet::discover(&d).unwrap();
+        assert!(set.is_empty());
+        assert!(set.fiedler_for(8).is_none());
+        assert!(set.lp_for(8, 2).is_none());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactSet::discover(Path::new("/nonexistent_kahip_dir")).is_err());
+    }
+}

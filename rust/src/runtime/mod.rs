@@ -1,0 +1,357 @@
+//! The PJRT runtime (L3 side of the AOT bridge): load the HLO-text
+//! artifacts `python/compile/aot.py` emitted, compile them once on the
+//! PJRT CPU client, and execute them from the partitioning hot path.
+//!
+//! The `xla` crate's handles wrap `Rc`s and are `!Send`, but KaHIP's
+//! callers (evolutionary islands, the simulated ParHIP world) share the
+//! [`FiedlerBackend`] across threads. The runtime therefore owns a
+//! dedicated *service thread* that holds the client and all compiled
+//! executables; callers talk to it over channels. One compiled
+//! executable per artifact variant, compiled once at startup — Python
+//! never runs here.
+
+pub mod artifact;
+
+use crate::initial::spectral::FiedlerBackend;
+use artifact::ArtifactSet;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+enum Request {
+    /// run fiedler variant `size` on (b, u, x0) → fiedler vector
+    Fiedler { size: usize, b: Vec<f32>, u: Vec<f32>, x0: Vec<f32>, reply: mpsc::Sender<Option<Vec<f32>>> },
+    /// run LP variant (n, k) on (a, h) → labels
+    LpStep { n: usize, k: usize, a: Vec<f32>, h: Vec<f32>, reply: mpsc::Sender<Option<Vec<i32>>> },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread. Share by reference
+/// (`&PjrtRuntime` is `Sync`).
+pub struct PjrtRuntime {
+    tx: Mutex<mpsc::Sender<Request>>,
+    fiedler_sizes: Vec<usize>,
+    lp_shapes: Vec<(usize, usize)>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtRuntime {
+    /// Discover artifacts in `dir`, compile all of them on a service
+    /// thread, and return the handle. Errors if the directory has no
+    /// artifacts or any compilation fails.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime, String> {
+        let set = ArtifactSet::discover(dir).map_err(|e| format!("scan {dir:?}: {e}"))?;
+        if set.is_empty() {
+            return Err(format!("no artifacts in {dir:?} (run `make artifacts`)"));
+        }
+        Self::from_set(set)
+    }
+
+    /// Default artifact location: `$KAHIP_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<PjrtRuntime, String> {
+        let dir = std::env::var("KAHIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    fn from_set(set: ArtifactSet) -> Result<PjrtRuntime, String> {
+        let fiedler_sizes: Vec<usize> = set.fiedler.iter().map(|a| a.size).collect();
+        let lp_shapes: Vec<(usize, usize)> = set.lp.iter().map(|a| (a.n, a.k)).collect();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(set, rx, ready_tx))
+            .map_err(|e| format!("spawn pjrt service: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "pjrt service died during startup".to_string())??;
+        Ok(PjrtRuntime { tx: Mutex::new(tx), fiedler_sizes, lp_shapes, join: Some(join) })
+    }
+
+    pub fn fiedler_sizes(&self) -> &[usize] {
+        &self.fiedler_sizes
+    }
+
+    pub fn lp_shapes(&self) -> &[(usize, usize)] {
+        &self.lp_shapes
+    }
+
+    fn send(&self, req: Request) {
+        // a dead service thread surfaces as a reply-channel hangup, which
+        // callers observe as None
+        let _ = self.tx.lock().expect("pjrt tx poisoned").send(req);
+    }
+
+    /// Execute one dense LP step (labels = argmax A·H) on the smallest
+    /// fitting variant; inputs are row-major and get zero-padded here.
+    /// None if no variant fits or execution fails.
+    pub fn lp_step(&self, n: usize, k: usize, a: &[f32], h: &[f32]) -> Option<Vec<i32>> {
+        let &(vn, vk) = self.lp_shapes.iter().find(|&&(vn, vk)| vn >= n && vk >= k)?;
+        // pad into the variant shape
+        let mut ap = vec![0f32; vn * vn];
+        for r in 0..n {
+            ap[r * vn..r * vn + n].copy_from_slice(&a[r * n..(r + 1) * n]);
+        }
+        let mut hp = vec![0f32; vn * vk];
+        for r in 0..n {
+            hp[r * vk..r * vk + k].copy_from_slice(&h[r * k..(r + 1) * k]);
+        }
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::LpStep { n: vn, k: vk, a: ap, h: hp, reply });
+        let mut labels = rx.recv().ok()??;
+        labels.truncate(n);
+        Some(labels)
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        self.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl FiedlerBackend for PjrtRuntime {
+    fn pick_size(&self, n: usize) -> Option<usize> {
+        if n > crate::initial::spectral::MAX_SPECTRAL_N {
+            return None;
+        }
+        self.fiedler_sizes.iter().copied().find(|&s| s >= n)
+    }
+
+    fn run(&self, size: usize, b: &[f32], u: &[f32], x0: &[f32]) -> Option<Vec<f32>> {
+        debug_assert_eq!(b.len(), size * size);
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Fiedler {
+            size,
+            b: b.to_vec(),
+            u: u.to_vec(),
+            x0: x0.to_vec(),
+            reply,
+        });
+        rx.recv().ok()?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-aot-pallas"
+    }
+}
+
+/// The service thread: owns the client + executables, loops on requests.
+fn service_main(
+    set: ArtifactSet,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let startup = (|| -> Result<_, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut fiedler = Vec::new();
+        for a in &set.fiedler {
+            let exe = compile(&client, &a.path)?;
+            fiedler.push((a.size, exe));
+        }
+        let mut lp = Vec::new();
+        for a in &set.lp {
+            let exe = compile(&client, &a.path)?;
+            lp.push(((a.n, a.k), exe));
+        }
+        Ok((client, fiedler, lp))
+    })();
+    let (_client, fiedler, lp) = match startup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Fiedler { size, b, u, x0, reply } => {
+                let out = fiedler
+                    .iter()
+                    .find(|(s, _)| *s == size)
+                    .and_then(|(_, exe)| run_fiedler(exe, size, &b, &u, &x0).ok());
+                let _ = reply.send(out);
+            }
+            Request::LpStep { n, k, a, h, reply } => {
+                let out = lp
+                    .iter()
+                    .find(|(shape, _)| *shape == (n, k))
+                    .and_then(|(_, exe)| run_lp(exe, n, k, &a, &h).ok());
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or("non-utf8 path")?)
+        .map_err(|e| format!("parse {path:?}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| format!("compile {path:?}: {e}"))
+}
+
+fn run_fiedler(
+    exe: &xla::PjRtLoadedExecutable,
+    size: usize,
+    b: &[f32],
+    u: &[f32],
+    x0: &[f32],
+) -> Result<Vec<f32>, String> {
+    let s = size as i64;
+    let lb = xla::Literal::vec1(b).reshape(&[s, s]).map_err(|e| e.to_string())?;
+    let lu = xla::Literal::vec1(u);
+    let lx = xla::Literal::vec1(x0);
+    let result = exe
+        .execute::<xla::Literal>(&[lb, lu, lx])
+        .map_err(|e| e.to_string())?[0][0]
+        .to_literal_sync()
+        .map_err(|e| e.to_string())?;
+    // aot.py lowers with return_tuple=True → 1-tuple
+    let out = result.to_tuple1().map_err(|e| e.to_string())?;
+    out.to_vec::<f32>().map_err(|e| e.to_string())
+}
+
+fn run_lp(
+    exe: &xla::PjRtLoadedExecutable,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    h: &[f32],
+) -> Result<Vec<i32>, String> {
+    let (ni, ki) = (n as i64, k as i64);
+    let la = xla::Literal::vec1(a).reshape(&[ni, ni]).map_err(|e| e.to_string())?;
+    let lh = xla::Literal::vec1(h).reshape(&[ni, ki]).map_err(|e| e.to_string())?;
+    let result = exe
+        .execute::<xla::Literal>(&[la, lh])
+        .map_err(|e| e.to_string())?[0][0]
+        .to_literal_sync()
+        .map_err(|e| e.to_string())?;
+    let out = result.to_tuple1().map_err(|e| e.to_string())?;
+    out.to_vec::<i32>().map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::initial::spectral::{build_inputs, fiedler_bisection, PowerIteration};
+    use crate::partition::metrics;
+    use crate::rng::Rng;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        // unit tests run from the workspace root; skip silently when the
+        // artifacts have not been built (CI runs `make artifacts` first)
+        PjrtRuntime::load(Path::new("artifacts")).ok()
+    }
+
+    #[test]
+    fn loads_all_variants() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.fiedler_sizes().contains(&64));
+        assert!(rt.fiedler_sizes().contains(&512));
+        assert!(!rt.lp_shapes().is_empty());
+    }
+
+    #[test]
+    fn pjrt_fiedler_matches_rust_fallback() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::grid2d(8, 4);
+        let mut rng = Rng::new(7);
+        let size = rt.pick_size(g.n()).unwrap();
+        let (b, u, x0) = build_inputs(&g, size, &mut rng);
+        let pjrt = rt.run(size, &b, &u, &x0).expect("pjrt run");
+        let rust = PowerIteration.run(size, &b, &u, &x0).expect("fallback run");
+        // both run the same 200-step iteration; allow f32 drift
+        for (p, r) in pjrt.iter().zip(rust.iter()) {
+            assert!((p - r).abs() < 1e-3, "pjrt {p} vs rust {r}");
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_bisects_barbell() {
+        let Some(rt) = runtime() else { return };
+        let mut b = crate::graph::GraphBuilder::new(12);
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                b.add_edge(u, v, 1);
+                b.add_edge(u + 6, v + 6, 1);
+            }
+        }
+        b.add_edge(5, 6, 1);
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(1);
+        let p = fiedler_bisection(&g, 6, &rt, &mut rng).unwrap();
+        assert_eq!(metrics::edge_cut(&g, &p), 1, "PJRT sweep must cut the bridge");
+    }
+
+    #[test]
+    fn pjrt_backend_is_shareable_across_threads() {
+        let Some(rt) = runtime() else { return };
+        let g = generators::grid2d(6, 6);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let rt = &rt;
+                let g = &g;
+                s.spawn(move || {
+                    let mut rng = Rng::new(t);
+                    let size = rt.pick_size(g.n()).unwrap();
+                    let (b, u, x0) = build_inputs(g, size, &mut rng);
+                    let out = rt.run(size, &b, &u, &x0).expect("threaded run");
+                    assert_eq!(out.len(), size);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn lp_step_majority_rule() {
+        let Some(rt) = runtime() else { return };
+        // two 4-cliques, no cross edges, one vertex mislabeled
+        let n = 8;
+        let mut a = vec![0f32; n * n];
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    a[i * n + j] = 1.0;
+                    a[(i + 4) * n + (j + 4)] = 1.0;
+                }
+            }
+        }
+        let k = 2;
+        let labels = [0usize, 0, 0, 1, 1, 1, 1, 1]; // vertex 3 mislabeled
+        let mut h = vec![0f32; n * k];
+        for (v, &l) in labels.iter().enumerate() {
+            h[v * k + l] = 1.0;
+        }
+        let out = rt.lp_step(n, k, &a, &h).expect("lp step");
+        assert_eq!(out[..4], [0, 0, 0, 0], "clique majority wins: {out:?}");
+        assert_eq!(out[4..], [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn missing_artifacts_error_cleanly() {
+        let err = match PjrtRuntime::load(Path::new("/nonexistent_kahip_dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail on a missing directory"),
+        };
+        assert!(err.contains("nonexistent"));
+    }
+
+    #[test]
+    fn oversized_requests_declined() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.pick_size(4096).is_none());
+        assert!(rt.lp_step(4096, 2, &[], &[]).is_none());
+    }
+}

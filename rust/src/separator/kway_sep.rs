@@ -1,0 +1,91 @@
+//! The `partition_to_vertex_separator` program (§4.4.1): compute a k-way
+//! node separator from a k-way partition by applying the pairwise vertex
+//! cover between *all pairs of blocks that share a non-empty boundary*;
+//! the union of the pairwise separators is a k-way separator (§2.8).
+
+use super::vertex_cover::boundary_vertex_cover;
+use super::Separator;
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::refinement::quotient::adjacent_pairs;
+
+/// Compute a k-way separator from a partition.
+pub fn partition_to_vertex_separator(g: &Graph, p: &Partition) -> Separator {
+    let mut sep_set: std::collections::BTreeSet<u32> = Default::default();
+    for (a, b, _) in adjacent_pairs(g, p) {
+        for v in boundary_vertex_cover(g, p, a, b) {
+            sep_set.insert(v);
+        }
+    }
+    // pairwise covers handle edges between non-separator nodes of distinct
+    // blocks; union them
+    let sep = Separator {
+        k: p.k(),
+        part: p.assignment().to_vec(),
+        separator: sep_set.into_iter().collect(),
+    };
+    debug_assert!(sep.validate(g).is_ok());
+    sep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::{Config, Mode};
+
+    #[test]
+    fn kway_separator_on_quartered_grid() {
+        let g = generators::grid2d(8, 8);
+        let part: Vec<u32> = g
+            .nodes()
+            .map(|v| {
+                let (x, y) = (v % 8, v / 8);
+                (if x < 4 { 0 } else { 1 }) + (if y < 4 { 0 } else { 2 })
+            })
+            .collect();
+        let p = Partition::from_assignment(&g, 4, part);
+        let sep = partition_to_vertex_separator(&g, &p);
+        assert!(sep.validate(&g).is_ok());
+        // each of 4 pair boundaries is 4 edges; covers of <= 4 each
+        assert!(sep.separator.len() <= 16);
+        assert!(!sep.separator.is_empty());
+    }
+
+    #[test]
+    fn full_pipeline_kaffpa_then_separator() {
+        let g = generators::grid2d(14, 14);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 3);
+        let res = crate::coordinator::kaffpa(&g, &cfg, None, None);
+        let sep = partition_to_vertex_separator(&g, &res.partition);
+        assert!(sep.validate(&g).is_ok());
+        assert!(!sep.separator.is_empty());
+        // removal must disconnect: check that block-to-block edges all touch S
+        let out = sep.output_assignment();
+        for v in g.nodes() {
+            for &u in g.neighbors(v) {
+                let (bv, bu) = (out[v as usize], out[u as usize]);
+                if bv != bu {
+                    assert!(
+                        bv == 4 || bu == 4,
+                        "edge {v}-{u} crosses blocks without separator"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_kway_separator_valid() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 10 + case % 40;
+            let g = generators::random_weighted(n, 3 * n, 1, 2, rng);
+            let k = 2 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let p = Partition::from_assignment(&g, k, part);
+            let sep = partition_to_vertex_separator(&g, &p);
+            crate::prop_assert!(sep.validate(&g).is_ok(), "invalid k-way separator");
+            Ok(())
+        });
+    }
+}

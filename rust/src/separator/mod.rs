@@ -1,0 +1,79 @@
+//! Node separators (§2.8, §4.4): partition V into blocks V₁…V_k plus a
+//! set S whose removal disconnects the blocks. 2-way separators come from
+//! a bipartition's boundary improved by a weighted vertex cover / node
+//! flow (Pothen et al. [27]); k-way separators apply the pairwise method
+//! between all adjacent block pairs of a KaFFPa partition.
+
+pub mod bisep;
+pub mod flow_sep;
+pub mod kway_sep;
+pub mod vertex_cover;
+
+use crate::graph::Graph;
+
+/// A separator result: remaining block of every node, and the separator
+/// set (whose members' block entries are *stale* — output format §3.2.2
+/// overwrites them with id k).
+#[derive(Clone, Debug)]
+pub struct Separator {
+    pub k: u32,
+    pub part: Vec<u32>,
+    pub separator: Vec<u32>,
+}
+
+impl Separator {
+    /// Total node weight of the separator.
+    pub fn weight(&self, g: &Graph) -> i64 {
+        self.separator.iter().map(|&v| g.node_weight(v)).sum()
+    }
+
+    /// §3.2.2 output: separator nodes get block id k.
+    pub fn output_assignment(&self) -> Vec<u32> {
+        crate::partition::io::separator_assignment(&self.part, self.k, &self.separator)
+    }
+
+    /// Validate: after removing S, no edge connects two different blocks.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let in_sep: std::collections::HashSet<u32> =
+            self.separator.iter().copied().collect();
+        for v in g.nodes() {
+            if in_sep.contains(&v) {
+                continue;
+            }
+            for &u in g.neighbors(v) {
+                if in_sep.contains(&u) {
+                    continue;
+                }
+                if self.part[v as usize] != self.part[u as usize] {
+                    return Err(format!(
+                        "edge {v}-{u} connects block {} and {} without separator",
+                        self.part[v as usize], self.part[u as usize]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn output_assignment_marks_separator() {
+        let g = generators::path(5);
+        let s = Separator { k: 2, part: vec![0, 0, 0, 1, 1], separator: vec![2] };
+        assert!(s.validate(&g).is_ok());
+        assert_eq!(s.output_assignment(), vec![0, 0, 2, 1, 1]);
+        assert_eq!(s.weight(&g), 1);
+    }
+
+    #[test]
+    fn validate_catches_leaks() {
+        let g = generators::path(4);
+        let s = Separator { k: 2, part: vec![0, 0, 1, 1], separator: vec![] };
+        assert!(s.validate(&g).is_err());
+    }
+}

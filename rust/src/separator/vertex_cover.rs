@@ -1,0 +1,181 @@
+//! The Pothen et al. [27] post-processing (§2.8): from the cut edges of a
+//! bipartition, compute the smallest (weighted) subset S of boundary
+//! nodes covering every cut edge — a minimum *vertex cover* of the
+//! bipartite boundary graph. By König's theorem this equals a maximum
+//! matching / minimum s-t node cut, which we compute with Dinic on the
+//! node-split network: s → a (cap c(a)) → b (∞) → t (cap c(b)).
+
+use crate::graph::Graph;
+use crate::partition::Partition;
+use crate::refinement::flow::max_flow::FlowNetwork;
+use crate::BlockId;
+
+/// Minimum-weight vertex cover of the cut edges between blocks `a` and
+/// `b`: returns the separator node set.
+pub fn boundary_vertex_cover(g: &Graph, p: &Partition, a: BlockId, b: BlockId) -> Vec<u32> {
+    // collect boundary nodes on each side of the (a, b) cut
+    let mut a_side: Vec<u32> = Vec::new();
+    let mut b_side: Vec<u32> = Vec::new();
+    let mut a_idx = std::collections::HashMap::new();
+    let mut b_idx = std::collections::HashMap::new();
+    for v in g.nodes() {
+        if p.block_of(v) == a && g.neighbors(v).iter().any(|&u| p.block_of(u) == b) {
+            a_idx.insert(v, a_side.len() as u32);
+            a_side.push(v);
+        } else if p.block_of(v) == b && g.neighbors(v).iter().any(|&u| p.block_of(u) == a)
+        {
+            b_idx.insert(v, b_side.len() as u32);
+            b_side.push(v);
+        }
+    }
+    if a_side.is_empty() {
+        return Vec::new();
+    }
+    // network: 0 = s, 1 = t, then a-side nodes, then b-side nodes
+    let na = a_side.len() as u32;
+    let nb = b_side.len() as u32;
+    let s = 0u32;
+    let t = 1u32;
+    let aid = |i: u32| 2 + i;
+    let bid = |i: u32| 2 + na + i;
+    let mut net = FlowNetwork::new((2 + na + nb) as usize);
+    const INF: i64 = i64::MAX / 4;
+    for (i, &v) in a_side.iter().enumerate() {
+        net.add_edge(s, aid(i as u32), g.node_weight(v).max(1), 0);
+    }
+    for (j, &v) in b_side.iter().enumerate() {
+        net.add_edge(bid(j as u32), t, g.node_weight(v).max(1), 0);
+    }
+    for (i, &v) in a_side.iter().enumerate() {
+        for &u in g.neighbors(v) {
+            if p.block_of(u) == b {
+                let j = b_idx[&u];
+                net.add_edge(aid(i as u32), bid(j), INF, 0);
+            }
+        }
+    }
+    net.max_flow(s, t);
+    // min cut: a-side nodes NOT reachable from s (their s-arc is cut) +
+    // b-side nodes reachable from s (their t-arc is cut)
+    let reach = net.source_side_min(s);
+    let mut cover = Vec::new();
+    for (i, &v) in a_side.iter().enumerate() {
+        if !reach[aid(i as u32) as usize] {
+            cover.push(v);
+        }
+    }
+    for (j, &v) in b_side.iter().enumerate() {
+        if reach[bid(j as u32) as usize] {
+            cover.push(v);
+        }
+    }
+    cover
+}
+
+/// Check that `cover` touches every cut edge between `a` and `b`.
+pub fn covers_all_cut_edges(
+    g: &Graph,
+    p: &Partition,
+    a: BlockId,
+    b: BlockId,
+    cover: &[u32],
+) -> bool {
+    let in_cover: std::collections::HashSet<u32> = cover.iter().copied().collect();
+    for v in g.nodes() {
+        if p.block_of(v) != a {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            if p.block_of(u) == b && !in_cover.contains(&v) && !in_cover.contains(&u) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+
+    #[test]
+    fn covers_grid_boundary_minimally() {
+        let g = generators::grid2d(6, 4);
+        let part: Vec<u32> = g.nodes().map(|v| if v % 6 < 3 { 0 } else { 1 }).collect();
+        let p = Partition::from_assignment(&g, 2, part);
+        let cover = boundary_vertex_cover(&g, &p, 0, 1);
+        assert!(covers_all_cut_edges(&g, &p, 0, 1, &cover));
+        // 4 disjoint cut edges -> cover exactly 4 (one endpoint each)
+        assert_eq!(cover.len(), 4);
+    }
+
+    #[test]
+    fn star_boundary_covers_with_center() {
+        // center in block 0, leaves in block 1: cover = {center}
+        let g = generators::star(6);
+        let part = vec![0u32, 1, 1, 1, 1, 1, 1];
+        let p = Partition::from_assignment(&g, 2, part);
+        let cover = boundary_vertex_cover(&g, &p, 0, 1);
+        assert_eq!(cover, vec![0], "the hub covers all cut edges");
+    }
+
+    #[test]
+    fn respects_node_weights() {
+        // cut edges a1-b1, a2-b1; cover should be {b1} (cheap), even though
+        // a-side has two nodes
+        let mut bld = crate::graph::GraphBuilder::new(3);
+        bld.set_node_weights(vec![5, 5, 1]);
+        bld.add_edge(0, 2, 1);
+        bld.add_edge(1, 2, 1);
+        let g = bld.build().unwrap();
+        let p = Partition::from_assignment(&g, 2, vec![0, 0, 1]);
+        let cover = boundary_vertex_cover(&g, &p, 0, 1);
+        assert_eq!(cover, vec![2]);
+    }
+
+    #[test]
+    fn prop_cover_is_valid_and_no_bigger_than_either_side() {
+        crate::util::quickcheck::check(|case, rng: &mut Rng| {
+            let n = 8 + case % 40;
+            let g = generators::random_weighted(n, 3 * n, 1, 1, rng);
+            let part: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+            let p = Partition::from_assignment(&g, 2, part);
+            let cover = boundary_vertex_cover(&g, &p, 0, 1);
+            crate::prop_assert!(
+                covers_all_cut_edges(&g, &p, 0, 1, &cover),
+                "uncovered cut edge"
+            );
+            // König optimality sanity: no larger than the boundary of either side
+            let a_boundary = g
+                .nodes()
+                .filter(|&v| {
+                    p.block_of(v) == 0
+                        && g.neighbors(v).iter().any(|&u| p.block_of(u) == 1)
+                })
+                .count();
+            let b_boundary = g
+                .nodes()
+                .filter(|&v| {
+                    p.block_of(v) == 1
+                        && g.neighbors(v).iter().any(|&u| p.block_of(u) == 0)
+                })
+                .count();
+            crate::prop_assert!(
+                cover.len() <= a_boundary.min(b_boundary).max(1),
+                "cover {} bigger than smaller boundary {}",
+                cover.len(),
+                a_boundary.min(b_boundary)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_when_no_boundary() {
+        let g = generators::grid2d(4, 2);
+        let p = Partition::trivial(&g, 2);
+        assert!(boundary_vertex_cover(&g, &p, 0, 1).is_empty());
+    }
+}

@@ -1,0 +1,47 @@
+//! Small shared substrates: phase timers, statistics, a scoped thread pool
+//! and a miniature property-testing framework. All std-only — the build
+//! image has no network access, so commodity crates (rayon, criterion,
+//! proptest) are replaced by these modules.
+
+pub mod quickcheck;
+pub mod stat;
+pub mod threads;
+pub mod timer;
+
+/// Integer ceiling division for balance bounds: `ceil(a / b)`.
+#[inline]
+pub fn ceil_div(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// The KaHIP balance bound `L_max = (1 + ε) * ceil(c(V) / k)`.
+/// KaHIP additionally never allows a block to be smaller than the heaviest
+/// single node would force, hence the `max` with `ceil`.
+#[inline]
+pub fn block_weight_bound(total_weight: i64, k: u32, epsilon: f64) -> i64 {
+    let avg = ceil_div(total_weight, k as i64);
+    ((1.0 + epsilon) * avg as f64).floor() as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn bound_matches_guide_formula() {
+        // |V_i| <= (1+0.03) |V|/k on unweighted graphs (guide §5.2)
+        assert_eq!(block_weight_bound(1000, 4, 0.03), 257);
+        // eps = 0 gives the perfectly balanced bound ceil(|V|/k)
+        assert_eq!(block_weight_bound(1000, 4, 0.0), 250);
+        assert_eq!(block_weight_bound(1001, 4, 0.0), 251);
+    }
+}

@@ -1,0 +1,101 @@
+//! A miniature property-testing framework (proptest stand-in).
+//!
+//! Provides seeded case generation with automatic input-size ramping and a
+//! `forall` runner that reports the failing case's seed so failures are
+//! reproducible. Property tests across the crate (partition invariants,
+//! flow = cut duality, contraction conservation laws, ...) are built on
+//! this module.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xCA41_B300 }
+    }
+}
+
+/// Run `prop(case_index, &mut rng)` for `cfg.cases` cases. The rng passed to
+/// each case is independently derived from the master seed, so a failure
+/// message "case i / seed s" fully reproduces the input.
+pub fn forall(cfg: &Config, mut prop: impl FnMut(usize, &mut Rng) -> Result<(), String>) {
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.split(case as u64);
+        if let Err(msg) = prop(case, &mut rng) {
+            panic!("property failed at case {case} (master seed {}): {msg}", cfg.seed);
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check(prop: impl FnMut(usize, &mut Rng) -> Result<(), String>) {
+    forall(&Config::default(), prop);
+}
+
+/// Assert-like helper producing `Result<(), String>` for use inside props.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Ramp a size parameter with the case index: early cases small (shrink-ish
+/// behaviour by construction), later cases larger.
+pub fn ramped_size(case: usize, lo: usize, hi: usize) -> usize {
+    if hi <= lo {
+        return lo;
+    }
+    lo + (case * (hi - lo)) / 63.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        check(|_case, rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(&Config { cases: 8, seed: 1 }, |case, _| {
+            if case == 5 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn ramp_is_monotone_and_bounded() {
+        let mut last = 0;
+        for c in 0..64 {
+            let s = ramped_size(c, 2, 100);
+            assert!((2..=100).contains(&s));
+            assert!(s >= last);
+            last = s;
+        }
+    }
+}

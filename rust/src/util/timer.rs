@@ -1,0 +1,106 @@
+//! Phase timing — the instrumentation used by the coordinator, the benches
+//! and the §Perf profiling pass (the image has no `perf`/flamegraph, so the
+//! framework self-reports per-phase wall time).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations; used as a poor man's profiler.
+/// Thread-safe so parallel phases can report into one registry.
+#[derive(Debug, Default)]
+pub struct PhaseTimes {
+    inner: Mutex<BTreeMap<String, (Duration, u64)>>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn add(&self, phase: &str, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// (phase, total seconds, call count), sorted by descending total.
+    pub fn report(&self) -> Vec<(String, f64, u64)> {
+        let m = self.inner.lock().unwrap();
+        let mut v: Vec<_> = m
+            .iter()
+            .map(|(k, (d, c))| (k.clone(), d.as_secs_f64(), *c))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (phase, secs, calls) in self.report() {
+            s.push_str(&format!("{phase:<32} {secs:>10.4}s  x{calls}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_secs() > 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let p = PhaseTimes::new();
+        let x = p.time("a", || 1 + 1);
+        assert_eq!(x, 2);
+        p.time("a", || ());
+        p.time("b", || ());
+        let rep = p.report();
+        assert_eq!(rep.len(), 2);
+        let a = rep.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(!p.render().is_empty());
+    }
+}

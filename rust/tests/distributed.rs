@@ -1,0 +1,110 @@
+//! Integration: the simulated distributed stack — ParHIP across rank
+//! counts, the message-passing world's collectives under load, and
+//! distributed edge partitioning (§2.5, §4.3, §4.6).
+
+use kahip::graph::generators;
+use kahip::parhip::{parhip, ParhipMode};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+
+#[test]
+fn parhip_quality_tracks_sequential_eco() {
+    // §2.5: quality ≈ sequential on the same inputs (we allow 1.6x)
+    let mut rng = Rng::new(1);
+    let g = generators::barabasi_albert(2000, 5, &mut rng);
+    let seq = kahip::coordinator::kaffpa(
+        &g,
+        &Config::from_mode(Mode::EcoSocial, 8, 0.03, 2),
+        None,
+        None,
+    );
+    let par = parhip(&g, 8, 0.03, ParhipMode::EcoSocial, 4, 2, false);
+    par.partition.validate(&g).unwrap();
+    assert!(
+        (par.edge_cut as f64) < 1.6 * seq.edge_cut as f64,
+        "parhip {} vs sequential {}",
+        par.edge_cut,
+        seq.edge_cut
+    );
+}
+
+#[test]
+fn parhip_rank_counts_all_valid_and_coarsen() {
+    let mut rng = Rng::new(3);
+    let g = generators::barabasi_albert(1200, 4, &mut rng);
+    for ranks in [1usize, 2, 3, 8, 16] {
+        for mode in [ParhipMode::UltrafastSocial, ParhipMode::FastMesh] {
+            let r = parhip(&g, 4, 0.03, mode, ranks, 4, false);
+            r.partition.validate(&g).unwrap();
+            assert_eq!(r.ranks, ranks);
+            assert!(r.coarse_n < g.n(), "{mode:?}@{ranks}: no coarsening happened");
+            assert_eq!(r.partition.non_empty_blocks(), 4);
+        }
+    }
+}
+
+#[test]
+fn parhip_vertex_degree_weights_flag() {
+    let mut rng = Rng::new(5);
+    let g = generators::barabasi_albert(600, 4, &mut rng);
+    let r = parhip(&g, 4, 0.10, ParhipMode::FastSocial, 2, 5, true);
+    // feasibility is w.r.t. 1+deg weights
+    let w: Vec<i64> = g.nodes().map(|v| 1 + g.degree(v) as i64).collect();
+    let gw = g.with_node_weights(w);
+    let pw = kahip::partition::Partition::from_assignment(
+        &gw,
+        4,
+        r.partition.assignment().to_vec(),
+    );
+    assert!(pw.is_feasible(&gw, 0.10), "weights {:?}", pw.block_weights());
+}
+
+#[test]
+fn parhip_handles_mesh_family_too() {
+    let g = generators::grid2d(30, 30);
+    for mode in [ParhipMode::UltrafastMesh, ParhipMode::FastMesh, ParhipMode::EcoMesh] {
+        let r = parhip(&g, 4, 0.03, mode, 4, 6, false);
+        r.partition.validate(&g).unwrap();
+        assert!(r.partition.is_feasible(&g, 0.05), "{mode:?}");
+    }
+}
+
+#[test]
+fn comm_world_collectives_under_parallel_load() {
+    use kahip::parhip::comm::run_world;
+    // stress the simulated world: barriers + allreduce + alltoall rounds
+    let results = run_world(8, |mut ctx| {
+        let mut acc = 0u64;
+        for round in 0u64..20 {
+            let contrib = (ctx.rank as u64 + 1) * (round + 1);
+            acc = ctx.allreduce_sum(1000 + 2 * round as u32, vec![contrib])[0];
+            ctx.barrier();
+        }
+        acc
+    });
+    // every rank sees the same final reduction: sum(1..=8) * 20
+    let expect = 36 * 20;
+    assert!(results.iter().all(|&r| r == expect), "{results:?}");
+}
+
+#[test]
+fn distributed_edge_partition_scales_ranks() {
+    let g = generators::grid2d(12, 12);
+    let mut last = None;
+    for ranks in [1usize, 4] {
+        let r = kahip::edgepartition::dist_edge::distributed_edge_partitioning(
+            &g,
+            4,
+            0.10,
+            ParhipMode::FastMesh,
+            1000,
+            ranks,
+            7,
+        );
+        r.partition.validate(&g).unwrap();
+        let rf = r.partition.replication_factor(&g, &r.index);
+        assert!(rf < 2.2, "ranks={ranks} replication {rf}");
+        last = Some(rf);
+    }
+    assert!(last.is_some());
+}

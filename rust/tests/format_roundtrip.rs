@@ -1,0 +1,138 @@
+//! Integration: file formats (§3) — Metis text and ParHIP binary
+//! round-trips, the §3.3 corruption catalogue through `graphchecker`,
+//! and partition/separator output files.
+
+use kahip::graph::{checker, generators, io_binary, io_metis, Graph};
+use kahip::partition::io as pio;
+use kahip::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("kahip_it_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn metis_roundtrip_unweighted_and_weighted() {
+    let mut rng = Rng::new(1);
+    for (tag, g) in [
+        ("grid", generators::grid2d(7, 5)),
+        ("weighted", generators::random_weighted(40, 80, 1, 9, &mut rng)),
+        ("isolated", Graph::isolated(4)),
+    ] {
+        let mut buf = Vec::new();
+        io_metis::write_metis(&g, &mut buf).unwrap();
+        let back = io_metis::read_metis(&buf[..]).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(g, back, "{tag} round-trip");
+    }
+}
+
+#[test]
+fn metis_file_roundtrip_with_comments() {
+    let g = generators::grid2d(4, 4);
+    let p = tmp("comments.graph");
+    let mut text = String::from("% a comment line\n");
+    let mut buf = Vec::new();
+    io_metis::write_metis(&g, &mut buf).unwrap();
+    text.push_str(std::str::from_utf8(&buf).unwrap());
+    std::fs::write(&p, text).unwrap();
+    let back = io_metis::read_metis_file(&p).unwrap();
+    assert_eq!(g, back);
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn binary_roundtrip_and_sniffing() {
+    let g = generators::grid2d(6, 6);
+    let p = tmp("roundtrip.bin");
+    io_binary::write_binary_file(&g, &p).unwrap();
+    assert!(io_binary::sniff_binary(&p).unwrap());
+    let back = io_binary::read_binary_file(&p).unwrap();
+    assert_eq!(g, back);
+    std::fs::remove_file(&p).unwrap();
+
+    let m = tmp("plain.graph");
+    io_metis::write_metis_file(&g, &m).unwrap();
+    assert!(!io_binary::sniff_binary(&m).unwrap());
+    std::fs::remove_file(&m).unwrap();
+}
+
+#[test]
+fn external_converter_matches_in_memory() {
+    let g = generators::grid2d(9, 4);
+    let src = tmp("conv.graph");
+    let via_mem = tmp("conv_mem.bin");
+    let via_ext = tmp("conv_ext.bin");
+    io_metis::write_metis_file(&g, &src).unwrap();
+    io_binary::write_binary_file(&g, &via_mem).unwrap();
+    io_binary::convert_metis_to_binary_external(
+        src.to_str().unwrap(),
+        via_ext.to_str().unwrap(),
+    )
+    .unwrap();
+    assert_eq!(std::fs::read(&via_mem).unwrap(), std::fs::read(&via_ext).unwrap());
+    for f in [src, via_mem, via_ext] {
+        std::fs::remove_file(f).unwrap();
+    }
+}
+
+/// §3.3: every documented crash cause must be caught by graphchecker.
+#[test]
+fn graphchecker_catches_each_documented_corruption() {
+    let cases: &[(&str, &str)] = &[
+        // self-loop
+        ("selfloop", "2 2\n1 2\n1 2\n"),
+        // forward edge without backward edge
+        ("missing_back", "3 2\n2 3\n3\n\n"),
+        // asymmetric weights
+        ("asym_weight", "2 1 1\n2 5\n1 7\n"),
+        // header says 3 edges, file has 2
+        ("wrong_m", "3 3\n2\n1 3\n2\n"),
+        // vertex id out of range
+        ("bad_target", "2 1\n5\n1\n"),
+        // parallel edge
+        ("parallel", "2 2\n2 2\n1 1\n"),
+    ];
+    for (tag, text) in cases {
+        let report = checker::check_metis(text.as_bytes());
+        assert!(!report.ok(), "checker must reject {tag}: {}", report.render());
+    }
+    // and a correct file passes
+    let good = "3 2\n2\n1 3\n2\n";
+    assert!(checker::check_metis(good.as_bytes()).ok());
+}
+
+#[test]
+fn partition_output_format_roundtrip() {
+    let part: Vec<u32> = vec![0, 1, 2, 1, 0];
+    let p = tmp("part.txt");
+    pio::write_partition_file(&part, &p).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    // §3.2.1: one block id per line, n lines
+    assert_eq!(text.lines().count(), 5);
+    let back = pio::read_partition_file(&p).unwrap();
+    assert_eq!(part, back);
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn separator_output_gets_block_k() {
+    // §3.2.2: separator vertices get block id k, others keep theirs
+    let part = vec![0u32, 1, 0, 1];
+    let sep = vec![2u32];
+    let out = pio::separator_assignment(&part, 2, &sep);
+    assert_eq!(out, vec![0, 1, 2, 1]);
+}
+
+#[test]
+fn binary_partition_roundtrip() {
+    let part: Vec<u32> = (0..100).map(|i| i % 7).collect();
+    let mut buf = Vec::new();
+    pio::write_partition_binary(&part, &mut buf).unwrap();
+    let back = pio::read_partition_binary(&buf[..]).unwrap();
+    assert_eq!(part, back);
+}
+
+#[test]
+fn default_output_names_match_guide() {
+    // §3.2.1: "a text file named tmppartitionk"
+    assert_eq!(pio::default_partition_name(4), "tmppartition4");
+}

@@ -1,0 +1,170 @@
+//! Integration: the partitioner programs end to end, across graph
+//! families, preconfigurations and the program-level flags of §4.1/§4.2.
+
+use kahip::coordinator::kaffpa;
+use kahip::evolutionary::{kaffpa_e, EvoConfig};
+use kahip::graph::generators;
+use kahip::partition::config::{Config, Mode};
+use kahip::partition::{metrics, Partition};
+use kahip::rng::Rng;
+
+#[test]
+fn every_preconfiguration_partitions_both_families() {
+    let mesh = generators::grid2d(16, 16);
+    let mut rng = Rng::new(2);
+    let social = generators::barabasi_albert(800, 4, &mut rng);
+    for mode in Mode::ALL {
+        for (tag, g) in [("mesh", &mesh), ("social", &social)] {
+            let cfg = Config::from_mode(mode, 4, 0.03, 1);
+            let res = kaffpa(g, &cfg, None, None);
+            res.partition.validate(g).unwrap();
+            assert!(
+                res.partition.is_feasible(g, 0.03),
+                "{mode:?} on {tag}: {:?}",
+                res.partition.block_weights()
+            );
+            assert_eq!(res.partition.non_empty_blocks(), 4, "{mode:?} on {tag}");
+            assert_eq!(metrics::edge_cut(g, &res.partition), res.edge_cut);
+        }
+    }
+}
+
+#[test]
+fn quality_ordering_holds_on_average() {
+    // §4.1: strong >= eco >= fast in quality (we assert the endpoints
+    // over a few seeds to keep the test robust)
+    let g = generators::grid2d(20, 20);
+    let avg = |mode| -> i64 {
+        (0..3)
+            .map(|s| kaffpa(&g, &Config::from_mode(mode, 8, 0.03, s), None, None).edge_cut)
+            .sum::<i64>()
+            / 3
+    };
+    let (f, s) = (avg(Mode::Fast), avg(Mode::Strong));
+    assert!(s <= f, "strong {s} must beat fast {f} on average");
+}
+
+#[test]
+fn time_limit_accumulates_improvement() {
+    let g = generators::grid2d(18, 18);
+    let mut cfg = Config::from_mode(Mode::Fast, 6, 0.03, 3);
+    let one = kaffpa(&g, &cfg, None, None);
+    cfg.time_limit = 0.4;
+    let many = kaffpa(&g, &cfg, None, None);
+    assert!(many.repetitions > one.repetitions);
+    assert!(many.edge_cut <= one.edge_cut);
+}
+
+#[test]
+fn improvement_mode_never_worsens_input() {
+    let g = generators::grid2d(14, 14);
+    let mut rng = Rng::new(5);
+    for k in [2u32, 4] {
+        // random feasible-ish input
+        let part: Vec<u32> = g.nodes().map(|_| rng.below(k as u64) as u32).collect();
+        let input = Partition::from_assignment(&g, k, part);
+        let before = metrics::edge_cut(&g, &input);
+        let cfg = Config::from_mode(Mode::Eco, k, 0.10, 6);
+        let res = kaffpa(&g, &cfg, None, Some(input));
+        assert!(res.edge_cut <= before, "k={k}: {} > {before}", res.edge_cut);
+    }
+}
+
+#[test]
+fn kaffpae_all_flag_combinations_run() {
+    let g = generators::grid2d(12, 12);
+    for (quickstart, kabape, tabu) in
+        [(false, false, false), (true, false, false), (false, true, false), (true, true, true)]
+    {
+        let mut ecfg = EvoConfig::new(Config::from_mode(Mode::Fast, 4, 0.03, 7));
+        ecfg.islands = 2;
+        ecfg.time_limit = 0.2;
+        ecfg.quickstart = quickstart;
+        ecfg.kabape = kabape;
+        ecfg.tabu_combine = tabu;
+        let res = kaffpa_e(&g, &ecfg, None);
+        res.partition.validate(&g).unwrap();
+        assert!(res.partition.is_feasible(&g, 0.03));
+    }
+}
+
+#[test]
+fn perfectly_balanced_partitioning_with_kabape() {
+    // §2.3: the ε = 0 case — KaBaPE guarantees feasibility where plain
+    // configurations may not
+    let g = generators::grid2d(12, 12); // 144 nodes, k=4 -> exactly 36
+    let mut ecfg = EvoConfig::new(Config::from_mode(Mode::Eco, 4, 0.0, 8));
+    ecfg.base.enforce_balance = true;
+    ecfg.kabape = true;
+    ecfg.islands = 2;
+    ecfg.time_limit = 0.3;
+    let res = kaffpa_e(&g, &ecfg, None);
+    assert!(
+        res.partition.is_feasible(&g, 0.0),
+        "eps=0 must hold: {:?}",
+        res.partition.block_weights()
+    );
+}
+
+#[test]
+fn kaba_refinement_preserves_exact_balance() {
+    let g = generators::grid2d(10, 10);
+    // perfectly balanced start (k=4, 25 each, by quadrant: good but improvable)
+    let part: Vec<u32> = g
+        .nodes()
+        .map(|v| {
+            let (x, y) = (v % 10, v / 10);
+            (x / 5 + 2 * (y / 5)) as u32
+        })
+        .collect();
+    let mut p = Partition::from_assignment(&g, 4, part);
+    let weights_before = p.block_weights().to_vec();
+    let cut_before = metrics::edge_cut(&g, &p);
+    let mut rng = Rng::new(9);
+    let gain = kahip::kaba::kaba_refine(&g, &mut p, &mut rng, 20);
+    assert_eq!(p.block_weights(), &weights_before[..], "weights must be unchanged");
+    assert_eq!(metrics::edge_cut(&g, &p), cut_before - gain);
+}
+
+#[test]
+fn balance_edges_respects_edge_weighted_bound() {
+    let mut rng = Rng::new(11);
+    let g = generators::random_weighted(150, 450, 1, 4, &mut rng);
+    let mut cfg = Config::from_mode(Mode::Eco, 3, 0.15, 12);
+    cfg.balance_edges = true;
+    let res = kaffpa(&g, &cfg, None, None);
+    let w: Vec<i64> = g.nodes().map(|v| g.node_weight(v) + g.weighted_degree(v)).collect();
+    let gw = g.with_node_weights(w);
+    let pw = Partition::from_assignment(&gw, 3, res.partition.assignment().to_vec());
+    assert!(pw.is_feasible(&gw, 0.15), "node+edge balance violated");
+}
+
+#[test]
+fn ilp_improve_composes_with_kaffpa() {
+    let g = generators::grid2d(10, 10);
+    let cfg = Config::from_mode(Mode::Fast, 2, 0.03, 13);
+    let res = kaffpa(&g, &cfg, None, None);
+    let r = kahip::ilp::ilp_improve(&g, &res.partition, 0.03, &kahip::ilp::ImproveOpts::default());
+    assert!(r.edge_cut <= res.edge_cut);
+    assert!(r.partition.is_feasible(&g, 0.03));
+    // and exact on a small instance confirms the end-to-end optimum
+    let small = generators::grid2d(4, 4);
+    let ex = kahip::ilp::ilp_exact(&small, 2, 0.0, 14, 30.0);
+    assert!(ex.optimal);
+    assert_eq!(ex.edge_cut, 4);
+}
+
+#[test]
+fn disconnected_graphs_are_handled() {
+    // two components, k=2: the natural optimum cuts nothing
+    let mut b = kahip::graph::GraphBuilder::new(40);
+    for v in 0..19u32 {
+        b.add_edge(v, v + 1, 1);
+        b.add_edge(v + 20, v + 21, 1);
+    }
+    let g = b.build().unwrap();
+    let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 15);
+    let res = kaffpa(&g, &cfg, None, None);
+    res.partition.validate(&g).unwrap();
+    assert_eq!(res.edge_cut, 0, "components must land in separate blocks");
+}

@@ -1,0 +1,154 @@
+//! Integration: the downstream pipelines — separators, ordering, process
+//! mapping, edge partitioning — composed with the partitioner, plus
+//! cross-cutting property checks on randomized inputs.
+
+use kahip::coordinator::kaffpa;
+use kahip::edgepartition::spac;
+use kahip::graph::generators;
+use kahip::mapping::{multisection, qap, HierarchySpec, Topology};
+use kahip::ordering::{fill_in::fill_in, node_ordering, Reduction};
+use kahip::partition::config::{Config, Mode};
+use kahip::rng::Rng;
+use kahip::separator::{bisep, kway_sep};
+
+#[test]
+fn kway_separator_pipeline_on_both_families() {
+    let mut rng = Rng::new(1);
+    for (tag, g) in [
+        ("mesh", generators::grid2d(14, 14)),
+        ("rgg", generators::random_geometric(300, 0.12, &mut rng)),
+    ] {
+        for k in [2u32, 4, 8] {
+            let cfg = Config::from_mode(Mode::Eco, k, 0.05, 2);
+            let res = kaffpa(&g, &cfg, None, None);
+            let sep = kway_sep::partition_to_vertex_separator(&g, &res.partition);
+            sep.validate(&g).unwrap_or_else(|e| panic!("{tag} k={k}: {e}"));
+            // the separator must not be the whole graph
+            assert!(sep.separator.len() < g.n() / 2, "{tag} k={k}: huge separator");
+        }
+    }
+}
+
+#[test]
+fn biseparator_beats_or_matches_boundary_heuristic() {
+    // §2.8: the chosen separator is never worse than the smaller boundary
+    let g = generators::grid2d(16, 16);
+    for seed in 0..3 {
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.20, seed);
+        let res = kaffpa(&g, &cfg, None, None);
+        let p = &res.partition;
+        let smaller_boundary = {
+            let count = |side: u32| {
+                g.nodes()
+                    .filter(|&v| {
+                        p.block_of(v) == side
+                            && g.neighbors(v).iter().any(|&u| p.block_of(u) != side)
+                    })
+                    .count()
+            };
+            count(0).min(count(1))
+        };
+        let sep = bisep::separator_from_bipartition(&g, p);
+        sep.validate(&g).unwrap();
+        assert!(
+            sep.separator.len() <= smaller_boundary,
+            "seed {seed}: separator {} vs boundary {smaller_boundary}",
+            sep.separator.len()
+        );
+    }
+}
+
+#[test]
+fn ordering_pipeline_reductions_help_or_tie() {
+    // §2.9's claim, as a pipeline test: reductions + ND never lose badly
+    // to plain ND and win on reducible graphs
+    let tree = generators::binary_tree(7);
+    let full = node_ordering(&tree, Mode::Eco, 1, &Reduction::DEFAULT_ORDER);
+    assert_eq!(fill_in(&tree, &full), 0, "trees must order fill-free");
+
+    let grid = generators::grid2d(11, 11);
+    let with_red = node_ordering(&grid, Mode::Eco, 2, &Reduction::DEFAULT_ORDER);
+    let without = node_ordering(&grid, Mode::Eco, 2, &[]);
+    let (fr, fw) = (fill_in(&grid, &with_red), fill_in(&grid, &without));
+    assert!(
+        (fr as f64) < 1.25 * fw as f64,
+        "reductions must not hurt much: {fr} vs {fw}"
+    );
+}
+
+#[test]
+fn mapping_pipeline_hierarchies_of_different_depth() {
+    let g = generators::grid2d(12, 12);
+    for (h, d) in [("4", "10"), ("2:2", "1:10"), ("2:2:2", "1:5:25")] {
+        let spec = HierarchySpec::parse(h, d).unwrap();
+        let r = multisection::global_multisection(&g, &spec, Mode::Fast, 0.10, 3, false);
+        assert_eq!(r.partition.k() as usize, spec.num_pes(), "hierarchy {h}");
+        r.partition.validate(&g).unwrap();
+        // mapping is a permutation
+        let mut s = r.mapping.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..spec.num_pes() as u32).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn mapping_online_equals_matrix_costs() {
+    let g = generators::grid2d(10, 10);
+    let spec = HierarchySpec::parse("2:2", "1:10").unwrap();
+    let cfg = Config::from_mode(Mode::Eco, 4, 0.05, 4);
+    let res = kaffpa(&g, &cfg, None, None);
+    let c = qap::CommGraph::from_partition(&g, &res.partition);
+    let m = Topology::new(&spec, false);
+    let o = Topology::new(&spec, true);
+    let sigma = qap::greedy_mapping(&c, &m);
+    assert_eq!(qap::qap_cost(&c, &m, &sigma), qap::qap_cost(&c, &o, &sigma));
+}
+
+#[test]
+fn edge_partition_pipeline_invariants() {
+    let mut rng = Rng::new(5);
+    for (tag, g) in [
+        ("grid", generators::grid2d(10, 10)),
+        ("ba", generators::barabasi_albert(500, 3, &mut rng)),
+    ] {
+        for k in [2u32, 4] {
+            let (ep, idx) = spac::edge_partitioning(&g, k, 0.10, Mode::Eco, 1000, 6);
+            ep.validate(&g).unwrap();
+            assert_eq!(ep.assignment.len(), g.m(), "{tag} k={k}");
+            // every edge's two endpoints see its block in their lambda sets
+            let lam = ep.lambdas(&g, &idx);
+            for (id, &(u, v, _)) in idx.edges.iter().enumerate() {
+                let _ = id;
+                assert!(lam[u as usize] >= 1 && lam[v as usize] >= 1);
+            }
+            // replication is bounded by min(k, max degree)
+            let rf = ep.replication_factor(&g, &idx);
+            assert!(rf <= k as f64, "{tag} k={k}: rf {rf}");
+        }
+    }
+}
+
+#[test]
+fn prop_separator_removal_disconnects_random_graphs() {
+    let mut rng = Rng::new(7);
+    for trial in 0..10 {
+        let n = 30 + 10 * (trial % 4);
+        let g = generators::random_connected(n, 2 * n, &mut rng);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.20, trial as u64);
+        let res = kaffpa(&g, &cfg, None, None);
+        let sep = bisep::separator_from_bipartition(&g, &res.partition);
+        sep.validate(&g).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+    }
+}
+
+#[test]
+fn prop_orderings_always_permutations() {
+    let mut rng = Rng::new(8);
+    for trial in 0..8 {
+        let g = generators::random_weighted(20 + trial * 7, 50, 1, 1, &mut rng);
+        let o1 = node_ordering(&g, Mode::Fast, trial as u64, &Reduction::DEFAULT_ORDER);
+        assert!(kahip::ordering::is_permutation(&o1, g.n()));
+        let o2 = kahip::ordering::fast_node_ordering(&g, &Reduction::DEFAULT_ORDER);
+        assert!(kahip::ordering::is_permutation(&o2, g.n()));
+    }
+}

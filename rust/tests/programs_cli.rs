@@ -1,0 +1,210 @@
+//! Integration: the CLI programs (§4) driven exactly as a user would,
+//! against real files in a temp directory.
+
+use kahip::cli;
+use kahip::graph::{generators, io_metis};
+use std::path::PathBuf;
+
+struct TempWorkspace {
+    dir: PathBuf,
+    old_cwd: PathBuf,
+}
+
+/// The CLI writes default-named outputs into the CWD; isolate each test.
+/// Tests using this must be in the same process-wide mutex (rust test
+/// threads share the CWD), so we take a global lock.
+static CWD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+impl TempWorkspace {
+    fn new(tag: &str) -> (Self, std::sync::MutexGuard<'static, ()>) {
+        let guard = CWD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join(format!("kahip_cli_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_cwd = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        (TempWorkspace { dir, old_cwd }, guard)
+    }
+
+    fn write_grid(&self, name: &str, w: usize, h: usize) -> String {
+        let g = generators::grid2d(w, h);
+        let p = self.dir.join(name);
+        io_metis::write_metis_file(&g, &p).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+}
+
+impl Drop for TempWorkspace {
+    fn drop(&mut self) {
+        let _ = std::env::set_current_dir(&self.old_cwd);
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn run(args: &[&str]) -> Result<(), String> {
+    let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    cli::run(&v)
+}
+
+#[test]
+fn kaffpa_writes_default_partition_file() {
+    let (ws, _g) = TempWorkspace::new("kaffpa");
+    let file = ws.write_grid("mesh.graph", 10, 10);
+    run(&[
+        "kaffpa",
+        &file,
+        "--k=4",
+        "--preconfiguration=eco",
+        "--seed=1",
+        "--imbalance=3",
+    ])
+    .unwrap();
+    let part = std::fs::read_to_string(ws.dir.join("tmppartition4")).unwrap();
+    assert_eq!(part.lines().count(), 100);
+    assert!(part.lines().all(|l| l.trim().parse::<u32>().unwrap() < 4));
+}
+
+#[test]
+fn kaffpa_custom_output_and_input_partition() {
+    let (ws, _g) = TempWorkspace::new("kaffpa_io");
+    let file = ws.write_grid("mesh.graph", 8, 8);
+    run(&["kaffpa", &file, "--k=2", "--output_filename=first.txt", "--seed=2"]).unwrap();
+    assert!(ws.dir.join("first.txt").exists());
+    // feed it back as an input partition
+    run(&[
+        "kaffpa",
+        &file,
+        "--k=2",
+        "--input_partition=first.txt",
+        "--output_filename=second.txt",
+    ])
+    .unwrap();
+    assert!(ws.dir.join("second.txt").exists());
+}
+
+#[test]
+fn kaffpae_and_parhip_run() {
+    let (ws, _g) = TempWorkspace::new("evo");
+    let file = ws.write_grid("mesh.graph", 10, 10);
+    run(&["kaffpaE", &file, "--k=4", "--p=2", "--time_limit=0.2", "--mh_enable_quickstart"])
+        .unwrap();
+    assert!(ws.dir.join("tmppartition4").exists());
+    run(&[
+        "parhip",
+        &file,
+        "--k=4",
+        "--p=3",
+        "--preconfiguration=fastmesh",
+        "--save_partition",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn conversion_toolchain_metis_to_binary_to_evaluate() {
+    let (ws, _g) = TempWorkspace::new("convert");
+    let file = ws.write_grid("mesh.graph", 6, 6);
+    run(&["graph2binary", &file, "mesh.bin"]).unwrap();
+    run(&["graph2binary_external", &file, "mesh_ext.bin"]).unwrap();
+    assert_eq!(
+        std::fs::read(ws.dir.join("mesh.bin")).unwrap(),
+        std::fs::read(ws.dir.join("mesh_ext.bin")).unwrap()
+    );
+    // partition the binary with parhip, then evaluate with the toolbox
+    run(&["parhip", "mesh.bin", "--k=2", "--p=2", "--save_partition"]).unwrap();
+    run(&["toolbox", "mesh.bin", "--k=2", "--input_partition=tmppartition2", "--evaluate"])
+        .unwrap();
+    run(&["evaluator", &file, "--k=2", "--input_partition=tmppartition2"]).unwrap();
+}
+
+#[test]
+fn separator_programs() {
+    let (ws, _g) = TempWorkspace::new("sep");
+    let file = ws.write_grid("mesh.graph", 8, 8);
+    run(&["node_separator", &file, "--seed=1"]).unwrap();
+    let sep = std::fs::read_to_string(ws.dir.join("tmpseparator")).unwrap();
+    assert_eq!(sep.lines().count(), 64);
+    // block ids 0,1 or 2 (=k for separator nodes, §3.2.2)
+    assert!(sep.lines().all(|l| l.trim().parse::<u32>().unwrap() <= 2));
+
+    run(&["kaffpa", &file, "--k=4", "--output_filename=p4.txt"]).unwrap();
+    run(&[
+        "partition_to_vertex_separator",
+        &file,
+        "--k=4",
+        "--input_partition=p4.txt",
+        "--output_filename=sep4.txt",
+    ])
+    .unwrap();
+    let sep4 = std::fs::read_to_string(ws.dir.join("sep4.txt")).unwrap();
+    assert!(sep4.lines().any(|l| l.trim() == "4"), "k-way separator uses id k");
+}
+
+#[test]
+fn ordering_edge_partition_multisection_lp() {
+    let (ws, _g) = TempWorkspace::new("misc");
+    let file = ws.write_grid("mesh.graph", 8, 8);
+    run(&["node_ordering", &file, "--reduction_order=0 4", "--output_filename=ord.txt"]).unwrap();
+    assert_eq!(std::fs::read_to_string(ws.dir.join("ord.txt")).unwrap().lines().count(), 64);
+    run(&["fast_node_ordering", &file, "--output_filename=ord2.txt"]).unwrap();
+
+    run(&["edge_partitioning", &file, "--k=4", "--seed=2"]).unwrap();
+    let ep = std::fs::read_to_string(ws.dir.join("tmpedgepartition4")).unwrap();
+    assert_eq!(ep.lines().count(), 112); // 8x8 grid has 112 edges
+
+    run(&["distributed_edge_partitioning", &file, "--k=2", "--p=2", "--save_partition"]).unwrap();
+
+    run(&[
+        "global_multisection",
+        &file,
+        "--hierarchy_parameter_string=2:2",
+        "--distance_parameter_string=1:10",
+    ])
+    .unwrap();
+    assert!(ws.dir.join("tmppartition4").exists());
+
+    run(&["label_propagation", &file, "--cluster_upperbound=8", "--output_filename=lp.txt"])
+        .unwrap();
+    assert_eq!(std::fs::read_to_string(ws.dir.join("lp.txt")).unwrap().lines().count(), 64);
+}
+
+#[test]
+fn ilp_programs() {
+    let (ws, _g) = TempWorkspace::new("ilp");
+    let file = ws.write_grid("mesh.graph", 4, 4);
+    run(&["ilp_exact", &file, "--k=2", "--imbalance=0", "--output_filename=opt.txt"]).unwrap();
+    let opt = std::fs::read_to_string(ws.dir.join("opt.txt")).unwrap();
+    assert_eq!(opt.lines().count(), 16);
+
+    run(&["kaffpa", &file, "--k=2", "--output_filename=h.txt"]).unwrap();
+    run(&[
+        "ilp_improve",
+        &file,
+        "--k=2",
+        "--input_partition=h.txt",
+        "--ilp_mode=gain",
+        "--ilp_min_gain=-1",
+        "--ilp_bfs_depth=2",
+        "--output_filename=imp.txt",
+    ])
+    .unwrap();
+    assert!(ws.dir.join("imp.txt").exists());
+}
+
+#[test]
+fn graphchecker_verdicts() {
+    let (ws, _g) = TempWorkspace::new("checker");
+    let file = ws.write_grid("good.graph", 4, 4);
+    run(&["graphchecker", &file]).unwrap();
+    let bad = ws.dir.join("bad.graph");
+    std::fs::write(&bad, "2 2\n1 2\n1 2\n").unwrap(); // self-loop
+    assert!(run(&["graphchecker", bad.to_str().unwrap()]).is_err());
+}
+
+#[test]
+fn cli_error_reporting() {
+    assert!(run(&["kaffpa", "/nope/missing.graph", "--k=2"]).is_err());
+    assert!(run(&["kaffpa"]).is_err());
+    assert!(run(&["bogus_program"]).is_err());
+    assert!(run(&["kaffpa", "x", "--k=2", "--preconfiguration=superfast"]).is_err());
+}
