@@ -1,0 +1,26 @@
+# Top-level driver. The Rust crate lives in rust/, the AOT lowering of the
+# Pallas/JAX spectral kernels in python/ (build time only; see DESIGN.md).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: build test bench-baseline artifacts clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+# Lower the Pallas/JAX kernels to HLO-text artifacts for the Rust runtime.
+# Requires a Python environment with jax; the Rust build does NOT need this
+# (without artifacts the spectral path falls back to pure Rust).
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+# Record the fig1_mesh perf baseline into BENCH_seed.json.
+bench-baseline:
+	scripts/bench_baseline.sh
+
+clean:
+	cd rust && cargo clean
+	rm -rf $(ARTIFACTS)

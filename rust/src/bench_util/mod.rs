@@ -133,7 +133,7 @@ impl Table {
         let mut out = format!("== {} ==\n", self.title);
         let fmt_row = |vals: &[String], widths: &[usize]| -> String {
             let body: Vec<String> =
-                vals.iter().zip(widths).map(|(v, w)| format!("{v:<w$}")).collect();
+                vals.iter().zip(widths).map(|(v, &w)| format!("{v:<w$}")).collect();
             format!("| {} |\n", body.join(" | "))
         };
         out.push_str(&fmt_row(&self.header, &widths));

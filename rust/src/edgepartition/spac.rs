@@ -46,9 +46,7 @@ pub fn build_split_graph(g: &Graph, idx: &EdgeIndex, infinity: i64) -> SpacGraph
     for v in g.nodes() {
         let r = g.edge_range(v);
         for e in r.start..r.end.saturating_sub(1).max(r.start) {
-            if e + 1 < r.end {
-                b.add_edge(split_id[e], split_id[e + 1], infinity);
-            }
+            b.add_edge(split_id[e], split_id[e + 1], infinity);
         }
     }
     // dominant edges: the two half-edges of each original edge

@@ -95,7 +95,10 @@ pub fn check_metis<R: Read>(r: R) -> CheckReport {
         0
     };
     if ![0, 1, 10, 11].contains(&flag) {
-        diags.push(Diagnostic { line: *hline, message: format!("format flag {flag} not in {{1,10,11}}") });
+        diags.push(Diagnostic {
+            line: *hline,
+            message: format!("format flag {flag} not in {{0,1,10,11}}"),
+        });
     }
     let has_nw = flag == 10 || flag == 11;
     let has_ew = flag == 1 || flag == 11;

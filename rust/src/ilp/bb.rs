@@ -89,7 +89,6 @@ pub fn solve(
     // ---- DFS state ----
     let mut assign: Vec<BlockId> = vec![u32::MAX; n];
     let mut block_w = vec![0i64; k as usize];
-    let total_w = g.total_node_weight();
     let any_fixed = fixed.iter().any(|f| f.is_some());
     let mut nodes_explored = 0u64;
     let mut timed_out = false;
@@ -99,7 +98,6 @@ pub fn solve(
     for i in (0..n).rev() {
         suffix_w[i] = suffix_w[i + 1] + g.node_weight(order[i]);
     }
-    let _ = total_w;
 
     /// Frame of the explicit DFS stack: position + next block to try.
     struct Frame {

@@ -15,7 +15,7 @@ use crate::rng::Rng;
 /// `bound`, or no path exists. Returns true on success (feasible).
 pub fn balance(g: &Graph, p: &mut Partition, bound: i64, rng: &mut Rng) -> bool {
     let k = p.k() as usize;
-    let classes = super::weight_classes_pub(g);
+    let classes = super::weight_classes(g);
     let mut guard = 0usize;
     while p.max_block_weight() > bound {
         guard += 1;

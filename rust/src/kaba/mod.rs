@@ -43,12 +43,7 @@ pub fn kaba_refine(g: &Graph, p: &mut Partition, rng: &mut Rng, max_rounds: usiz
 }
 
 /// All distinct node weights, most frequent first (capped at 4 classes).
-pub(crate) fn weight_classes_pub(g: &Graph) -> Vec<i64> {
-    weight_classes(g)
-}
-
-/// All distinct node weights, most frequent first (capped at 4 classes).
-fn weight_classes(g: &Graph) -> Vec<i64> {
+pub(crate) fn weight_classes(g: &Graph) -> Vec<i64> {
     let mut counts: std::collections::HashMap<i64, usize> = Default::default();
     for v in g.nodes() {
         *counts.entry(g.node_weight(v)).or_insert(0) += 1;

@@ -8,12 +8,12 @@
 //!   its two neighbors) is added to the reduced graph.
 //! * **path compression** — a maximal chain of degree-2 nodes is the
 //!   degree-2 rule applied along the chain.
-//! * **indistinguishable nodes** (N[u] = N[v]) and **twins**
-//!   (N(u) = N(v)) — merge v into u; v is placed immediately before u in
-//!   the expanded order (symmetric roles, no fill beyond u's own clique).
+//! * **indistinguishable nodes** (`N[u] = N[v]`) and **twins**
+//!   (`N(u) = N(v)`) — merge v into u; v is placed immediately before u
+//!   in the expanded order (symmetric roles, no fill beyond u's clique).
 //! * **triangle contraction** — the adjacent-domination case
-//!   N[v] ⊆ N[u]: merge v into u; v is eliminated immediately before u,
-//!   where its fill is contained in the clique u creates anyway.
+//!   `N[v] ⊆ N[u]`: merge v into u; v is eliminated immediately before
+//!   u, where its fill is contained in the clique u creates anyway.
 //!
 //! The expansion replays the reduction log, so
 //! `fill(expanded) = fill(reduction prefix) + fill(core order)`.

@@ -16,7 +16,6 @@ use std::collections::HashMap;
 /// rank knows (owned + ghosts); on entry it must agree across ranks for
 /// shared nodes. `weight_of_label` must be globally consistent.
 /// Returns the final labels of the *owned* range.
-#[allow(clippy::too_many_arguments)]
 pub struct DistLpParams {
     pub iterations: usize,
     /// max total node weight per label (i64::MAX = unconstrained)

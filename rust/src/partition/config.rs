@@ -255,4 +255,97 @@ mod tests {
         let c = Config::from_mode(Mode::Eco, 4, 0.03, 0);
         assert_eq!(c.bound(1000), 257);
     }
+
+    /// Table-driven: `Mode::parse` / `Mode::name` round-trips, including
+    /// the case-insensitivity the CLI promises, for all six
+    /// preconfigurations of §4.1.
+    #[test]
+    fn mode_name_parse_roundtrip_table() {
+        let table: [(Mode, &str, bool); 6] = [
+            (Mode::Fast, "fast", false),
+            (Mode::Eco, "eco", false),
+            (Mode::Strong, "strong", false),
+            (Mode::FastSocial, "fastsocial", true),
+            (Mode::EcoSocial, "ecosocial", true),
+            (Mode::StrongSocial, "strongsocial", true),
+        ];
+        assert_eq!(table.len(), Mode::ALL.len(), "table must cover every mode");
+        for (mode, name, social) in table {
+            assert_eq!(mode.name(), name);
+            assert_eq!(Mode::parse(name), Some(mode), "{name}");
+            assert_eq!(
+                Mode::parse(&name.to_ascii_uppercase()),
+                Some(mode),
+                "parse must be case-insensitive: {name}"
+            );
+            assert_eq!(mode.is_social(), social, "{name}");
+            // round-trip through the printed name again
+            assert_eq!(Mode::parse(Mode::parse(name).unwrap().name()), Some(mode));
+        }
+        // names are pairwise distinct (parse would be ambiguous otherwise)
+        let mut names: Vec<&str> = Mode::ALL.iter().map(|m| m.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+        assert_eq!(Mode::parse("fast "), None, "no trimming surprises");
+    }
+
+    /// Table-driven: `Config::from_mode` invariants for all six
+    /// preconfigurations — the knob bundle every mode promises (§4.1),
+    /// plus the pass-through of (k, ε, seed) and the program-level
+    /// defaults that must start switched off.
+    #[test]
+    fn from_mode_invariants_all_modes_table() {
+        for mode in Mode::ALL {
+            let c = Config::from_mode(mode, 6, 0.07, 42);
+            // identity pass-through
+            assert_eq!(c.mode, mode);
+            assert_eq!(c.k, 6, "{mode:?}");
+            assert!((c.epsilon - 0.07).abs() < 1e-12, "{mode:?}");
+            assert_eq!(c.seed, 42, "{mode:?}");
+            // family split: social ⇔ LP clustering + LP refinement
+            let want_coarsening =
+                if mode.is_social() { Coarsening::ClusterLp } else { Coarsening::Matching };
+            assert_eq!(c.coarsening, want_coarsening, "{mode:?}");
+            assert_eq!(c.use_lp_refinement, mode.is_social(), "{mode:?}");
+            // strong tier ⇔ flow + multi-try + F-cycle; others without
+            let strong = matches!(mode, Mode::Strong | Mode::StrongSocial);
+            assert_eq!(c.use_flow_refinement, strong, "{mode:?}");
+            assert_eq!(c.use_multitry_fm, strong, "{mode:?}");
+            assert_eq!(c.use_fcycle, strong, "{mode:?}");
+            assert_eq!(c.global_cycles > 0, strong, "{mode:?}");
+            // fast tier drops pairwise FM; eco/strong keep it
+            let fast = matches!(mode, Mode::Fast | Mode::FastSocial);
+            assert_eq!(c.use_pairwise_fm, !fast, "{mode:?}");
+            // sanity ranges every mode must satisfy
+            assert!(c.initial_attempts >= 1, "{mode:?}");
+            assert!(c.kway_fm_rounds >= 1, "{mode:?}");
+            assert!(c.lp_iterations >= 1, "{mode:?}");
+            assert!(c.contraction_limit_factor >= 8, "{mode:?}");
+            assert!(c.min_shrink > 0.0 && c.min_shrink < 1.0, "{mode:?}");
+            assert!(c.flow_region_factor > 0.0, "{mode:?}");
+            // program-level flags default off for every preconfiguration
+            assert!(!c.enforce_balance, "{mode:?}");
+            assert!(!c.balance_edges, "{mode:?}");
+            assert_eq!(c.time_limit, 0.0, "{mode:?}");
+            assert!(!c.use_spectral_initial, "{mode:?}");
+            // the balance bound is positive and >= ceil-average
+            assert!(c.bound(600) >= 100, "{mode:?}");
+        }
+        // quality knobs are ordered fast <= eco <= strong within a family
+        for (f, e, s) in [
+            (Mode::Fast, Mode::Eco, Mode::Strong),
+            (Mode::FastSocial, Mode::EcoSocial, Mode::StrongSocial),
+        ] {
+            let (cf, ce, cs) = (
+                Config::from_mode(f, 4, 0.03, 0),
+                Config::from_mode(e, 4, 0.03, 0),
+                Config::from_mode(s, 4, 0.03, 0),
+            );
+            assert!(cf.initial_attempts <= ce.initial_attempts);
+            assert!(ce.initial_attempts <= cs.initial_attempts);
+            assert!(cf.kway_fm_rounds <= ce.kway_fm_rounds);
+            assert!(ce.kway_fm_rounds <= cs.kway_fm_rounds);
+        }
+    }
 }

@@ -72,7 +72,6 @@ pub fn communication_volume(g: &Graph, p: &Partition) -> (i64, i64) {
 /// reported by the evaluator; flow refinement tends to produce connected
 /// blocks on meshes.)
 pub fn blocks_connected(g: &Graph, p: &Partition) -> bool {
-    let (comp, _) = g.connected_components();
     // For each block, all its nodes must share one "block-restricted"
     // component. Run a BFS per block over same-block edges.
     let n = g.n();
@@ -102,7 +101,6 @@ pub fn blocks_connected(g: &Graph, p: &Partition) -> bool {
             }
         }
     }
-    let _ = comp;
     ok
 }
 

@@ -98,7 +98,6 @@ fn solve_region(
     // which we compare against the min cut of the region network
     let mut current_pair_cut = 0i64;
     let mut constant = 0i64; // cut edges not represented in the network
-    let mut seen_pairs = std::collections::HashSet::new();
     for v in g.nodes() {
         let bv = p.block_of(v);
         if bv != a && bv != b {
@@ -135,7 +134,6 @@ fn solve_region(
                     }
                 }
             }
-            let _ = seen_pairs.insert((v, u));
         }
     }
     let flow = net.max_flow(s, t);

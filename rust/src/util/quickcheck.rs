@@ -60,7 +60,8 @@ pub fn ramped_size(case: usize, lo: usize, hi: usize) -> usize {
     if hi <= lo {
         return lo;
     }
-    lo + (case * (hi - lo)) / 63.max(1)
+    // 63 = default cases - 1; clamp so custom larger runs stay bounded
+    (lo + (case * (hi - lo)) / 63).min(hi)
 }
 
 #[cfg(test)]

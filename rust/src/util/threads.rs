@@ -25,20 +25,29 @@ where
         return (0..n).map(&f).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
                 let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
+                if tx.send((i, v)).is_err() {
+                    break;
+                }
             });
         }
     });
+    drop(tx); // scope joined all workers; close our own sender
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in rx {
+        out[i] = Some(v);
+    }
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 

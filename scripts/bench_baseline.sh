@@ -1,0 +1,31 @@
+#!/usr/bin/env sh
+# Record the fig1_mesh bench (the guide's Figure 1 claim) as a JSON perf
+# baseline. Usage: scripts/bench_baseline.sh [out.json]; run from the
+# repository root. Writes BENCH_seed.json by default.
+set -eu
+
+out="${1:-BENCH_seed.json}"
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root/rust"
+
+# Capture stdout+stderr: on a compile failure the diagnostics must land
+# in the log (set -e aborts before the JSON is written).
+raw="$(cargo bench --bench fig1_mesh 2>&1)"
+
+# Escape the bench output for embedding as a JSON string.
+escaped="$(printf '%s' "$raw" | sed -e 's/\\/\\\\/g' -e 's/"/\\"/g' | awk '{printf "%s\\n", $0}')"
+pass="$(printf '%s\n' "$raw" | grep -c '^\[PASS\]' || true)"
+fail="$(printf '%s\n' "$raw" | grep -c '^\[FAIL\]' || true)"
+stamp="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+
+cat > "$root/$out" <<EOF
+{
+  "bench": "fig1_mesh",
+  "status": "recorded",
+  "recorded_at": "$stamp",
+  "host": "$(uname -sm)",
+  "verdicts": { "pass": $pass, "fail": $fail },
+  "raw": "$escaped"
+}
+EOF
+echo "wrote $out ($pass PASS / $fail FAIL)"
