@@ -1,0 +1,139 @@
+//! Service client demo: drive the TCP front end of `kahip serve` with
+//! concurrent clients submitting repeated-graph requests, and measure the
+//! cache-hit speedup of the content-addressed store.
+//!
+//! ```text
+//! cargo run --release --example service_client
+//! ```
+//!
+//! The example starts an in-process service on an ephemeral port (the
+//! protocol is identical to `kahip serve --listen=...`), then:
+//! 1. **cold phase** — 4 clients × 8 partition jobs, distinct seeds, all
+//!    on the same graph: every job computes; the graph is parsed once.
+//! 2. **warm phase** — the same 32 jobs again, referencing the graph by
+//!    the content hash returned in phase 1: zero parses, every job served
+//!    from the result memo (or coalesced onto an in-flight duplicate).
+
+use kahip::graph::generators;
+use kahip::service::{
+    frontend, json, GraphPayload, JobKind, JobRequest, JobSpec, Service, ServiceConfig,
+};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENTS: usize = 4;
+const JOBS_PER_CLIENT: u64 = 8;
+
+/// One client connection: submit `JOBS_PER_CLIENT` partition jobs and
+/// read the responses. Returns the graph hash the service reported.
+fn run_client(
+    addr: std::net::SocketAddr,
+    client: usize,
+    graph: &GraphPayload,
+) -> (String, usize) {
+    let mut sock = TcpStream::connect(addr).expect("connect");
+    for i in 0..JOBS_PER_CLIENT {
+        let req = JobRequest {
+            id: format!("c{client}-j{i}"),
+            graph: graph.clone(),
+            spec: JobSpec {
+                k: 4,
+                // distinct per (client, i): the cold phase computes all 32;
+                // the warm phase resubmits exactly these and hits the memo
+                seed: client as u64 * 100 + i,
+                ..JobSpec::defaults(JobKind::Partition)
+            },
+        };
+        writeln!(sock, "{}", req.to_json_line()).expect("send");
+    }
+    sock.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut hash = String::new();
+    let mut ok = 0;
+    for line in BufReader::new(sock).lines() {
+        let v = json::parse(&line.expect("read")).expect("valid response JSON");
+        assert_eq!(v.get("ok").and_then(json::Json::as_bool), Some(true), "{v:?}");
+        if let Some(h) = v.get("graph").and_then(json::Json::as_str) {
+            hash = h.to_string();
+        }
+        ok += 1;
+    }
+    (hash, ok)
+}
+
+fn phase(addr: std::net::SocketAddr, graph: GraphPayload, label: &str) -> (String, f64) {
+    let t0 = Instant::now();
+    let mut hash = String::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let graph = &graph;
+                scope.spawn(move || run_client(addr, c, graph))
+            })
+            .collect();
+        for h in handles {
+            let (client_hash, ok) = h.join().expect("client thread");
+            assert_eq!(ok, JOBS_PER_CLIENT as usize);
+            hash = client_hash;
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{label}: {} jobs from {CLIENTS} clients in {secs:.3}s ({:.1} jobs/s)",
+        CLIENTS * JOBS_PER_CLIENT as usize,
+        (CLIENTS * JOBS_PER_CLIENT as usize) as f64 / secs
+    );
+    (hash, secs)
+}
+
+fn fetch_stats(addr: std::net::SocketAddr) -> json::Json {
+    let mut sock = TcpStream::connect(addr).expect("connect");
+    writeln!(sock, r#"{{"id":"stats","job":"stats"}}"#).expect("send");
+    sock.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).expect("read");
+    json::parse(line.trim()).expect("valid stats JSON")
+}
+
+fn main() {
+    let svc = Arc::new(Service::new(ServiceConfig::default()));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let _ = frontend::serve_tcp(svc, listener);
+        });
+    }
+    println!("service listening on {addr}");
+
+    let g = generators::grid2d(32, 32);
+    println!("graph: 32x32 grid (n={}, m={})", g.n(), g.m());
+
+    let (hash, cold) = phase(addr, GraphPayload::from_graph(&g), "cold (inline graph)");
+    println!("graph content hash: {hash}");
+
+    // warm phase: same jobs, graph referenced by hash only
+    let (_, warm) = phase(addr, GraphPayload::Stored(hash), "warm (by hash, memoized)");
+
+    let stats = fetch_stats(addr);
+    let get = |k: &str| stats.get(k).and_then(json::Json::as_f64).unwrap_or(0.0);
+    println!(
+        "\nserver stats: parsed {} graph(s), cache hits {} + coalesced {} / misses {} \
+         (hit rate {:.2}), p50 {:.4}s p99 {:.4}s",
+        get("graphs_parsed"),
+        get("cache_hits"),
+        get("coalesced"),
+        get("cache_misses"),
+        get("cache_hit_rate"),
+        get("p50_latency"),
+        get("p99_latency"),
+    );
+    println!("cache-hit speedup: {:.1}x (cold {cold:.3}s → warm {warm:.3}s)", cold / warm);
+    // concurrent first submissions may race the intern (each parses, one
+    // wins), so assert on the interned state, not the parse count
+    assert!(get("graphs_stored") == 1.0, "one distinct graph must be interned");
+    assert!(get("cache_hits") + get("coalesced") > 0.0, "repeats must hit the cache");
+    println!("service_client OK");
+}

@@ -1,0 +1,71 @@
+//! Service throughput: jobs/second through the queue + worker pool, cold
+//! (every job computes) vs warm (exact repeats served from the memo), at
+//! 1/2/4 workers. The warm column demonstrates the content-addressed
+//! store's headroom claim: repeat traffic costs one hash lookup.
+//!
+//! ```text
+//! cargo bench --bench service_throughput
+//! ```
+
+use kahip::bench_util::{time_once, verdict, Cell, Table};
+use kahip::graph::generators;
+use kahip::service::{GraphPayload, JobKind, JobRequest, JobSpec, Service, ServiceConfig};
+use std::sync::mpsc;
+
+const JOBS: usize = 64;
+
+fn batch(g: &kahip::graph::Graph) -> Vec<JobRequest> {
+    (0..JOBS as u64)
+        .map(|i| JobRequest {
+            id: format!("j{i}"),
+            graph: GraphPayload::from_graph(g),
+            spec: JobSpec {
+                k: [2u32, 4, 8][(i % 3) as usize],
+                seed: i,
+                ..JobSpec::defaults(JobKind::Partition)
+            },
+        })
+        .collect()
+}
+
+fn run_batch(svc: &Service, jobs: &[JobRequest]) -> usize {
+    let (tx, rx) = mpsc::channel();
+    for req in jobs {
+        svc.submit_blocking(req.clone(), tx.clone()).expect("accepted");
+    }
+    drop(tx);
+    rx.into_iter().filter(|r| r.outcome.is_ok()).count()
+}
+
+fn main() {
+    let g = generators::grid2d(20, 20);
+    let jobs = batch(&g);
+    let mut t = Table::new(
+        "service throughput: 64 mixed-k partition jobs, cold vs warm",
+        &["workers", "cold", "warm", "speedup", "hit_rate"],
+    );
+    let mut all_ok = true;
+    let mut warm_never_slower = true;
+    for workers in [1usize, 2, 4] {
+        let svc = Service::new(ServiceConfig {
+            workers,
+            queue_capacity: 2 * JOBS,
+            ..Default::default()
+        });
+        let (cold_secs, cold_ok) = time_once(|| run_batch(&svc, &jobs));
+        let (warm_secs, warm_ok) = time_once(|| run_batch(&svc, &jobs));
+        let stats = svc.stats();
+        all_ok &= cold_ok == JOBS && warm_ok == JOBS;
+        warm_never_slower &= warm_secs <= cold_secs;
+        t.row(vec![
+            workers.into(),
+            Cell::Rate(JOBS as f64 / cold_secs),
+            Cell::Rate(JOBS as f64 / warm_secs),
+            (cold_secs / warm_secs).into(),
+            stats.cache_hit_rate().into(),
+        ]);
+    }
+    t.print();
+    verdict("all 3x128 jobs completed ok", all_ok);
+    verdict("warm (memoized) batches are never slower than cold", warm_never_slower);
+}

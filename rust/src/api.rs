@@ -108,6 +108,24 @@ pub fn kaffpa_balance_ne(
     Ok(KaffpaOutput { edgecut: res.edge_cut, part: res.partition.into_assignment() })
 }
 
+/// The separator computation shared by the C-style call below and the
+/// service's separator jobs (byte-identical by construction).
+pub(crate) fn node_separator_on(
+    g: &Graph,
+    nparts: u32,
+    imbalance: f64,
+    seed: u64,
+    mode: Mode,
+) -> crate::separator::Separator {
+    if nparts == 2 {
+        crate::separator::bisep::node_separator(g, mode, imbalance, seed)
+    } else {
+        let cfg = Config::from_mode(mode, nparts, imbalance, seed);
+        let res = crate::coordinator::kaffpa(g, &cfg, None, None);
+        crate::separator::kway_sep::partition_to_vertex_separator(g, &res.partition)
+    }
+}
+
 /// §5.2 "Node Separator": partition into `nparts` blocks, then derive a
 /// separator (for `nparts == 2` via the flow-improved biseparator, else
 /// via the k-way vertex-cover post-processing).
@@ -124,13 +142,7 @@ pub fn node_separator(
     mode: Mode,
 ) -> Result<SeparatorOutput, GraphError> {
     let g = build(xadj, adjncy, vwgt, adjcwgt)?;
-    let sep = if nparts == 2 {
-        crate::separator::bisep::node_separator(&g, mode, imbalance, seed)
-    } else {
-        let cfg = Config::from_mode(mode, nparts, imbalance, seed);
-        let res = crate::coordinator::kaffpa(&g, &cfg, None, None);
-        crate::separator::kway_sep::partition_to_vertex_separator(&g, &res.partition)
-    };
+    let sep = node_separator_on(&g, nparts, imbalance, seed, mode);
     if !suppress_output {
         println!("node_separator: |S|={} weight={}", sep.separator.len(), sep.weight(&g));
     }
@@ -182,6 +194,47 @@ pub enum MapMode {
     Bisection,
 }
 
+/// The mapping computation shared by the C-style call below and the
+/// service's process-mapping jobs (byte-identical by construction):
+/// multisection or bisection mapping, then the QAP re-evaluated on the
+/// final labeling for the output contract.
+pub(crate) fn process_mapping_on(
+    g: &Graph,
+    spec: &HierarchySpec,
+    mode_partitioning: Mode,
+    imbalance: f64,
+    seed: u64,
+    mode_mapping: MapMode,
+) -> MappingOutput {
+    let r = match mode_mapping {
+        MapMode::Multisection => crate::mapping::multisection::global_multisection(
+            g,
+            spec,
+            mode_partitioning,
+            imbalance,
+            seed,
+            false,
+        ),
+        MapMode::Bisection => crate::mapping::multisection::partition_and_map(
+            g,
+            spec,
+            mode_partitioning,
+            imbalance,
+            seed,
+            false,
+        ),
+    };
+    let c = crate::mapping::qap::CommGraph::from_partition(g, &r.partition);
+    let topo = Topology::new(spec, false);
+    let ident = crate::mapping::qap::identity_mapping(spec.num_pes());
+    let qap = crate::mapping::qap::qap_cost(&c, &topo, &ident);
+    MappingOutput {
+        edgecut: metrics::edge_cut(g, &r.partition),
+        qap,
+        part: r.partition.into_assignment(),
+    }
+}
+
 /// §5.2 "Process Mapping": partition onto the machine described by
 /// `hierarchy_parameter` / `distance_parameter` (k = Π hierarchy).
 #[allow(clippy::too_many_arguments)]
@@ -201,41 +254,16 @@ pub fn process_mapping(
     let g = build(xadj, adjncy, vwgt, adjcwgt)?;
     let spec = HierarchySpec::from_arrays(hierarchy_parameter, distance_parameter)
         .map_err(GraphError::SizeMismatch)?;
-    let r = match mode_mapping {
-        MapMode::Multisection => crate::mapping::multisection::global_multisection(
-            &g,
-            &spec,
-            mode_partitioning,
-            imbalance,
-            seed,
-            false,
-        ),
-        MapMode::Bisection => crate::mapping::multisection::partition_and_map(
-            &g,
-            &spec,
-            mode_partitioning,
-            imbalance,
-            seed,
-            false,
-        ),
-    };
+    let out = process_mapping_on(&g, &spec, mode_partitioning, imbalance, seed, mode_mapping);
     if !suppress_output {
-        println!("process_mapping: cut={} qap={}", r.edge_cut, r.qap_cost);
+        println!("process_mapping: cut={} qap={}", out.edgecut, out.qap);
     }
-    // re-evaluate the QAP on the final labeling for the output contract
-    let c = crate::mapping::qap::CommGraph::from_partition(&g, &r.partition);
-    let topo = Topology::new(&spec, false);
-    let ident = crate::mapping::qap::identity_mapping(spec.num_pes());
-    let qap = crate::mapping::qap::qap_cost(&c, &topo, &ident);
-    Ok(MappingOutput {
-        edgecut: metrics::edge_cut(&g, &r.partition),
-        qap,
-        part: r.partition.into_assignment(),
-    })
+    Ok(out)
 }
 
-/// elimination sequence → position-of-vertex array.
-fn positions(order: &[u32]) -> Vec<u32> {
+/// elimination sequence → position-of-vertex array (shared with the
+/// service's ordering jobs).
+pub(crate) fn positions(order: &[u32]) -> Vec<u32> {
     let mut pos = vec![0u32; order.len()];
     for (i, &v) in order.iter().enumerate() {
         pos[v as usize] = i as u32;

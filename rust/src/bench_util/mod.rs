@@ -39,6 +39,8 @@ pub enum Cell {
     Int(i64),
     Float(f64),
     Secs(f64),
+    /// Events per second (throughput columns, e.g. the service bench).
+    Rate(f64),
 }
 
 impl std::fmt::Display for Cell {
@@ -47,6 +49,7 @@ impl std::fmt::Display for Cell {
             Cell::Str(s) => write!(f, "{s}"),
             Cell::Int(i) => write!(f, "{i}"),
             Cell::Float(x) => write!(f, "{x:.3}"),
+            Cell::Rate(x) => write!(f, "{x:.1}/s"),
             Cell::Secs(s) => {
                 if *s < 1e-3 {
                     write!(f, "{:.1}us", s * 1e6)
@@ -196,5 +199,6 @@ mod tests {
         assert_eq!(Cell::Secs(0.005).to_string(), "5.00ms");
         assert_eq!(Cell::Secs(2.0).to_string(), "2.00s");
         assert_eq!(Cell::Float(1.23456).to_string(), "1.235");
+        assert_eq!(Cell::Rate(123.456).to_string(), "123.5/s");
     }
 }

@@ -142,6 +142,7 @@ pub const PROGRAMS: &[&str] = &[
     "ilp_improve",
     "label_propagation",
     "graphchecker",
+    "serve",
 ];
 
 /// Dispatch a full command line (without argv[0]).
@@ -173,6 +174,7 @@ pub fn run(args: &[String]) -> Result<(), String> {
         "ilp_improve" => cmd_ilp_improve(&a),
         "label_propagation" => cmd_label_propagation(&a),
         "graphchecker" => cmd_graphchecker(&a),
+        "serve" => cmd_serve(&a),
         other => Err(format!("unknown program '{other}'\n{}", usage())),
     }
 }
@@ -580,6 +582,39 @@ fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
     pio::write_partition_file(&cluster, out).map_err(|e| e.to_string())?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// `kahip serve`: the persistent partitioning service (see
+/// [`crate::service`]). Default is JSON-lines over stdin/stdout until
+/// EOF (`--stdin` makes that explicit); `--listen=host:port` serves TCP
+/// connections instead. `--workers`, `--queue`, `--graph_cache` and
+/// `--result_cache` size the pool, the backpressure bound and the
+/// content-addressed store.
+fn cmd_serve(a: &ArgSet) -> Result<(), String> {
+    use crate::service::{frontend, Service, ServiceConfig};
+    let defaults = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        workers: a.usize_or("workers", defaults.workers)?,
+        queue_capacity: a.usize_or("queue", defaults.queue_capacity)?,
+        max_graphs: a.usize_or("graph_cache", defaults.max_graphs)?,
+        max_results: a.usize_or("result_cache", defaults.max_results)?,
+    };
+    match a.str_opt("listen") {
+        Some(addr) => {
+            let listener =
+                std::net::TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+            let local = listener.local_addr().map_err(|e| e.to_string())?;
+            eprintln!("kahip serve: listening on {local} ({} workers)", cfg.workers);
+            let svc = std::sync::Arc::new(Service::new(cfg));
+            frontend::serve_tcp(svc, listener).map_err(|e| e.to_string())
+        }
+        None => {
+            let svc = Service::new(cfg);
+            frontend::serve_stdin(&svc).map_err(|e| e.to_string())?;
+            eprint!("{}", svc.stats().render());
+            Ok(())
+        }
+    }
 }
 
 fn cmd_graphchecker(a: &ArgSet) -> Result<(), String> {

@@ -104,7 +104,11 @@ pub fn read_metis<R: Read>(r: R) -> Result<Graph, MetisError> {
     };
 
     let mut b = GraphBuilder::new(n);
-    let mut mentions = 0usize;
+    // every adjacency mention as (lo, hi, from_upper, w); sorted and
+    // scanned in groups afterwards to verify that each undirected edge
+    // is mentioned exactly once per endpoint with equal weights — a flat
+    // vector + sort instead of a per-edge map keeps the parse path lean
+    let mut mentions: Vec<(u32, u32, bool, i64)> = Vec::new();
     for v in 0..n {
         let line = lines.next().ok_or_else(|| {
             MetisError::Parse(format!("expected {n} vertex lines, file ended at {v}"))
@@ -144,25 +148,73 @@ pub fn read_metis<R: Read>(r: R) -> Result<Graph, MetisError> {
             } else {
                 1
             };
+            let v = v as u32;
             let u = (tgt - 1) as u32;
-            mentions += 1;
-            // Each undirected edge is mentioned twice (once per endpoint);
-            // GraphBuilder sums duplicates, so halve on the second mention
-            // by only adding the canonical direction once.
-            if (v as u32) < u {
-                b.add_edge(v as u32, u, w);
-            } else if u < v as u32 {
-                // weight recorded from the lower endpoint's mention; the
-                // checker verifies symmetric weights separately.
-                continue;
+            if u == v {
+                return Err(MetisError::Parse(format!(
+                    "line {}: self-loop at vertex {}",
+                    v + 2,
+                    v + 1
+                )));
             }
+            mentions.push((v.min(u), v.max(u), v > u, w));
         }
     }
-    if mentions != 2 * m {
+    if mentions.len() != 2 * m {
         return Err(MetisError::Parse(format!(
-            "header claims m={m} edges but file contains {mentions} adjacency entries (expected {})",
+            "header claims m={m} edges but file contains {} adjacency entries (expected {})",
+            mentions.len(),
             2 * m
         )));
+    }
+    // group mentions per canonical edge: `false` (lower endpoint's
+    // mention) sorts before `true`, so a well-formed group is exactly
+    // [(lo, hi, false, w), (lo, hi, true, w)]
+    mentions.sort_unstable();
+    let mut i = 0;
+    while i < mentions.len() {
+        let (lo, hi, _, _) = mentions[i];
+        let mut j = i;
+        let (mut from_lo, mut from_hi) = (0usize, 0usize);
+        while j < mentions.len() && mentions[j].0 == lo && mentions[j].1 == hi {
+            if mentions[j].2 {
+                from_hi += 1;
+            } else {
+                from_lo += 1;
+            }
+            j += 1;
+        }
+        if from_lo > 1 || from_hi > 1 {
+            return Err(MetisError::Parse(format!(
+                "parallel edge: {}-{} listed more than once from one endpoint",
+                lo + 1,
+                hi + 1
+            )));
+        }
+        if from_hi == 0 {
+            return Err(MetisError::Parse(format!(
+                "asymmetric adjacency: vertex {} lists {} but not vice versa",
+                lo + 1,
+                hi + 1
+            )));
+        }
+        if from_lo == 0 {
+            return Err(MetisError::Parse(format!(
+                "asymmetric adjacency: vertex {} lists {} but not vice versa",
+                hi + 1,
+                lo + 1
+            )));
+        }
+        let (w_lo, w_hi) = (mentions[i].3, mentions[i + 1].3);
+        if w_lo != w_hi {
+            return Err(MetisError::Parse(format!(
+                "edge {}-{} has weight {w_lo} on one line and {w_hi} on the other",
+                lo + 1,
+                hi + 1
+            )));
+        }
+        b.add_edge(lo, hi, w_lo);
+        i = j;
     }
     Ok(b.build()?)
 }
@@ -267,6 +319,75 @@ mod tests {
     fn rejects_bad_flag() {
         let txt = "2 1 7\n2\n1\n";
         assert!(matches!(read_metis(txt.as_bytes()), Err(MetisError::Parse(_))));
+    }
+
+    #[test]
+    fn rejects_self_loop() {
+        // vertex 1 lists itself
+        let txt = "2 2\n1 2\n1 2\n";
+        let err = read_metis(txt.as_bytes()).unwrap_err();
+        assert!(matches!(&err, MetisError::Parse(m) if m.contains("self-loop")), "{err}");
+    }
+
+    #[test]
+    fn rejects_asymmetric_adjacency() {
+        // vertex 3 lists 1, but vertex 1 does not list 3 (mention count
+        // still matches the header, so only pairwise tracking catches it)
+        let txt = "3 2\n2\n1 3\n1\n";
+        let err = read_metis(txt.as_bytes()).unwrap_err();
+        assert!(matches!(&err, MetisError::Parse(m) if m.contains("asymmetric")), "{err}");
+    }
+
+    #[test]
+    fn rejects_asymmetric_edge_weights() {
+        // the 1-2 edge is weight 5 on one line and 7 on the other
+        let txt = "2 1 1\n2 5\n1 7\n";
+        let err = read_metis(txt.as_bytes()).unwrap_err();
+        assert!(
+            matches!(&err, MetisError::Parse(m) if m.contains("weight 5") && m.contains("7")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_parallel_edge_mentions() {
+        // vertex 1 lists 2 twice
+        let txt = "2 2\n2 2\n1 1\n";
+        let err = read_metis(txt.as_bytes()).unwrap_err();
+        assert!(matches!(&err, MetisError::Parse(m) if m.contains("parallel")), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_headers() {
+        for (txt, what) in [
+            ("", "empty file"),
+            ("5\n", "missing m"),
+            ("x 3\n", "non-numeric n"),
+            ("2 1 2\n2\n1\n", "unsupported flag 2"),
+            ("2 1 99\n2\n1\n", "unsupported flag 99"),
+        ] {
+            assert!(
+                matches!(read_metis(txt.as_bytes()), Err(MetisError::Parse(_))),
+                "header '{txt}' must be rejected ({what})"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_node_weights_only_f10() {
+        let mut b = crate::graph::GraphBuilder::new(3);
+        b.set_node_weight(0, 4);
+        b.set_node_weight(1, 1);
+        b.set_node_weight(2, 9);
+        b.add_edge(0, 1, 1);
+        b.add_edge(1, 2, 1);
+        let g = b.build().unwrap();
+        let mut buf = Vec::new();
+        write_metis(&g, &mut buf).unwrap();
+        let header = String::from_utf8(buf.clone()).unwrap();
+        assert!(header.contains("3 2 10"), "f=10 header expected: {header}");
+        let g2 = read_metis(&buf[..]).unwrap();
+        assert_eq!(g, g2);
     }
 
     #[test]

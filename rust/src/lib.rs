@@ -14,6 +14,11 @@
 //! executed from Rust through the PJRT CPU client (see [`runtime`] and
 //! [`initial::spectral`]). Python never runs on the partitioning path.
 //!
+//! Beyond the one-shot programs, [`service`] runs the whole §5.2 API
+//! surface as a persistent job server (`kahip serve`): a bounded queue, a
+//! worker pool, and a content-addressed graph store that parses each
+//! distinct graph once and memoizes exact-repeat requests.
+//!
 //! ## Quickstart
 //!
 //! ```
@@ -53,6 +58,7 @@ pub mod refinement;
 pub mod rng;
 pub mod runtime;
 pub mod separator;
+pub mod service;
 pub mod util;
 
 pub mod api;

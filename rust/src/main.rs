@@ -1,6 +1,8 @@
-//! The `kahip` binary: one subcommand per program of the user guide (§4).
-//! `kahip --help` lists them; `kahip <program> --help` shows per-program
-//! usage. See `rust/src/cli/` for the option tables.
+//! The `kahip` binary: one subcommand per program of the user guide (§4),
+//! plus `kahip serve` — the persistent partitioning service (JSON-lines
+//! over stdin/stdout or TCP; see `rust/src/service/`). `kahip --help`
+//! lists the programs; `kahip <program> --help` shows per-program usage.
+//! See `rust/src/cli/` for the option tables.
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

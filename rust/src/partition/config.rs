@@ -204,6 +204,53 @@ impl Config {
     pub fn bound(&self, total_weight: i64) -> i64 {
         crate::util::block_weight_bound(total_weight, self.k, self.epsilon)
     }
+
+    /// A stable text rendering of **every** knob. Two configs with equal
+    /// fingerprints drive `kaffpa` to byte-identical results on the same
+    /// graph, so the service memoizes results under this key. The
+    /// exhaustive destructuring (no `..` rest pattern) makes adding a
+    /// `Config` field a compile error here — a new knob can never be
+    /// silently missing from the memo key.
+    pub fn fingerprint(&self) -> String {
+        let Config {
+            mode,
+            k,
+            epsilon,
+            seed,
+            coarsening,
+            edge_rating,
+            contraction_limit_factor,
+            min_shrink,
+            lp_iterations,
+            initial_attempts,
+            use_spectral_initial,
+            kway_fm_rounds,
+            fm_unsuccessful_limit,
+            use_pairwise_fm,
+            use_flow_refinement,
+            flow_region_factor,
+            use_most_balanced_cut,
+            use_multitry_fm,
+            multitry_rounds,
+            use_lp_refinement,
+            global_cycles,
+            use_fcycle,
+            time_limit,
+            enforce_balance,
+            balance_edges,
+        } = self;
+        format!(
+            "mode={}|k={k}|eps={epsilon}|seed={seed}|coars={coarsening:?}|\
+             rating={edge_rating:?}|clf={contraction_limit_factor}|shrink={min_shrink}|\
+             lpit={lp_iterations}|ia={initial_attempts}|spec={use_spectral_initial}|\
+             fm={kway_fm_rounds}|fmlim={fm_unsuccessful_limit}|pw={use_pairwise_fm}|\
+             flow={use_flow_refinement}|frf={flow_region_factor}|mbc={use_most_balanced_cut}|\
+             mtf={use_multitry_fm}|mtr={multitry_rounds}|lpr={use_lp_refinement}|\
+             gc={global_cycles}|fcyc={use_fcycle}|tl={time_limit}|enf={enforce_balance}|\
+             bedg={balance_edges}",
+            mode.name(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -248,6 +295,24 @@ mod tests {
         assert!(e.initial_attempts <= s.initial_attempts);
         assert!(f.kway_fm_rounds <= e.kway_fm_rounds);
         assert!(e.kway_fm_rounds <= s.kway_fm_rounds);
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_and_ignores_nothing() {
+        let base = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        assert_eq!(base.fingerprint(), Config::from_mode(Mode::Eco, 4, 0.03, 0).fingerprint());
+        // the from_mode inputs all show up
+        assert_ne!(base.fingerprint(), Config::from_mode(Mode::Fast, 4, 0.03, 0).fingerprint());
+        assert_ne!(base.fingerprint(), Config::from_mode(Mode::Eco, 8, 0.03, 0).fingerprint());
+        assert_ne!(base.fingerprint(), Config::from_mode(Mode::Eco, 4, 0.05, 0).fingerprint());
+        assert_ne!(base.fingerprint(), Config::from_mode(Mode::Eco, 4, 0.03, 1).fingerprint());
+        // post-construction mutations of program-level flags show up too
+        let mut tweaked = base.clone();
+        tweaked.balance_edges = true;
+        assert_ne!(base.fingerprint(), tweaked.fingerprint());
+        let mut tweaked = base.clone();
+        tweaked.kway_fm_rounds += 1;
+        assert_ne!(base.fingerprint(), tweaked.fingerprint());
     }
 
     #[test]

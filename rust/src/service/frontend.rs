@@ -1,0 +1,216 @@
+//! JSON-lines frontends for the service: one request per line in, one
+//! response per line out (order = completion order; responses carry the
+//! request id for correlation).
+//!
+//! - **stdin/stdout** (`kahip serve`): submissions block at a full queue,
+//!   so backpressure propagates up the pipe — the natural mode for batch
+//!   piping.
+//! - **TCP** (`kahip serve --listen=host:port`): one thread per
+//!   connection; a full queue is reported to the client as an explicit
+//!   `{"ok":false,"error":"queue full (backpressure)"}` response.
+
+use super::protocol::{peek_id, JobRequest, JobResult};
+use super::Service;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Parse a request line and hand it to the service, routing every
+/// failure mode into the result channel so the caller's writer sees a
+/// response for every line.
+fn dispatch(svc: &Service, line: &str, tx: &mpsc::Sender<JobResult>, block: bool) {
+    let req = match JobRequest::from_json(line) {
+        Ok(req) => req,
+        Err(e) => {
+            let id = peek_id(line).unwrap_or_else(|| "?".into());
+            let _ = tx.send(JobResult::error(id, None, format!("bad request: {e}")));
+            return;
+        }
+    };
+    let id = req.id.clone();
+    let kind = req.spec.kind;
+    let outcome = if block {
+        svc.submit_blocking(req, tx.clone())
+    } else {
+        svc.submit(req, tx.clone())
+    };
+    if let Err(e) = outcome {
+        let _ = tx.send(JobResult::error(id, Some(kind), e.to_string()));
+    }
+}
+
+/// Serve JSON-lines over stdin/stdout until EOF; returns once every
+/// accepted job has been answered.
+pub fn serve_stdin(svc: &Service) -> std::io::Result<()> {
+    let (tx, rx) = mpsc::channel::<JobResult>();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            // write manually instead of println!: a closed downstream pipe
+            // (`kahip serve | head -1`) must end the writer, not panic it
+            let stdout = std::io::stdout();
+            for res in rx {
+                let mut out = stdout.lock();
+                if writeln!(out, "{}", res.to_json_line()).is_err() {
+                    break;
+                }
+                if out.flush().is_err() {
+                    break;
+                }
+            }
+        });
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            dispatch(svc, line.trim(), &tx, true);
+        }
+        drop(tx); // writer exits once the last in-flight job reports
+    });
+    Ok(())
+}
+
+/// Accept loop: one handler thread per connection, forever. Callers bind
+/// the listener themselves (port 0 for tests/examples) so they know the
+/// address before serving.
+pub fn serve_tcp(svc: Arc<Service>, listener: TcpListener) -> std::io::Result<()> {
+    for conn in listener.incoming() {
+        let Ok(sock) = conn else { continue };
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let _ = handle_connection(&svc, sock);
+        });
+    }
+    Ok(())
+}
+
+fn handle_connection(svc: &Service, sock: TcpStream) -> std::io::Result<()> {
+    let (tx, rx) = mpsc::channel::<JobResult>();
+    let mut write_half = sock.try_clone()?;
+    let writer = std::thread::spawn(move || {
+        let mut out = BufWriter::new(&mut write_half);
+        for res in rx {
+            if writeln!(out, "{}", res.to_json_line()).is_err() {
+                break;
+            }
+            if out.flush().is_err() {
+                break;
+            }
+        }
+    });
+    let reader = BufReader::new(sock);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        // non-blocking: a full queue becomes an error response (explicit
+        // backpressure the client can react to)
+        dispatch(svc, line.trim(), &tx, false);
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{json, ServiceConfig};
+
+    fn fig4_line(id: &str, seed: u64) -> String {
+        format!(
+            r#"{{"id":"{id}","job":"partition","k":2,"imbalance":0.1,"seed":{seed},"preconfiguration":"eco","xadj":[0,2,5,7,9,12],"adjncy":[1,4,0,2,4,1,3,2,4,0,1,3]}}"#
+        )
+    }
+
+    #[test]
+    fn tcp_frontend_serves_jobs_stats_and_errors() {
+        let svc = Arc::new(Service::new(ServiceConfig { workers: 2, ..Default::default() }));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let _ = serve_tcp(svc, listener);
+            });
+        }
+        let mut sock = TcpStream::connect(addr).unwrap();
+        let mut lines = Vec::new();
+        lines.push(fig4_line("p1", 0));
+        lines.push(fig4_line("p2", 0)); // identical → cached (memo or coalesced)
+        lines.push(r#"{"id":"s1","job":"stats"}"#.to_string());
+        lines.push("this is not json".to_string());
+        let payload = lines.join("\n") + "\n";
+        sock.write_all(payload.as_bytes()).unwrap();
+        sock.flush().unwrap();
+        sock.shutdown(std::net::Shutdown::Write).unwrap();
+
+        let reader = BufReader::new(sock);
+        let mut responses: Vec<json::Json> = Vec::new();
+        for line in reader.lines() {
+            responses.push(json::parse(&line.unwrap()).unwrap());
+        }
+        assert_eq!(responses.len(), 4);
+        let by_id = |id: &str| {
+            responses
+                .iter()
+                .find(|r| r.get("id").and_then(json::Json::as_str) == Some(id))
+                .unwrap_or_else(|| panic!("no response for id {id}"))
+        };
+        let p1 = by_id("p1");
+        assert_eq!(p1.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(p1.get("part").unwrap().as_arr().unwrap().len(), 5);
+        let p2 = by_id("p2");
+        assert_eq!(p2.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            p2.get("cached").unwrap().as_bool(),
+            Some(true),
+            "identical request must be served from cache or coalesced"
+        );
+        assert_eq!(
+            p1.get("part").unwrap().as_arr().unwrap(),
+            p2.get("part").unwrap().as_arr().unwrap(),
+        );
+        let s1 = by_id("s1");
+        assert_eq!(s1.get("ok").unwrap().as_bool(), Some(true));
+        assert!(s1.get("p50_latency").is_some());
+        let bad = by_id("?");
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("bad request"));
+    }
+
+    #[test]
+    fn stored_graph_reference_works_across_one_connection() {
+        let svc = Arc::new(Service::new(ServiceConfig { workers: 2, ..Default::default() }));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let _ = serve_tcp(svc, listener);
+            });
+        }
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all((fig4_line("first", 0) + "\n").as_bytes()).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let first = json::parse(line.trim()).unwrap();
+        let hash = first.get("graph").unwrap().as_str().unwrap().to_string();
+        // second job on the same graph, by hash only (different seed)
+        let by_ref = format!(
+            r#"{{"id":"byref","job":"partition","k":2,"imbalance":0.1,"seed":5,"graph":"{hash}"}}"#
+        );
+        sock.write_all((by_ref + "\n").as_bytes()).unwrap();
+        sock.shutdown(std::net::Shutdown::Write).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let second = json::parse(line.trim()).unwrap();
+        assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(second.get("graph").unwrap().as_str(), Some(hash.as_str()));
+        assert_eq!(svc.stats().graphs_parsed, 1, "hash reference must not re-parse");
+    }
+}

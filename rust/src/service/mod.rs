@@ -1,0 +1,377 @@
+//! The partitioning service: a persistent, shared-memory job server over
+//! the whole §5.2 API surface (`kahip serve`).
+//!
+//! One-shot programs re-parse the graph and re-run the full multilevel
+//! pipeline on every invocation; under production traffic the parse and
+//! the repeat computations dominate. This subsystem keeps a pool of
+//! workers hot (the Mt-KaHyPar scheduling insight — dispatch to
+//! persistent threads instead of spawning per call), interns graphs by
+//! content hash so every distinct graph is parsed exactly once, and
+//! memoizes `(graph, job) → result` so exact-repeat requests cost one
+//! hash lookup:
+//!
+//! ```text
+//!  stdin ─┐                       ┌────────────┐   pop   ┌──────────┐
+//!  TCP  ──┼── JSON-lines ──▶ submit│ bounded    │────────▶│ worker   │──▶ results
+//!  in-proc┘      ▲               │ job queue   │         │ pool     │   (channel
+//!                │ cache hit /   └────────────┘         └────┬─────┘    per client)
+//!                │ coalesce            ▲                      │ memoize
+//!            ┌───┴───────────────┐     │ intern (hash CSR)    ▼
+//!            │ GraphStore        │◀────┴──────────────────────┘
+//!            │ hash → Graph      │
+//!            │ (hash,job) → out  │
+//!            └───────────────────┘
+//! ```
+//!
+//! Determinism is the load-bearing property: a job executes exactly the
+//! code path of the corresponding direct library call with the same seed,
+//! so serving from the memo is indistinguishable from recomputing.
+
+pub mod frontend;
+pub mod json;
+pub mod protocol;
+pub mod scheduler;
+pub mod stats;
+pub mod store;
+
+pub use protocol::{GraphPayload, JobKind, JobOutput, JobRequest, JobResult, JobSpec};
+pub use scheduler::{CancelHandle, SubmitError};
+pub use stats::ServiceStats;
+pub use store::GraphStore;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Sizing knobs of one service instance.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads executing jobs.
+    pub workers: usize,
+    /// Bounded queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Graphs kept interned (FIFO eviction).
+    pub max_graphs: usize,
+    /// Results kept memoized (FIFO eviction).
+    pub max_results: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2),
+            queue_capacity: 256,
+            max_graphs: 128,
+            max_results: 4096,
+        }
+    }
+}
+
+/// A running partitioning service: graph store + scheduler + worker pool.
+/// Dropping the service drains the queue and joins the workers, so every
+/// accepted job still gets its result.
+pub struct Service {
+    store: Arc<GraphStore>,
+    scheduler: scheduler::Scheduler,
+}
+
+impl Service {
+    pub fn new(cfg: ServiceConfig) -> Service {
+        let store = Arc::new(GraphStore::new(cfg.max_graphs, cfg.max_results));
+        let scheduler =
+            scheduler::Scheduler::new(cfg.workers, cfg.queue_capacity, Arc::clone(&store));
+        Service { store, scheduler }
+    }
+
+    /// Submit a job; its [`JobResult`] arrives on `tx` exactly once. At a
+    /// full queue this refuses with [`SubmitError::QueueFull`] — the
+    /// caller decides how to surface the backpressure.
+    pub fn submit(
+        &self,
+        req: JobRequest,
+        tx: mpsc::Sender<JobResult>,
+    ) -> Result<CancelHandle, SubmitError> {
+        self.scheduler.submit(req, tx, false)
+    }
+
+    /// Like [`Service::submit`], but at a full queue the calling thread
+    /// parks until a slot frees (backpressure by blocking the producer).
+    pub fn submit_blocking(
+        &self,
+        req: JobRequest,
+        tx: mpsc::Sender<JobResult>,
+    ) -> Result<CancelHandle, SubmitError> {
+        self.scheduler.submit(req, tx, true)
+    }
+
+    /// Submit one job and wait for its result (convenience for tests,
+    /// examples, and embedding).
+    pub fn run_sync(&self, req: JobRequest) -> JobResult {
+        let id = req.id.clone();
+        let kind = req.spec.kind;
+        let (tx, rx) = mpsc::channel();
+        match self.submit_blocking(req, tx) {
+            Ok(_) => rx
+                .recv()
+                .unwrap_or_else(|_| JobResult::error(id, Some(kind), "service shut down")),
+            Err(e) => JobResult::error(id, Some(kind), e.to_string()),
+        }
+    }
+
+    /// Point-in-time [`ServiceStats`] snapshot.
+    pub fn stats(&self) -> ServiceStats {
+        self.scheduler.snapshot()
+    }
+
+    /// The content-addressed store (shared with the scheduler).
+    pub fn store(&self) -> &Arc<GraphStore> {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::config::{Config, Mode};
+
+    fn grid_request(id: &str, k: u32, seed: u64) -> JobRequest {
+        let g = generators::grid2d(8, 8);
+        JobRequest {
+            id: id.into(),
+            graph: GraphPayload::from_graph(&g),
+            spec: JobSpec {
+                k,
+                seed,
+                ..JobSpec::defaults(JobKind::Partition)
+            },
+        }
+    }
+
+    #[test]
+    fn run_sync_matches_direct_call_byte_identical() {
+        let svc = Service::new(ServiceConfig { workers: 2, ..Default::default() });
+        let res = svc.run_sync(grid_request("j1", 4, 9));
+        let g = generators::grid2d(8, 8);
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 9);
+        let direct = crate::coordinator::kaffpa(&g, &cfg, None, None);
+        match res.outcome.as_ref().unwrap().as_ref() {
+            JobOutput::Partition { edgecut, part, .. } => {
+                assert_eq!(*edgecut, direct.edge_cut);
+                assert_eq!(*part, direct.partition.into_assignment());
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+        assert!(!res.cached);
+        assert!(res.graph_hash.is_some());
+    }
+
+    #[test]
+    fn exact_repeat_hits_the_memo() {
+        let svc = Service::new(ServiceConfig { workers: 2, ..Default::default() });
+        let first = svc.run_sync(grid_request("a", 2, 3));
+        let second = svc.run_sync(grid_request("b", 2, 3));
+        assert!(!first.cached);
+        assert!(second.cached, "identical job must be served from the memo");
+        assert_eq!(second.seconds, 0.0);
+        let (p1, p2) = match (
+            first.outcome.unwrap().as_ref(),
+            second.outcome.unwrap().as_ref(),
+        ) {
+            (
+                JobOutput::Partition { part: p1, .. },
+                JobOutput::Partition { part: p2, .. },
+            ) => (p1.clone(), p2.clone()),
+            _ => panic!("wrong outputs"),
+        };
+        assert_eq!(p1, p2);
+        let s = svc.stats();
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert!(s.cache_hit_rate() > 0.0);
+        assert_eq!(s.graphs_parsed, 1);
+        assert_eq!(s.graphs_reused, 1, "second request must not re-parse");
+    }
+
+    #[test]
+    fn stored_graph_reference_round_trip() {
+        let svc = Service::new(ServiceConfig::default());
+        let first = svc.run_sync(grid_request("a", 2, 0));
+        let hash = first.graph_hash.clone().unwrap();
+        // same job by hash, different seed → computed on the stored graph
+        let mut req = grid_request("b", 2, 1);
+        req.graph = GraphPayload::Stored(hash.clone());
+        let second = svc.run_sync(req);
+        assert_eq!(second.graph_hash.as_deref(), Some(hash.as_str()));
+        assert!(second.outcome.is_ok());
+        assert!(!second.cached, "different seed must compute");
+        // unknown hash is a job-level error
+        let mut req = grid_request("c", 2, 2);
+        req.graph = GraphPayload::Stored("0000".into());
+        let res = svc.run_sync(req);
+        assert!(res.outcome.unwrap_err().contains("unknown graph hash"));
+    }
+
+    #[test]
+    fn invalid_graph_is_reported_not_crashed() {
+        let svc = Service::new(ServiceConfig::default());
+        let req = JobRequest {
+            id: "bad".into(),
+            graph: GraphPayload::Inline {
+                xadj: vec![0, 1, 1],
+                adjncy: vec![1],
+                vwgt: None,
+                adjwgt: None,
+            },
+            spec: JobSpec { k: 2, ..JobSpec::defaults(JobKind::Partition) },
+        };
+        let res = svc.run_sync(req);
+        assert!(res.outcome.is_err());
+        assert_eq!(svc.stats().failed, 1);
+    }
+
+    #[test]
+    fn stats_job_answers_synchronously() {
+        let svc = Service::new(ServiceConfig::default());
+        svc.run_sync(grid_request("warm", 2, 5));
+        let req = JobRequest {
+            id: "s".into(),
+            graph: GraphPayload::None,
+            spec: JobSpec::defaults(JobKind::Stats),
+        };
+        let res = svc.run_sync(req);
+        match res.outcome.unwrap().as_ref() {
+            JobOutput::Stats(s) => {
+                assert_eq!(s.completed, 1);
+                assert_eq!(s.graphs_stored, 1);
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_is_full() {
+        // one worker, one queue slot: occupy the worker, fill the slot,
+        // then the third submission must bounce
+        let svc = Service::new(ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            ..Default::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        let mut slow = grid_request("running", 2, 100);
+        slow.spec.time_limit = 0.4; // keeps the single worker busy
+        svc.submit(slow, tx.clone()).unwrap();
+        // wait until the worker has taken the job off the queue
+        for _ in 0..200 {
+            if svc.stats().queue_depth == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        svc.submit(grid_request("queued", 2, 101), tx.clone()).unwrap();
+        let err = svc.submit(grid_request("refused", 2, 102), tx.clone()).unwrap_err();
+        assert_eq!(err, SubmitError::QueueFull);
+        assert_eq!(svc.stats().rejected, 1);
+        // both accepted jobs still complete
+        assert!(rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap().outcome.is_ok());
+        assert!(rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap().outcome.is_ok());
+    }
+
+    #[test]
+    fn cancellation_while_queued_resolves_as_cancelled() {
+        let svc = Service::new(ServiceConfig { workers: 1, ..Default::default() });
+        let (tx, rx) = mpsc::channel();
+        let mut slow = grid_request("running", 2, 200);
+        slow.spec.time_limit = 0.4;
+        svc.submit(slow, tx.clone()).unwrap();
+        let handle = svc.submit(grid_request("doomed", 2, 201), tx.clone()).unwrap();
+        handle.cancel();
+        assert!(handle.is_cancelled());
+        let mut cancelled = 0;
+        for _ in 0..2 {
+            let res = rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap();
+            if res.id == "doomed" {
+                assert_eq!(res.outcome.unwrap_err(), "cancelled");
+                cancelled += 1;
+            } else {
+                assert!(res.outcome.is_ok());
+            }
+        }
+        assert_eq!(cancelled, 1);
+        assert_eq!(svc.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn coalescing_attaches_identical_inflight_jobs() {
+        let svc = Service::new(ServiceConfig { workers: 1, ..Default::default() });
+        let (tx, rx) = mpsc::channel();
+        let mut slow = grid_request("head", 2, 300);
+        slow.spec.time_limit = 0.3;
+        svc.submit(slow, tx.clone()).unwrap();
+        // identical primary sitting in the queue...
+        svc.submit(grid_request("primary", 4, 301), tx.clone()).unwrap();
+        // ...and an identical duplicate: must coalesce, not queue
+        svc.submit(grid_request("dup", 4, 301), tx.clone()).unwrap();
+        let mut results = Vec::new();
+        for _ in 0..3 {
+            results.push(rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap());
+        }
+        let dup = results.iter().find(|r| r.id == "dup").unwrap();
+        let primary = results.iter().find(|r| r.id == "primary").unwrap();
+        assert!(dup.cached, "coalesced result must be marked cached");
+        match (
+            primary.outcome.as_ref().unwrap().as_ref(),
+            dup.outcome.as_ref().unwrap().as_ref(),
+        ) {
+            (JobOutput::Partition { part: a, .. }, JobOutput::Partition { part: b, .. }) => {
+                assert_eq!(a, b)
+            }
+            _ => panic!("wrong outputs"),
+        }
+        assert_eq!(svc.stats().coalesced, 1);
+    }
+
+    #[test]
+    fn time_limited_jobs_bypass_the_cache() {
+        // wall-clock-limited searches are nondeterministic: an exact
+        // repeat must recompute, never be served from the memo
+        let svc = Service::new(ServiceConfig { workers: 1, ..Default::default() });
+        let mut req = grid_request("t1", 2, 400);
+        req.spec.time_limit = 0.1;
+        let first = svc.run_sync(req.clone());
+        req.id = "t2".into();
+        let second = svc.run_sync(req);
+        assert!(first.outcome.is_ok() && second.outcome.is_ok());
+        assert!(!first.cached);
+        assert!(!second.cached, "time-limited repeat must recompute");
+        assert!(second.seconds > 0.0);
+        assert_eq!(svc.stats().cache_hits, 0);
+        assert_eq!(svc.stats().coalesced, 0);
+    }
+
+    #[test]
+    fn mixed_job_kinds_execute() {
+        let svc = Service::new(ServiceConfig::default());
+        let g = generators::grid2d(6, 6);
+        for (kind, check_len) in [
+            (JobKind::Separator, 0usize),
+            (JobKind::Ordering, 36),
+            (JobKind::EdgePartition, g.m()),
+        ] {
+            let req = JobRequest {
+                id: format!("{kind:?}"),
+                graph: GraphPayload::from_graph(&g),
+                spec: JobSpec { k: 2, ..JobSpec::defaults(kind) },
+            };
+            let res = svc.run_sync(req);
+            match res.outcome.unwrap().as_ref() {
+                JobOutput::Separator { separator, .. } => assert!(!separator.is_empty()),
+                JobOutput::Ordering { positions, .. } => assert_eq!(positions.len(), check_len),
+                JobOutput::EdgePartition { assignment, .. } => {
+                    assert_eq!(assignment.len(), check_len)
+                }
+                other => panic!("wrong output {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,727 @@
+//! The typed job protocol of the partitioning service: one [`JobKind`] per
+//! §5.2 C-API entry point (plus the SPAC edge partitioner of §4.8 and a
+//! `stats` introspection job), carried as JSON-lines over stdin/stdout or
+//! TCP. Requests reference their graph either inline (raw CSR arrays, the
+//! Metis NULL-pointer conventions become absent/`null` fields) or by the
+//! content hash returned in every response — repeat clients never resend
+//! or reparse a graph.
+//!
+//! | C function (§5.2)       | `"job"` value       |
+//! |--------------------------|--------------------|
+//! | `kaffpa` / `…balance_NE` | `partition`        |
+//! | `node_separator`         | `separator`        |
+//! | `reduced_nd[_fast]`      | `ordering`         |
+//! | — (§4.8 SPAC)            | `edge_partition`   |
+//! | `process_mapping`        | `process_mapping`  |
+//! | — (introspection)        | `stats`            |
+
+use super::json::{self, Json};
+use super::stats::ServiceStats;
+use crate::graph::Graph;
+use crate::mapping::HierarchySpec;
+use crate::partition::config::{Config, Mode};
+use std::sync::Arc;
+
+/// Job types the worker pool executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Partition,
+    Separator,
+    Ordering,
+    EdgePartition,
+    ProcessMapping,
+    /// Answered synchronously by the service (never queued).
+    Stats,
+}
+
+impl JobKind {
+    pub fn parse(s: &str) -> Option<JobKind> {
+        match s {
+            "partition" => Some(JobKind::Partition),
+            "separator" => Some(JobKind::Separator),
+            "ordering" => Some(JobKind::Ordering),
+            "edge_partition" => Some(JobKind::EdgePartition),
+            "process_mapping" => Some(JobKind::ProcessMapping),
+            "stats" => Some(JobKind::Stats),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Partition => "partition",
+            JobKind::Separator => "separator",
+            JobKind::Ordering => "ordering",
+            JobKind::EdgePartition => "edge_partition",
+            JobKind::ProcessMapping => "process_mapping",
+            JobKind::Stats => "stats",
+        }
+    }
+}
+
+/// All knobs of one job, normalized per kind (fields a kind does not use
+/// stay at their defaults so the memo fingerprint ignores them).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    pub k: u32,
+    /// Imbalance ε as a fraction (0.03 = 3%), the §5.2 convention.
+    pub epsilon: f64,
+    pub seed: u64,
+    pub mode: Mode,
+    /// `kaffpa_balance_NE` semantics (partition jobs).
+    pub balance_edges: bool,
+    pub enforce_balance: bool,
+    /// Per-job time limit in seconds (0 = single multilevel pass;
+    /// deterministic). Partition jobs only.
+    pub time_limit: f64,
+    /// `reduced_nd_fast` instead of `reduced_nd` (ordering jobs).
+    pub fast_ordering: bool,
+    /// Dominant-edge weight for the SPAC split graph (edge-partition jobs).
+    pub infinity: i64,
+    /// Machine hierarchy (process-mapping jobs); k = product.
+    pub hierarchy: Vec<usize>,
+    pub distances: Vec<i64>,
+    /// Recursive-bisection mapping instead of global multisection.
+    pub map_bisection: bool,
+}
+
+impl JobSpec {
+    /// A spec with every knob at its protocol default (eco, ε = 0.03,
+    /// seed 0). Clients override fields with struct-update syntax.
+    pub fn defaults(kind: JobKind) -> JobSpec {
+        JobSpec {
+            kind,
+            k: 2,
+            epsilon: 0.03,
+            seed: 0,
+            mode: Mode::Eco,
+            balance_edges: false,
+            enforce_balance: false,
+            time_limit: 0.0,
+            fast_ordering: false,
+            infinity: 1000,
+            hierarchy: Vec::new(),
+            distances: Vec::new(),
+            map_bisection: false,
+        }
+    }
+
+    /// Build the partitioner [`Config`] this spec describes.
+    pub fn config(&self) -> Config {
+        let mut cfg = Config::from_mode(self.mode, self.k, self.epsilon, self.seed);
+        cfg.balance_edges = self.balance_edges;
+        cfg.enforce_balance = self.enforce_balance;
+        cfg.time_limit = self.time_limit;
+        cfg
+    }
+
+    /// Whether results of this spec may be memoized and coalesced. A
+    /// partition job with a wall-clock `time_limit` repeats passes until
+    /// the deadline, so its result depends on machine load — serving it
+    /// from the cache would silently skip the search the client paid
+    /// for. Everything else is deterministic given the seed.
+    pub fn cacheable(&self) -> bool {
+        self.kind != JobKind::Stats && self.time_limit == 0.0
+    }
+
+    /// Memo key part: every knob that can influence the job's output. Two
+    /// specs with equal fingerprints on the same graph hash must produce
+    /// byte-identical results.
+    pub fn fingerprint(&self) -> String {
+        match self.kind {
+            JobKind::Partition => format!("partition|{}", self.config().fingerprint()),
+            JobKind::Separator => format!("separator|{}", self.config().fingerprint()),
+            JobKind::Ordering => format!(
+                "ordering|mode={}|seed={}|fast={}",
+                self.mode.name(),
+                self.seed,
+                self.fast_ordering
+            ),
+            JobKind::EdgePartition => format!(
+                "edge_partition|k={}|eps={}|seed={}|mode={}|inf={}",
+                self.k,
+                self.epsilon,
+                self.seed,
+                self.mode.name(),
+                self.infinity
+            ),
+            JobKind::ProcessMapping => {
+                let h: Vec<String> = self.hierarchy.iter().map(|x| x.to_string()).collect();
+                let d: Vec<String> = self.distances.iter().map(|x| x.to_string()).collect();
+                format!(
+                    "process_mapping|eps={}|seed={}|mode={}|bisect={}|h={}|d={}",
+                    self.epsilon,
+                    self.seed,
+                    self.mode.name(),
+                    self.map_bisection,
+                    h.join(":"),
+                    d.join(":")
+                )
+            }
+            JobKind::Stats => "stats".into(),
+        }
+    }
+}
+
+/// How a request names its graph.
+#[derive(Clone, Debug)]
+pub enum GraphPayload {
+    /// Raw CSR arrays, exactly the §5.2 calling convention.
+    Inline {
+        xadj: Vec<u32>,
+        adjncy: Vec<u32>,
+        vwgt: Option<Vec<i64>>,
+        adjwgt: Option<Vec<i64>>,
+    },
+    /// Content hash of a previously interned graph.
+    Stored(String),
+    /// No graph (stats jobs).
+    None,
+}
+
+impl GraphPayload {
+    /// Convenience: inline payload from a built [`Graph`] (tests, clients).
+    pub fn from_graph(g: &Graph) -> GraphPayload {
+        let (xadj, adjncy, vwgt, adjwgt) = g.raw();
+        GraphPayload::Inline {
+            xadj: xadj.to_vec(),
+            adjncy: adjncy.to_vec(),
+            vwgt: Some(vwgt.to_vec()),
+            adjwgt: Some(adjwgt.to_vec()),
+        }
+    }
+}
+
+/// One submitted job.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub id: String,
+    pub graph: GraphPayload,
+    pub spec: JobSpec,
+}
+
+impl JobRequest {
+    /// Parse one JSON-lines request.
+    pub fn from_json(line: &str) -> Result<JobRequest, String> {
+        let v = json::parse(line)?;
+        let id = match v.get("id") {
+            Some(Json::Str(s)) => s.clone(),
+            Some(Json::Int(i)) => i.to_string(),
+            Some(_) => return Err("'id' must be a string or integer".into()),
+            None => return Err("missing 'id'".into()),
+        };
+        let kind_name =
+            v.get("job").and_then(Json::as_str).ok_or("missing 'job' (the job kind)")?;
+        let kind = JobKind::parse(kind_name)
+            .ok_or_else(|| format!("unknown job kind '{kind_name}'"))?;
+        let mut spec = JobSpec::defaults(kind);
+
+        if let Some(x) = v.get("imbalance") {
+            spec.epsilon = x.as_f64().ok_or("'imbalance' must be a number")?;
+            if !(0.0..1.0).contains(&spec.epsilon) {
+                return Err(format!(
+                    "'imbalance' is a fraction in [0,1), got {} (did you pass percent?)",
+                    spec.epsilon
+                ));
+            }
+        }
+        if let Some(x) = v.get("seed") {
+            spec.seed = x.as_u64().ok_or("'seed' must be a non-negative integer")?;
+        }
+        if let Some(x) = v.get("preconfiguration") {
+            let name = x.as_str().ok_or("'preconfiguration' must be a string")?;
+            spec.mode =
+                Mode::parse(name).ok_or_else(|| format!("unknown preconfiguration '{name}'"))?;
+        }
+        match kind {
+            JobKind::Partition => {
+                spec.k = require_k(&v)?;
+                spec.balance_edges = flag(&v, "balance_edges")?;
+                spec.enforce_balance = flag(&v, "enforce_balance")?;
+                if let Some(x) = v.get("time_limit") {
+                    spec.time_limit = x.as_f64().ok_or("'time_limit' must be a number")?;
+                }
+            }
+            JobKind::Separator => {
+                spec.k = require_k(&v)?;
+            }
+            JobKind::Ordering => {
+                spec.fast_ordering = flag(&v, "fast")?;
+            }
+            JobKind::EdgePartition => {
+                spec.k = require_k(&v)?;
+                if let Some(x) = v.get("infinity") {
+                    spec.infinity = x.as_i64().ok_or("'infinity' must be an integer")?;
+                }
+            }
+            JobKind::ProcessMapping => {
+                let h = v.get("hierarchy").ok_or("process_mapping needs 'hierarchy'")?;
+                spec.hierarchy = h
+                    .to_i64_vec("hierarchy")?
+                    .into_iter()
+                    .map(|x| usize::try_from(x).map_err(|_| "negative hierarchy entry".to_string()))
+                    .collect::<Result<_, _>>()?;
+                let d = v.get("distances").ok_or("process_mapping needs 'distances'")?;
+                spec.distances = d.to_i64_vec("distances")?;
+                spec.map_bisection = flag(&v, "bisection")?;
+                spec.k = spec.hierarchy.iter().product::<usize>() as u32;
+            }
+            JobKind::Stats => {}
+        }
+
+        let graph = if kind == JobKind::Stats {
+            GraphPayload::None
+        } else if let Some(x) = v.get("xadj") {
+            let xadj = x.to_u32_vec("xadj")?;
+            let adjncy = v
+                .get("adjncy")
+                .ok_or("inline graph needs 'adjncy' next to 'xadj'")?
+                .to_u32_vec("adjncy")?;
+            let vwgt = match v.get("vwgt") {
+                None | Some(Json::Null) => None,
+                Some(w) => Some(w.to_i64_vec("vwgt")?),
+            };
+            let adjwgt = match v.get("adjwgt") {
+                None | Some(Json::Null) => None,
+                Some(w) => Some(w.to_i64_vec("adjwgt")?),
+            };
+            GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt }
+        } else if let Some(x) = v.get("graph") {
+            GraphPayload::Stored(x.as_str().ok_or("'graph' must be a hash string")?.to_string())
+        } else {
+            return Err(format!("'{kind_name}' job needs 'xadj'+'adjncy' or a 'graph' hash"));
+        };
+        Ok(JobRequest { id, graph, spec })
+    }
+
+    /// Serialize as one JSON line (the client side of the protocol).
+    pub fn to_json_line(&self) -> String {
+        let mut fields: Vec<(String, Json)> = vec![
+            ("id".into(), Json::Str(self.id.clone())),
+            ("job".into(), Json::Str(self.spec.kind.name().into())),
+        ];
+        match self.spec.kind {
+            JobKind::Partition => {
+                fields.push(("k".into(), Json::Int(self.spec.k as i64)));
+                if self.spec.balance_edges {
+                    fields.push(("balance_edges".into(), Json::Bool(true)));
+                }
+                if self.spec.enforce_balance {
+                    fields.push(("enforce_balance".into(), Json::Bool(true)));
+                }
+                if self.spec.time_limit > 0.0 {
+                    fields.push(("time_limit".into(), Json::Float(self.spec.time_limit)));
+                }
+            }
+            JobKind::Separator | JobKind::EdgePartition => {
+                fields.push(("k".into(), Json::Int(self.spec.k as i64)));
+                if self.spec.kind == JobKind::EdgePartition {
+                    fields.push(("infinity".into(), Json::Int(self.spec.infinity)));
+                }
+            }
+            JobKind::Ordering => {
+                if self.spec.fast_ordering {
+                    fields.push(("fast".into(), Json::Bool(true)));
+                }
+            }
+            JobKind::ProcessMapping => {
+                let h: Vec<i64> = self.spec.hierarchy.iter().map(|&x| x as i64).collect();
+                fields.push(("hierarchy".into(), Json::from_i64s(&h)));
+                fields.push(("distances".into(), Json::from_i64s(&self.spec.distances)));
+                if self.spec.map_bisection {
+                    fields.push(("bisection".into(), Json::Bool(true)));
+                }
+            }
+            JobKind::Stats => {}
+        }
+        if self.spec.kind != JobKind::Stats {
+            fields.push(("imbalance".into(), Json::Float(self.spec.epsilon)));
+            fields.push(("seed".into(), Json::Int(self.spec.seed as i64)));
+            fields.push((
+                "preconfiguration".into(),
+                Json::Str(self.spec.mode.name().into()),
+            ));
+            match &self.graph {
+                GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => {
+                    fields.push(("xadj".into(), Json::from_u32s(xadj)));
+                    fields.push(("adjncy".into(), Json::from_u32s(adjncy)));
+                    if let Some(w) = vwgt {
+                        fields.push(("vwgt".into(), Json::from_i64s(w)));
+                    }
+                    if let Some(w) = adjwgt {
+                        fields.push(("adjwgt".into(), Json::from_i64s(w)));
+                    }
+                }
+                GraphPayload::Stored(h) => {
+                    fields.push(("graph".into(), Json::Str(h.clone())));
+                }
+                GraphPayload::None => {}
+            }
+        }
+        Json::Obj(fields).render()
+    }
+}
+
+/// Best-effort id extraction from a line that failed full parsing, so
+/// error responses stay correlated.
+pub fn peek_id(line: &str) -> Option<String> {
+    let v = json::parse(line).ok()?;
+    match v.get("id") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(Json::Int(i)) => Some(i.to_string()),
+        _ => None,
+    }
+}
+
+/// What a finished job produced.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    Partition { edgecut: i64, balance: f64, part: Vec<u32> },
+    Separator { separator: Vec<u32>, weight: i64 },
+    Ordering { positions: Vec<u32>, fill: u64 },
+    EdgePartition { assignment: Vec<u32>, vertex_cut: i64, replication: f64 },
+    Mapping { edgecut: i64, qap: i64, part: Vec<u32> },
+    Stats(ServiceStats),
+}
+
+/// Outcome of one request, tagged with its id.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: String,
+    /// `None` only for lines that failed to parse as a request at all.
+    pub kind: Option<JobKind>,
+    /// Content hash of the interned graph (absent for stats/parse errors).
+    pub graph_hash: Option<String>,
+    /// Served from the memo cache (or coalesced onto an identical
+    /// in-flight job) instead of recomputed.
+    pub cached: bool,
+    /// Wall-clock seconds spent executing (0 for cache hits).
+    pub seconds: f64,
+    pub outcome: Result<Arc<JobOutput>, String>,
+}
+
+impl JobResult {
+    pub fn error(
+        id: impl Into<String>,
+        kind: Option<JobKind>,
+        msg: impl Into<String>,
+    ) -> JobResult {
+        JobResult {
+            id: id.into(),
+            kind,
+            graph_hash: None,
+            cached: false,
+            seconds: 0.0,
+            outcome: Err(msg.into()),
+        }
+    }
+
+    /// Serialize as one JSON line.
+    pub fn to_json_line(&self) -> String {
+        let mut fields: Vec<(String, Json)> =
+            vec![("id".into(), Json::Str(self.id.clone()))];
+        if let Some(kind) = self.kind {
+            fields.push(("job".into(), Json::Str(kind.name().into())));
+        }
+        fields.push(("ok".into(), Json::Bool(self.outcome.is_ok())));
+        if let Some(h) = &self.graph_hash {
+            fields.push(("graph".into(), Json::Str(h.clone())));
+        }
+        match &self.outcome {
+            Err(e) => fields.push(("error".into(), Json::Str(e.clone()))),
+            Ok(out) => {
+                fields.push(("cached".into(), Json::Bool(self.cached)));
+                fields.push(("seconds".into(), Json::Float(self.seconds)));
+                match out.as_ref() {
+                    JobOutput::Partition { edgecut, balance, part } => {
+                        fields.push(("edgecut".into(), Json::Int(*edgecut)));
+                        fields.push(("balance".into(), Json::Float(*balance)));
+                        fields.push(("part".into(), Json::from_u32s(part)));
+                    }
+                    JobOutput::Separator { separator, weight } => {
+                        fields.push((
+                            "num_separator_vertices".into(),
+                            Json::Int(separator.len() as i64),
+                        ));
+                        fields.push(("weight".into(), Json::Int(*weight)));
+                        fields.push(("separator".into(), Json::from_u32s(separator)));
+                    }
+                    JobOutput::Ordering { positions, fill } => {
+                        fields.push(("fill".into(), Json::Int(*fill as i64)));
+                        fields.push(("ordering".into(), Json::from_u32s(positions)));
+                    }
+                    JobOutput::EdgePartition { assignment, vertex_cut, replication } => {
+                        fields.push(("vertex_cut".into(), Json::Int(*vertex_cut)));
+                        fields.push(("replication".into(), Json::Float(*replication)));
+                        fields.push(("edge_partition".into(), Json::from_u32s(assignment)));
+                    }
+                    JobOutput::Mapping { edgecut, qap, part } => {
+                        fields.push(("edgecut".into(), Json::Int(*edgecut)));
+                        fields.push(("qap".into(), Json::Int(*qap)));
+                        fields.push(("part".into(), Json::from_u32s(part)));
+                    }
+                    JobOutput::Stats(s) => {
+                        if let Json::Obj(stat_fields) = s.to_json() {
+                            fields.extend(stat_fields);
+                        }
+                    }
+                }
+            }
+        }
+        Json::Obj(fields).render()
+    }
+}
+
+fn flag(v: &Json, name: &str) -> Result<bool, String> {
+    match v.get(name) {
+        None | Some(Json::Null) => Ok(false),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(format!("'{name}' must be a boolean")),
+    }
+}
+
+fn require_k(v: &Json) -> Result<u32, String> {
+    let k = v
+        .get("k")
+        .ok_or("missing 'k'")?
+        .as_u64()
+        .and_then(|x| u32::try_from(x).ok())
+        .ok_or("'k' must be a positive integer")?;
+    if k == 0 {
+        return Err("'k' must be >= 1".into());
+    }
+    Ok(k)
+}
+
+/// Execute a job on an interned graph. Deterministic given the spec (the
+/// whole point: results are byte-identical to direct library calls with
+/// the same seed, so the memo cache is sound).
+pub fn execute(g: &Graph, spec: &JobSpec) -> Result<JobOutput, String> {
+    match spec.kind {
+        JobKind::Partition => {
+            let cfg = spec.config();
+            let res = crate::coordinator::kaffpa(g, &cfg, None, None);
+            Ok(JobOutput::Partition {
+                edgecut: res.edge_cut,
+                balance: res.balance,
+                part: res.partition.into_assignment(),
+            })
+        }
+        JobKind::Separator => {
+            // the exact code path of api::node_separator (shared helper)
+            let sep = crate::api::node_separator_on(g, spec.k, spec.epsilon, spec.seed, spec.mode);
+            let weight = sep.weight(g);
+            Ok(JobOutput::Separator { separator: sep.separator, weight })
+        }
+        JobKind::Ordering => {
+            let rorder = crate::ordering::Reduction::DEFAULT_ORDER;
+            let order = if spec.fast_ordering {
+                crate::ordering::fast_node_ordering(g, &rorder)
+            } else {
+                crate::ordering::node_ordering(g, spec.mode, spec.seed, &rorder)
+            };
+            let fill = crate::ordering::fill_in::fill_in(g, &order);
+            Ok(JobOutput::Ordering { positions: crate::api::positions(&order), fill })
+        }
+        JobKind::EdgePartition => {
+            let (ep, idx) = crate::edgepartition::spac::edge_partitioning(
+                g,
+                spec.k,
+                spec.epsilon,
+                spec.mode,
+                spec.infinity,
+                spec.seed,
+            );
+            let vertex_cut = ep.vertex_cut(g, &idx);
+            let replication = ep.replication_factor(g, &idx);
+            Ok(JobOutput::EdgePartition { assignment: ep.assignment, vertex_cut, replication })
+        }
+        JobKind::ProcessMapping => {
+            let hspec = HierarchySpec::from_arrays(&spec.hierarchy, &spec.distances)?;
+            let mode_mapping = if spec.map_bisection {
+                crate::api::MapMode::Bisection
+            } else {
+                crate::api::MapMode::Multisection
+            };
+            // the exact code path of api::process_mapping (shared helper)
+            let out = crate::api::process_mapping_on(
+                g,
+                &hspec,
+                spec.mode,
+                spec.epsilon,
+                spec.seed,
+                mode_mapping,
+            );
+            Ok(JobOutput::Mapping { edgecut: out.edgecut, qap: out.qap, part: out.part })
+        }
+        JobKind::Stats => Err("stats jobs are answered by the service, not the pool".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn fig4_line(id: &str, k: u32, seed: u64) -> String {
+        format!(
+            r#"{{"id":"{id}","job":"partition","k":{k},"imbalance":0.1,"seed":{seed},"preconfiguration":"eco","xadj":[0,2,5,7,9,12],"adjncy":[1,4,0,2,4,1,3,2,4,0,1,3]}}"#
+        )
+    }
+
+    #[test]
+    fn parses_partition_request() {
+        let r = JobRequest::from_json(&fig4_line("a1", 2, 7)).unwrap();
+        assert_eq!(r.id, "a1");
+        assert_eq!(r.spec.kind, JobKind::Partition);
+        assert_eq!(r.spec.k, 2);
+        assert_eq!(r.spec.seed, 7);
+        assert_eq!(r.spec.mode, Mode::Eco);
+        assert!((r.spec.epsilon - 0.1).abs() < 1e-12);
+        match &r.graph {
+            GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => {
+                assert_eq!(xadj.len(), 6);
+                assert_eq!(adjncy.len(), 12);
+                assert!(vwgt.is_none() && adjwgt.is_none());
+            }
+            other => panic!("expected inline graph, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_roundtrips_through_to_json_line() {
+        let r = JobRequest::from_json(&fig4_line("x", 4, 3)).unwrap();
+        let r2 = JobRequest::from_json(&r.to_json_line()).unwrap();
+        assert_eq!(r2.spec.fingerprint(), r.spec.fingerprint());
+        assert_eq!(r2.id, "x");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(JobRequest::from_json("not json").is_err());
+        assert!(JobRequest::from_json(r#"{"job":"partition"}"#).is_err(), "missing id");
+        assert!(JobRequest::from_json(r#"{"id":"a","job":"frobnicate"}"#).is_err());
+        assert!(
+            JobRequest::from_json(r#"{"id":"a","job":"partition","xadj":[0],"adjncy":[]}"#)
+                .is_err(),
+            "missing k"
+        );
+        assert!(
+            JobRequest::from_json(r#"{"id":"a","job":"partition","k":0,"xadj":[0],"adjncy":[]}"#)
+                .is_err(),
+            "k = 0"
+        );
+        assert!(
+            JobRequest::from_json(r#"{"id":"a","job":"partition","k":2}"#).is_err(),
+            "no graph"
+        );
+        assert!(
+            JobRequest::from_json(
+                r#"{"id":"a","job":"partition","k":2,"imbalance":3,"xadj":[0],"adjncy":[]}"#
+            )
+            .is_err(),
+            "percent imbalance rejected"
+        );
+    }
+
+    #[test]
+    fn stored_graph_and_stats_requests() {
+        let r = JobRequest::from_json(
+            r#"{"id":"a","job":"separator","k":2,"graph":"deadbeef"}"#,
+        )
+        .unwrap();
+        assert!(matches!(&r.graph, GraphPayload::Stored(h) if h == "deadbeef"));
+        let r = JobRequest::from_json(r#"{"id":"s","job":"stats"}"#).unwrap();
+        assert!(matches!(r.graph, GraphPayload::None));
+        assert_eq!(r.spec.kind, JobKind::Stats);
+    }
+
+    #[test]
+    fn fingerprints_separate_what_matters() {
+        let a = JobRequest::from_json(&fig4_line("i", 2, 0)).unwrap().spec;
+        let b = JobRequest::from_json(&fig4_line("j", 2, 0)).unwrap().spec;
+        assert_eq!(a.fingerprint(), b.fingerprint(), "id must not affect the memo key");
+        let c = JobRequest::from_json(&fig4_line("i", 2, 1)).unwrap().spec;
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed must affect the memo key");
+        let d = JobRequest::from_json(&fig4_line("i", 4, 0)).unwrap().spec;
+        assert_ne!(a.fingerprint(), d.fingerprint(), "k must affect the memo key");
+    }
+
+    #[test]
+    fn execute_matches_direct_library_calls() {
+        let g = generators::grid2d(10, 10);
+        let spec = JobSpec { k: 4, seed: 3, ..JobSpec::defaults(JobKind::Partition) };
+        let out = execute(&g, &spec).unwrap();
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 3);
+        let direct = crate::coordinator::kaffpa(&g, &cfg, None, None);
+        match out {
+            JobOutput::Partition { edgecut, part, .. } => {
+                assert_eq!(edgecut, direct.edge_cut);
+                assert_eq!(part, direct.partition.into_assignment(), "byte-identical");
+            }
+            other => panic!("wrong output kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn execute_covers_every_queueable_kind() {
+        let g = generators::grid2d(8, 8);
+        for kind in [
+            JobKind::Partition,
+            JobKind::Separator,
+            JobKind::Ordering,
+            JobKind::EdgePartition,
+        ] {
+            let spec = JobSpec::defaults(kind);
+            let out = execute(&g, &spec).unwrap();
+            match (kind, &out) {
+                (JobKind::Partition, JobOutput::Partition { part, .. }) => {
+                    assert_eq!(part.len(), 64)
+                }
+                (JobKind::Separator, JobOutput::Separator { separator, .. }) => {
+                    assert!(!separator.is_empty())
+                }
+                (JobKind::Ordering, JobOutput::Ordering { positions, .. }) => {
+                    assert_eq!(positions.len(), 64)
+                }
+                (JobKind::EdgePartition, JobOutput::EdgePartition { assignment, .. }) => {
+                    assert_eq!(assignment.len(), g.m())
+                }
+                (k, o) => panic!("{k:?} produced {o:?}"),
+            }
+        }
+        let mut spec = JobSpec::defaults(JobKind::ProcessMapping);
+        spec.hierarchy = vec![2, 2];
+        spec.distances = vec![1, 10];
+        spec.k = 4;
+        let out = execute(&g, &spec).unwrap();
+        assert!(matches!(out, JobOutput::Mapping { qap, .. } if qap > 0));
+    }
+
+    #[test]
+    fn result_json_shapes() {
+        let ok = JobResult {
+            id: "r1".into(),
+            kind: Some(JobKind::Partition),
+            graph_hash: Some("abcd".into()),
+            cached: true,
+            seconds: 0.0,
+            outcome: Ok(Arc::new(JobOutput::Partition {
+                edgecut: 5,
+                balance: 1.0,
+                part: vec![0, 1],
+            })),
+        };
+        let line = ok.to_json_line();
+        assert!(line.contains(r#""ok":true"#));
+        assert!(line.contains(r#""cached":true"#));
+        assert!(line.contains(r#""edgecut":5"#));
+        assert!(line.contains(r#""graph":"abcd""#));
+        let err = JobResult::error("r2", Some(JobKind::Separator), "queue full");
+        let line = err.to_json_line();
+        assert!(line.contains(r#""ok":false"#));
+        assert!(line.contains(r#""error":"queue full""#));
+        assert!(super::super::json::parse(&line).is_ok());
+    }
+}

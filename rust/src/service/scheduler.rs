@@ -1,0 +1,430 @@
+//! The job scheduler: a bounded FIFO queue drained by a persistent worker
+//! pool (the service-lifetime analogue of [`crate::util::threads::Pool`],
+//! extended with backpressure, cancellation, and single-flight
+//! coalescing).
+//!
+//! Scheduling guarantees:
+//! - **Backpressure**: the queue is bounded; `submit` refuses with
+//!   [`SubmitError::QueueFull`] (TCP clients get an error response),
+//!   `submit_blocking` parks the submitter until a slot frees (the stdin
+//!   frontend simply stops reading its pipe).
+//! - **Single-flight**: a submission identical to a queued/running job
+//!   (same graph hash + job fingerprint) attaches to it instead of
+//!   queueing a duplicate; all attached requesters receive the one
+//!   result, marked `cached`.
+//! - **Cancellation**: a [`CancelHandle`] flags the job; a job cancelled
+//!   before a worker picks it up is resolved as `"cancelled"` for the
+//!   primary requester *and* everyone coalesced onto it (shared fate).
+//! - **Graceful shutdown**: workers drain the queue before exiting, so
+//!   every accepted job gets exactly one result.
+
+use super::protocol::{self, JobKind, JobRequest, JobResult};
+use super::stats::{ServiceStats, StatsCollector};
+use super::store::GraphStore;
+use crate::graph::Graph;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity (backpressure).
+    QueueFull,
+    /// The service is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full (backpressure)"),
+            SubmitError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Flags a submitted job for cancellation. Cancelling affects every
+/// requester coalesced onto the job (shared fate); jobs already picked up
+/// by a worker run to completion.
+#[derive(Clone, Debug)]
+pub struct CancelHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelHandle {
+    fn new() -> CancelHandle {
+        CancelHandle { flag: Arc::new(AtomicBool::new(false)) }
+    }
+
+    fn noop() -> CancelHandle {
+        CancelHandle::new()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+type MemoKey = super::store::ResultKey; // (graph content hash, job fingerprint)
+
+/// A requester attached to an in-flight job by single-flight coalescing.
+struct Waiter {
+    id: String,
+    kind: JobKind,
+    tx: Sender<JobResult>,
+    enqueued: Instant,
+}
+
+/// One queued job (the "primary" requester for its memo key).
+struct Task {
+    id: String,
+    spec: super::protocol::JobSpec,
+    graph: Arc<Graph>,
+    hash: String,
+    fingerprint: String,
+    /// Owns an entry in the inflight map (false for nondeterministic
+    /// jobs and for fresh requests queued past a cancelled twin) — only
+    /// a registered task may remove and resolve that entry.
+    registered: bool,
+    cancel: Arc<AtomicBool>,
+    tx: Sender<JobResult>,
+    enqueued: Instant,
+}
+
+struct Inflight {
+    cancel: Arc<AtomicBool>,
+    waiters: Vec<Waiter>,
+}
+
+struct QueueState {
+    q: VecDeque<Task>,
+    inflight: HashMap<MemoKey, Inflight>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    nonempty: Condvar,
+    space: Condvar,
+    capacity: usize,
+    store: Arc<GraphStore>,
+    stats: StatsCollector,
+}
+
+/// The queue + worker pool. Owned by [`super::Service`].
+pub(crate) struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub(crate) fn new(workers: usize, capacity: usize, store: Arc<GraphStore>) -> Scheduler {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                inflight: HashMap::new(),
+                shutdown: false,
+            }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+            store,
+            stats: StatsCollector::new(),
+        });
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Scheduler { shared, workers }
+    }
+
+    /// Accept a job; the result arrives on `tx` exactly once. `block`
+    /// selects the backpressure behaviour at a full queue: wait for a
+    /// slot, or refuse with [`SubmitError::QueueFull`].
+    pub(crate) fn submit(
+        &self,
+        req: JobRequest,
+        tx: Sender<JobResult>,
+        block: bool,
+    ) -> Result<CancelHandle, SubmitError> {
+        let shared = &self.shared;
+
+        // stats jobs are answered synchronously — never queued, and not
+        // counted in the job ledger (submitted must stay reconcilable
+        // with completed + failed + cancelled + rejected)
+        if req.spec.kind == JobKind::Stats {
+            let snap = self.snapshot();
+            let _ = tx.send(JobResult {
+                id: req.id,
+                kind: Some(JobKind::Stats),
+                graph_hash: None,
+                cached: false,
+                seconds: 0.0,
+                outcome: Ok(Arc::new(protocol::JobOutput::Stats(snap))),
+            });
+            return Ok(CancelHandle::noop());
+        }
+
+        // load shedding: a non-blocking submission with an expensive
+        // inline payload is bounced *before* parsing when the queue is
+        // already full — overload traffic must not cost parse work or
+        // churn the graph store. (Cheap hash-reference requests still get
+        // the memo/coalesce checks below even under a full queue.)
+        if !block && matches!(req.graph, super::protocol::GraphPayload::Inline { .. }) {
+            let st = shared.state.lock().unwrap();
+            if st.shutdown {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if st.q.len() >= shared.capacity {
+                drop(st);
+                shared.stats.rejected();
+                return Err(SubmitError::QueueFull);
+            }
+        }
+
+        // resolve the graph first (parse/validation errors are job-level
+        // errors, reported through the result channel like any other)
+        let (hash, graph) = match shared.store.intern(&req.graph) {
+            Ok(x) => x,
+            Err(e) => {
+                shared.stats.submitted();
+                shared.stats.finished(false, false, Duration::ZERO);
+                let mut res = JobResult::error(req.id, Some(req.spec.kind), e);
+                res.graph_hash = None;
+                let _ = tx.send(res);
+                return Ok(CancelHandle::noop());
+            }
+        };
+        let fingerprint = req.spec.fingerprint();
+        let key = (hash.clone(), fingerprint.clone());
+        // jobs with a wall-clock time limit are nondeterministic: never
+        // serve them from the memo or coalesce them onto each other
+        let cacheable = req.spec.cacheable();
+
+        let mut st = shared.state.lock().unwrap();
+        // count the memo miss only once per submission: blocking
+        // submitters re-run these checks on every wakeup, which must not
+        // inflate the miss counter (hits found on a retry still count)
+        let mut miss_counted = false;
+        loop {
+            if st.shutdown {
+                return Err(SubmitError::ShuttingDown);
+            }
+            // register in the inflight map unless an identical job is
+            // already there and doomed (cancelled before pickup): a fresh
+            // requester must not share its fate, and two entries cannot
+            // share one key — so the fresh task queues unregistered
+            let mut register_inflight = cacheable;
+            if cacheable {
+                if let Some(inflight) = st.inflight.get_mut(&key) {
+                    if inflight.cancel.load(Ordering::SeqCst) {
+                        register_inflight = false;
+                    } else {
+                        // single-flight: attach to the in-flight job
+                        let cancel = Arc::clone(&inflight.cancel);
+                        inflight.waiters.push(Waiter {
+                            id: req.id,
+                            kind: req.spec.kind,
+                            tx,
+                            enqueued: Instant::now(),
+                        });
+                        shared.stats.submitted();
+                        shared.stats.coalesced();
+                        return Ok(CancelHandle { flag: cancel });
+                    }
+                }
+                // exact-repeat: answer from the result memo
+                let memo = if miss_counted {
+                    let hit = shared.store.lookup_quiet(&key);
+                    if hit.is_some() {
+                        shared.store.note_hit();
+                    }
+                    hit
+                } else {
+                    miss_counted = true;
+                    shared.store.lookup(&key)
+                };
+                if let Some(out) = memo {
+                    shared.stats.submitted();
+                    shared.stats.finished(true, false, Duration::ZERO);
+                    let _ = tx.send(JobResult {
+                        id: req.id,
+                        kind: Some(req.spec.kind),
+                        graph_hash: Some(hash),
+                        cached: true,
+                        seconds: 0.0,
+                        outcome: Ok(out),
+                    });
+                    return Ok(CancelHandle::noop());
+                }
+            }
+            if st.q.len() >= shared.capacity {
+                if !block {
+                    shared.stats.rejected();
+                    return Err(SubmitError::QueueFull);
+                }
+                st = shared.space.wait(st).unwrap();
+                continue; // re-run every check: the world changed while parked
+            }
+            let handle = CancelHandle::new();
+            if register_inflight {
+                st.inflight.insert(
+                    key,
+                    Inflight { cancel: Arc::clone(&handle.flag), waiters: Vec::new() },
+                );
+            }
+            st.q.push_back(Task {
+                id: req.id,
+                spec: req.spec,
+                graph,
+                hash,
+                fingerprint,
+                registered: register_inflight,
+                cancel: Arc::clone(&handle.flag),
+                tx,
+                enqueued: Instant::now(),
+            });
+            shared.stats.submitted();
+            drop(st);
+            shared.nonempty.notify_one();
+            return Ok(handle);
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> ServiceStats {
+        let depth = self.shared.state.lock().unwrap().q.len();
+        self.shared.stats.snapshot(
+            self.workers.len(),
+            depth,
+            self.shared.capacity,
+            self.shared.store.counters(),
+        )
+    }
+
+    fn shutdown(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.nonempty.notify_all();
+        self.shared.space.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn remove_inflight(shared: &Shared, key: &MemoKey) -> Vec<Waiter> {
+    let mut st = shared.state.lock().unwrap();
+    st.inflight.remove(key).map(|i| i.waiters).unwrap_or_default()
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.q.pop_front() {
+                    shared.space.notify_one();
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.nonempty.wait(st).unwrap();
+            }
+        };
+        let key = (task.hash.clone(), task.fingerprint.clone());
+
+        if task.cancel.load(Ordering::SeqCst) {
+            let waiters =
+                if task.registered { remove_inflight(shared, &key) } else { Vec::new() };
+            shared.stats.finished(false, true, task.enqueued.elapsed());
+            let _ = task
+                .tx
+                .send(JobResult::error(task.id, Some(task.spec.kind), "cancelled"));
+            for w in waiters {
+                shared.stats.finished(false, true, w.enqueued.elapsed());
+                let _ = w.tx.send(JobResult::error(w.id, Some(w.kind), "cancelled"));
+            }
+            continue;
+        }
+
+        // double-check the memo after dequeueing (robustness: coalescing
+        // already prevents duplicate in-flight work in the common path);
+        // nondeterministic (time-limited) jobs always execute and are
+        // never memoized
+        let memoized =
+            if task.spec.cacheable() { shared.store.lookup_quiet(&key) } else { None };
+        let (outcome, cached, seconds) = match memoized {
+            Some(out) => (Ok(out), true, 0.0),
+            None => {
+                let t0 = Instant::now();
+                // contain panics from the partitioning pipeline: the
+                // worker must survive, and the inflight entry below must
+                // always be resolved — a leaked entry would hang every
+                // future identical request on a job nobody owns
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    protocol::execute(&task.graph, &task.spec)
+                }))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".into());
+                    Err(format!("job panicked: {msg}"))
+                });
+                match run {
+                    Ok(out) => {
+                        let out = Arc::new(out);
+                        if task.spec.cacheable() {
+                            shared.store.insert(&key, Arc::clone(&out));
+                        }
+                        (Ok(out), false, t0.elapsed().as_secs_f64())
+                    }
+                    Err(e) => (Err(e), false, t0.elapsed().as_secs_f64()),
+                }
+            }
+        };
+
+        let waiters = if task.registered { remove_inflight(shared, &key) } else { Vec::new() };
+        shared.stats.finished(outcome.is_ok(), false, task.enqueued.elapsed());
+        let _ = task.tx.send(JobResult {
+            id: task.id,
+            kind: Some(task.spec.kind),
+            graph_hash: Some(task.hash.clone()),
+            cached,
+            seconds,
+            outcome: outcome.clone(),
+        });
+        for w in waiters {
+            shared.stats.finished(outcome.is_ok(), false, w.enqueued.elapsed());
+            let _ = w.tx.send(JobResult {
+                id: w.id,
+                kind: Some(w.kind),
+                graph_hash: Some(task.hash.clone()),
+                cached: true,
+                seconds: 0.0,
+                outcome: outcome.clone(),
+            });
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Service observability: counters + a latency reservoir, snapshotted as
+//! [`ServiceStats`] (the payload of a `{"job":"stats"}` request and of the
+//! end-of-session report `kahip serve` prints to stderr).
+
+use super::json::Json;
+use super::store::StoreCounters;
+use crate::util::stat;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Completed-job latencies kept for percentile estimation (ring buffer).
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// A point-in-time snapshot of the service.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub queue_capacity: usize,
+    /// Accepted job submissions (queued, coalesced, or served from
+    /// cache). Stats introspection polls are not counted, so
+    /// `submitted = completed + failed + cancelled + in-flight`.
+    pub submitted: u64,
+    /// Jobs finished with an `Ok` outcome (cache hits included).
+    pub completed: u64,
+    /// Jobs finished with an `Err` outcome (invalid graphs, exec errors).
+    pub failed: u64,
+    /// Jobs cancelled while queued.
+    pub cancelled: u64,
+    /// Submissions refused because the queue was full (backpressure).
+    pub rejected: u64,
+    /// Result-memo hits at submit time.
+    pub cache_hits: u64,
+    /// Submissions coalesced onto an identical in-flight job.
+    pub coalesced: u64,
+    /// Result-memo misses (jobs that executed).
+    pub cache_misses: u64,
+    pub graphs_stored: usize,
+    pub graphs_parsed: u64,
+    pub graphs_reused: u64,
+    pub results_stored: usize,
+    /// Median end-to-end job latency (submit → result), seconds.
+    pub p50_latency: f64,
+    /// 99th-percentile end-to-end job latency, seconds.
+    pub p99_latency: f64,
+}
+
+impl ServiceStats {
+    /// Fraction of lookups answered without recomputation (memo hits plus
+    /// in-flight coalescing over all lookups).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = (self.cache_hits + self.coalesced) as f64;
+        let total = hits + self.cache_misses as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            hits / total
+        }
+    }
+
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        format!(
+            "service stats:\n\
+             \x20 workers {}  queue {}/{}\n\
+             \x20 submitted {}  completed {}  failed {}  cancelled {}  rejected {}\n\
+             \x20 cache: hits {}  coalesced {}  misses {}  hit-rate {:.3}\n\
+             \x20 store: graphs {} (parsed {}, reused {})  results {}\n\
+             \x20 latency: p50 {:.6}s  p99 {:.6}s\n",
+            self.workers,
+            self.queue_depth,
+            self.queue_capacity,
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.cancelled,
+            self.rejected,
+            self.cache_hits,
+            self.coalesced,
+            self.cache_misses,
+            self.cache_hit_rate(),
+            self.graphs_stored,
+            self.graphs_parsed,
+            self.graphs_reused,
+            self.results_stored,
+            self.p50_latency,
+            self.p99_latency,
+        )
+    }
+
+    /// JSON object embedded into the `stats` job response.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("workers".into(), Json::Int(self.workers as i64)),
+            ("queue_depth".into(), Json::Int(self.queue_depth as i64)),
+            ("queue_capacity".into(), Json::Int(self.queue_capacity as i64)),
+            ("submitted".into(), Json::Int(self.submitted as i64)),
+            ("completed".into(), Json::Int(self.completed as i64)),
+            ("failed".into(), Json::Int(self.failed as i64)),
+            ("cancelled".into(), Json::Int(self.cancelled as i64)),
+            ("rejected".into(), Json::Int(self.rejected as i64)),
+            ("cache_hits".into(), Json::Int(self.cache_hits as i64)),
+            ("coalesced".into(), Json::Int(self.coalesced as i64)),
+            ("cache_misses".into(), Json::Int(self.cache_misses as i64)),
+            ("cache_hit_rate".into(), Json::Float(self.cache_hit_rate())),
+            ("graphs_stored".into(), Json::Int(self.graphs_stored as i64)),
+            ("graphs_parsed".into(), Json::Int(self.graphs_parsed as i64)),
+            ("graphs_reused".into(), Json::Int(self.graphs_reused as i64)),
+            ("results_stored".into(), Json::Int(self.results_stored as i64)),
+            ("p50_latency".into(), Json::Float(self.p50_latency)),
+            ("p99_latency".into(), Json::Float(self.p99_latency)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    cancelled: u64,
+    rejected: u64,
+    coalesced: u64,
+    latencies: Vec<f64>,
+    next_slot: usize,
+}
+
+/// Shared mutable counters behind the snapshot.
+#[derive(Default)]
+pub(crate) struct StatsCollector {
+    inner: Mutex<Counters>,
+}
+
+impl StatsCollector {
+    pub fn new() -> StatsCollector {
+        StatsCollector::default()
+    }
+
+    pub fn submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn coalesced(&self) {
+        self.inner.lock().unwrap().coalesced += 1;
+    }
+
+    /// Record a finished job: outcome class + end-to-end latency.
+    pub fn finished(&self, ok: bool, cancelled: bool, latency: Duration) {
+        let mut c = self.inner.lock().unwrap();
+        if cancelled {
+            c.cancelled += 1;
+        } else if ok {
+            c.completed += 1;
+        } else {
+            c.failed += 1;
+        }
+        let secs = latency.as_secs_f64();
+        if c.latencies.len() < LATENCY_RESERVOIR {
+            c.latencies.push(secs);
+        } else {
+            let slot = c.next_slot;
+            c.latencies[slot] = secs;
+            c.next_slot = (slot + 1) % LATENCY_RESERVOIR;
+        }
+    }
+
+    /// Snapshot, merging in the queue view and the store counters. The
+    /// latency reservoir is copied out and sorted **outside** the lock,
+    /// once for both percentiles — a stats poll must not stall workers.
+    pub fn snapshot(
+        &self,
+        workers: usize,
+        queue_depth: usize,
+        queue_capacity: usize,
+        store: StoreCounters,
+    ) -> ServiceStats {
+        let (mut snap, mut latencies) = {
+            let c = self.inner.lock().unwrap();
+            let snap = ServiceStats {
+                workers,
+                queue_depth,
+                queue_capacity,
+                submitted: c.submitted,
+                completed: c.completed,
+                failed: c.failed,
+                cancelled: c.cancelled,
+                rejected: c.rejected,
+                coalesced: c.coalesced,
+                cache_hits: store.hits,
+                cache_misses: store.misses,
+                graphs_stored: store.graphs_stored,
+                graphs_parsed: store.graphs_parsed,
+                graphs_reused: store.graphs_reused,
+                results_stored: store.results_stored,
+                p50_latency: 0.0,
+                p99_latency: 0.0,
+            };
+            (snap, c.latencies.clone())
+        };
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        snap.p50_latency = stat::percentile_sorted(&latencies, 50.0);
+        snap.p99_latency = stat::percentile_sorted(&latencies, 99.0);
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_flow_into_snapshot() {
+        let s = StatsCollector::new();
+        s.submitted();
+        s.submitted();
+        s.rejected();
+        s.coalesced();
+        s.finished(true, false, Duration::from_millis(10));
+        s.finished(false, false, Duration::from_millis(20));
+        s.finished(false, true, Duration::from_millis(1));
+        let snap = s.snapshot(4, 2, 64, StoreCounters { hits: 3, misses: 1, ..Default::default() });
+        assert_eq!(snap.workers, 4);
+        assert_eq!(snap.queue_depth, 2);
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.coalesced, 1);
+        assert!(snap.p50_latency > 0.0);
+        assert!(snap.p99_latency >= snap.p50_latency);
+        assert!((snap.cache_hit_rate() - 0.8).abs() < 1e-12, "(3+1)/(3+1+1)");
+    }
+
+    #[test]
+    fn hit_rate_handles_zero_lookups() {
+        assert_eq!(ServiceStats::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn render_and_json_contain_key_fields() {
+        let snap = ServiceStats { cache_hits: 7, p50_latency: 0.5, ..Default::default() };
+        assert!(snap.render().contains("hits 7"));
+        let j = snap.to_json().render();
+        assert!(j.contains("\"cache_hits\":7"));
+        assert!(j.contains("\"p50_latency\":0.5"));
+        assert!(j.contains("\"cache_hit_rate\":1"));
+    }
+
+    #[test]
+    fn latency_reservoir_wraps() {
+        let s = StatsCollector::new();
+        for i in 0..(LATENCY_RESERVOIR + 10) {
+            s.finished(true, false, Duration::from_nanos(i as u64));
+        }
+        let c = s.inner.lock().unwrap();
+        assert_eq!(c.latencies.len(), LATENCY_RESERVOIR);
+        assert_eq!(c.next_slot, 10);
+    }
+}

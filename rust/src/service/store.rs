@@ -1,0 +1,419 @@
+//! Content-addressed graph interning and result memoization.
+//!
+//! Every inline CSR payload is hashed (128-bit FNV-1a over a canonical
+//! byte stream); repeated graphs are parsed and validated **once**, and
+//! clients may reference an interned graph by its hash instead of
+//! resending the arrays. On top of the graph table sits a
+//! `(graph_hash, job_fingerprint) → output` memo: exact-repeat requests
+//! are answered without touching the worker pool. Both tables evict FIFO
+//! under a configurable cap — eviction is always safe because keys are
+//! content hashes, never names.
+
+use super::protocol::{GraphPayload, JobOutput};
+use crate::graph::Graph;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Memo key: `(graph content hash, job fingerprint)`. Callers build it
+/// once and pass it by reference — lookups allocate nothing.
+pub type ResultKey = (String, String);
+
+/// Counters surfaced in [`super::stats::ServiceStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreCounters {
+    /// Result-memo hits (exact-repeat jobs answered from cache).
+    pub hits: u64,
+    /// Result-memo misses (jobs that had to execute).
+    pub misses: u64,
+    /// Graphs parsed + validated from inline payloads.
+    pub graphs_parsed: u64,
+    /// Inline payloads that matched an already-interned graph.
+    pub graphs_reused: u64,
+    /// Graphs currently interned.
+    pub graphs_stored: usize,
+    /// Results currently memoized.
+    pub results_stored: usize,
+}
+
+struct Inner {
+    graphs: HashMap<String, Arc<Graph>>,
+    graph_order: VecDeque<String>,
+    results: HashMap<ResultKey, Arc<JobOutput>>,
+    result_order: VecDeque<ResultKey>,
+    hits: u64,
+    misses: u64,
+    graphs_parsed: u64,
+    graphs_reused: u64,
+}
+
+/// Thread-safe content-addressed store shared by the scheduler and all
+/// frontends.
+pub struct GraphStore {
+    inner: Mutex<Inner>,
+    max_graphs: usize,
+    max_results: usize,
+}
+
+impl GraphStore {
+    pub fn new(max_graphs: usize, max_results: usize) -> GraphStore {
+        GraphStore {
+            inner: Mutex::new(Inner {
+                graphs: HashMap::new(),
+                graph_order: VecDeque::new(),
+                results: HashMap::new(),
+                result_order: VecDeque::new(),
+                hits: 0,
+                misses: 0,
+                graphs_parsed: 0,
+                graphs_reused: 0,
+            }),
+            max_graphs: max_graphs.max(1),
+            max_results: max_results.max(1),
+        }
+    }
+
+    /// Resolve a request's graph payload to `(content_hash, graph)`.
+    /// Inline payloads are parsed at most once per distinct content.
+    pub fn intern(&self, payload: &GraphPayload) -> Result<(String, Arc<Graph>), String> {
+        match payload {
+            GraphPayload::None => Err("this job kind requires a graph".into()),
+            GraphPayload::Stored(hash) => {
+                let inner = self.inner.lock().unwrap();
+                match inner.graphs.get(hash) {
+                    Some(g) => Ok((hash.clone(), Arc::clone(g))),
+                    None => Err(format!(
+                        "unknown graph hash '{hash}' (evicted or never submitted inline)"
+                    )),
+                }
+            }
+            GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => {
+                // canonicalize all-unit weight arrays to "absent" so the
+                // same graph hashes identically either way it is sent —
+                // but only when the length is right, so a wrong-length
+                // array still reaches from_csr's SizeMismatch validation
+                let n = xadj.len().saturating_sub(1);
+                let vw = vwgt
+                    .as_deref()
+                    .filter(|w| w.len() != n || w.iter().any(|&x| x != 1));
+                let aw = adjwgt
+                    .as_deref()
+                    .filter(|w| w.len() != adjncy.len() || w.iter().any(|&x| x != 1));
+                let hash = hash_csr(xadj, adjncy, vw, aw);
+                {
+                    let mut inner = self.inner.lock().unwrap();
+                    let interned = inner.graphs.get(&hash).map(Arc::clone);
+                    if let Some(g) = interned {
+                        inner.graphs_reused += 1;
+                        return Ok((hash, g));
+                    }
+                }
+                // parse outside the lock; a racing duplicate parse is
+                // harmless (last insert wins, both Arcs are equivalent)
+                let g = Graph::from_csr(
+                    xadj.clone(),
+                    adjncy.clone(),
+                    vw.map(|w| w.to_vec()),
+                    aw.map(|w| w.to_vec()),
+                )
+                .map_err(|e| e.to_string())?;
+                let g = Arc::new(g);
+                let mut inner = self.inner.lock().unwrap();
+                inner.graphs_parsed += 1;
+                if !inner.graphs.contains_key(&hash) {
+                    inner.graphs.insert(hash.clone(), Arc::clone(&g));
+                    inner.graph_order.push_back(hash.clone());
+                    while inner.graphs.len() > self.max_graphs {
+                        if let Some(old) = inner.graph_order.pop_front() {
+                            inner.graphs.remove(&old);
+                        }
+                    }
+                }
+                Ok((hash, g))
+            }
+        }
+    }
+
+    /// Memo lookup, counting a hit or miss.
+    pub fn lookup(&self, key: &ResultKey) -> Option<Arc<JobOutput>> {
+        let mut inner = self.inner.lock().unwrap();
+        let found = inner.results.get(key).map(Arc::clone);
+        match found {
+            Some(out) => {
+                inner.hits += 1;
+                Some(out)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Memo lookup without touching the hit/miss counters (used for the
+    /// worker's double-check after dequeueing and for submit retries that
+    /// already counted their miss).
+    pub fn lookup_quiet(&self, key: &ResultKey) -> Option<Arc<JobOutput>> {
+        let inner = self.inner.lock().unwrap();
+        inner.results.get(key).map(Arc::clone)
+    }
+
+    /// Count a hit found via [`GraphStore::lookup_quiet`] (a submit retry
+    /// that already recorded its miss must still record a late hit).
+    pub fn note_hit(&self) {
+        self.inner.lock().unwrap().hits += 1;
+    }
+
+    /// Memoize a finished job's output.
+    pub fn insert(&self, key: &ResultKey, out: Arc<JobOutput>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.results.insert(key.clone(), out).is_none() {
+            inner.result_order.push_back(key.clone());
+            while inner.results.len() > self.max_results {
+                if let Some(old) = inner.result_order.pop_front() {
+                    inner.results.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        let inner = self.inner.lock().unwrap();
+        StoreCounters {
+            hits: inner.hits,
+            misses: inner.misses,
+            graphs_parsed: inner.graphs_parsed,
+            graphs_reused: inner.graphs_reused,
+            graphs_stored: inner.graphs.len(),
+            results_stored: inner.results.len(),
+        }
+    }
+}
+
+/// 128-bit content hash of a CSR payload as 32 hex chars: two independent
+/// 64-bit FNV-1a passes with distinct offset bases over a canonical byte
+/// stream (array tags + lengths + little-endian elements).
+pub fn hash_csr(
+    xadj: &[u32],
+    adjncy: &[u32],
+    vwgt: Option<&[i64]>,
+    adjwgt: Option<&[i64]>,
+) -> String {
+    let mut a = Fnv::new(0xcbf29ce484222325);
+    let mut b = Fnv::new(0x9ae16a3b2f90404f);
+    for h in [&mut a, &mut b] {
+        h.tag(b'X');
+        h.u64(xadj.len() as u64);
+        for &x in xadj {
+            h.u32(x);
+        }
+        h.tag(b'A');
+        h.u64(adjncy.len() as u64);
+        for &x in adjncy {
+            h.u32(x);
+        }
+        h.tag(b'V');
+        match vwgt {
+            None => h.u64(0),
+            Some(w) => {
+                h.u64(1 + w.len() as u64);
+                for &x in w {
+                    h.i64(x);
+                }
+            }
+        }
+        h.tag(b'W');
+        match adjwgt {
+            None => h.u64(0),
+            Some(w) => {
+                h.u64(1 + w.len() as u64);
+                for &x in w {
+                    h.i64(x);
+                }
+            }
+        }
+    }
+    format!("{:016x}{:016x}", a.finish(), b.finish())
+}
+
+struct Fnv {
+    state: u64,
+}
+
+impl Fnv {
+    fn new(offset: u64) -> Fnv {
+        Fnv { state: offset }
+    }
+
+    #[inline]
+    fn byte(&mut self, b: u8) {
+        self.state ^= b as u64;
+        self.state = self.state.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    fn tag(&mut self, b: u8) {
+        self.byte(b);
+    }
+
+    #[inline]
+    fn u32(&mut self, x: u32) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    fn i64(&mut self, x: i64) {
+        self.u64(x as u64);
+    }
+
+    fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn payload(g: &Graph) -> GraphPayload {
+        GraphPayload::from_graph(g)
+    }
+
+    #[test]
+    fn intern_parses_once_per_content() {
+        let store = GraphStore::new(8, 8);
+        let g = generators::grid2d(6, 6);
+        let (h1, a1) = store.intern(&payload(&g)).unwrap();
+        let (h2, a2) = store.intern(&payload(&g)).unwrap();
+        assert_eq!(h1, h2);
+        assert!(Arc::ptr_eq(&a1, &a2), "second intern must reuse the parsed graph");
+        let c = store.counters();
+        assert_eq!(c.graphs_parsed, 1);
+        assert_eq!(c.graphs_reused, 1);
+        assert_eq!(c.graphs_stored, 1);
+    }
+
+    #[test]
+    fn stored_reference_resolves_and_unknown_fails() {
+        let store = GraphStore::new(8, 8);
+        let g = generators::grid2d(4, 4);
+        let (h, _) = store.intern(&payload(&g)).unwrap();
+        let (h2, g2) = store.intern(&GraphPayload::Stored(h.clone())).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(g2.n(), 16);
+        assert!(store.intern(&GraphPayload::Stored("ffff".into())).is_err());
+        assert!(store.intern(&GraphPayload::None).is_err());
+    }
+
+    #[test]
+    fn unit_weights_canonicalize() {
+        let g = generators::grid2d(3, 3);
+        let (xadj, adjncy, _, _) = g.raw();
+        let explicit = GraphPayload::Inline {
+            xadj: xadj.to_vec(),
+            adjncy: adjncy.to_vec(),
+            vwgt: Some(vec![1; g.n()]),
+            adjwgt: Some(vec![1; g.half_edges()]),
+        };
+        let absent = GraphPayload::Inline {
+            xadj: xadj.to_vec(),
+            adjncy: adjncy.to_vec(),
+            vwgt: None,
+            adjwgt: None,
+        };
+        let store = GraphStore::new(8, 8);
+        let (h1, _) = store.intern(&explicit).unwrap();
+        let (h2, _) = store.intern(&absent).unwrap();
+        assert_eq!(h1, h2, "unit weights must hash like absent weights");
+    }
+
+    #[test]
+    fn distinct_graphs_distinct_hashes() {
+        let a = generators::grid2d(5, 5);
+        let b = generators::grid2d(5, 6);
+        let (ax, aa, _, _) = a.raw();
+        let (bx, ba, _, _) = b.raw();
+        assert_ne!(hash_csr(ax, aa, None, None), hash_csr(bx, ba, None, None));
+        // same topology, different node weights
+        let w: Vec<i64> = (0..a.n() as i64).map(|i| i + 1).collect();
+        assert_ne!(
+            hash_csr(ax, aa, Some(&w), None),
+            hash_csr(ax, aa, None, None)
+        );
+    }
+
+    #[test]
+    fn wrong_length_unit_weights_are_rejected_not_canonicalized() {
+        let g = generators::grid2d(3, 3);
+        let (xadj, adjncy, _, _) = g.raw();
+        let store = GraphStore::new(8, 8);
+        let truncated = GraphPayload::Inline {
+            xadj: xadj.to_vec(),
+            adjncy: adjncy.to_vec(),
+            vwgt: Some(vec![1; g.n() - 1]), // all units, but wrong length
+            adjwgt: None,
+        };
+        let err = store.intern(&truncated).unwrap_err();
+        assert!(err.contains("size mismatch"), "{err}");
+    }
+
+    #[test]
+    fn invalid_inline_graph_is_an_error() {
+        let store = GraphStore::new(8, 8);
+        let bad = GraphPayload::Inline {
+            xadj: vec![0, 1, 1],
+            adjncy: vec![1], // missing backward edge
+            vwgt: None,
+            adjwgt: None,
+        };
+        let err = store.intern(&bad).unwrap_err();
+        assert!(err.contains("backward"), "{err}");
+        assert_eq!(store.counters().graphs_stored, 0);
+    }
+
+    fn key(h: &str, f: &str) -> ResultKey {
+        (h.to_string(), f.to_string())
+    }
+
+    #[test]
+    fn memo_hit_miss_and_eviction() {
+        let store = GraphStore::new(8, 2);
+        let out = Arc::new(JobOutput::Partition { edgecut: 1, balance: 1.0, part: vec![0, 1] });
+        assert!(store.lookup(&key("h1", "f1")).is_none());
+        store.insert(&key("h1", "f1"), Arc::clone(&out));
+        assert!(store.lookup(&key("h1", "f1")).is_some());
+        assert!(store.lookup_quiet(&key("h1", "f1")).is_some());
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses), (1, 1), "lookup_quiet must not count");
+        // cap = 2: inserting two more evicts h1/f1 FIFO
+        store.insert(&key("h1", "f2"), Arc::clone(&out));
+        store.insert(&key("h1", "f3"), Arc::clone(&out));
+        assert!(store.lookup_quiet(&key("h1", "f1")).is_none());
+        assert!(store.lookup_quiet(&key("h1", "f3")).is_some());
+        assert_eq!(store.counters().results_stored, 2);
+        // note_hit records late hits found via quiet lookups
+        store.note_hit();
+        assert_eq!(store.counters().hits, 2);
+    }
+
+    #[test]
+    fn graph_eviction_is_fifo() {
+        let store = GraphStore::new(2, 8);
+        let gs: Vec<Graph> =
+            (2..5).map(|i| generators::grid2d(i, 2)).collect();
+        let hashes: Vec<String> =
+            gs.iter().map(|g| store.intern(&payload(g)).unwrap().0).collect();
+        assert!(store.intern(&GraphPayload::Stored(hashes[0].clone())).is_err(), "evicted");
+        assert!(store.intern(&GraphPayload::Stored(hashes[2].clone())).is_ok());
+        assert_eq!(store.counters().graphs_stored, 2);
+    }
+}

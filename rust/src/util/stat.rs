@@ -40,6 +40,25 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Nearest-rank percentile with linear index rounding (`p` in 0..=100).
+/// `percentile(xs, 50)` agrees with [`median`] up to the even-length
+/// midpoint convention; the service reports p50/p99 job latencies with it.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] on already-sorted data — callers computing several
+/// percentiles of one sample sort once and index repeatedly.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0).clamp(0.0, 1.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
@@ -69,5 +88,18 @@ mod tests {
         assert_eq!(median(&[]), 0.0);
         assert_eq!(stddev(&[5.0]), 0.0);
         assert_eq!(median(&[3.0]), 3.0);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 50.0), 51.0, "nearest rank of 0.5*99");
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        // unsorted input is handled, and p clamps
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 200.0), 9.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 }

@@ -1,0 +1,169 @@
+//! Service acceptance test: ≥64 concurrent mixed jobs (k ∈ {2,4,8},
+//! partition + separator + ordering) through one [`kahip::service::Service`].
+//! Every result must be byte-identical to the corresponding direct
+//! library call with the same seed, and repeat-graph submissions must be
+//! served from the `GraphStore` cache (hit rate > 0 in `ServiceStats`).
+
+use kahip::graph::generators;
+use kahip::partition::config::{Config, Mode};
+use kahip::service::{
+    GraphPayload, JobKind, JobOutput, JobRequest, JobResult, JobSpec, Service, ServiceConfig,
+};
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+/// The mixed workload: 32 distinct jobs over two graphs, then the same
+/// 32 again (repeat-graph, repeat-job submissions) = 64 total.
+fn distinct_jobs() -> Vec<JobRequest> {
+    let grid = generators::grid2d(12, 12);
+    let mut rng = kahip::rng::Rng::new(7);
+    let ba = generators::barabasi_albert(150, 3, &mut rng);
+    let graphs = [("grid", grid), ("ba", ba)];
+    let mut jobs = Vec::new();
+    for (gi, (gname, g)) in graphs.iter().enumerate() {
+        for i in 0..16u64 {
+            let k = [2u32, 4, 8][(i % 3) as usize];
+            let (kind, k) = match i % 4 {
+                0 | 1 => (JobKind::Partition, k),
+                2 => (JobKind::Separator, 2),
+                _ => (JobKind::Ordering, 2),
+            };
+            jobs.push(JobRequest {
+                id: format!("{gname}-{i}"),
+                graph: GraphPayload::from_graph(g),
+                spec: JobSpec {
+                    k,
+                    seed: 100 * gi as u64 + i,
+                    mode: Mode::Eco,
+                    ..JobSpec::defaults(kind)
+                },
+            });
+        }
+    }
+    jobs
+}
+
+/// The direct library call a job must match byte-for-byte.
+fn expected(req: &JobRequest) -> JobOutput {
+    let g = match &req.graph {
+        GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => kahip::graph::Graph::from_csr(
+            xadj.clone(),
+            adjncy.clone(),
+            vwgt.clone(),
+            adjwgt.clone(),
+        )
+        .unwrap(),
+        _ => panic!("test jobs are inline"),
+    };
+    let s = &req.spec;
+    match s.kind {
+        JobKind::Partition => {
+            let cfg = Config::from_mode(s.mode, s.k, s.epsilon, s.seed);
+            let res = kahip::coordinator::kaffpa(&g, &cfg, None, None);
+            JobOutput::Partition {
+                edgecut: res.edge_cut,
+                balance: res.balance,
+                part: res.partition.into_assignment(),
+            }
+        }
+        JobKind::Separator => {
+            let (xadj, adjncy, _, _) = g.raw();
+            let out = kahip::api::node_separator(
+                xadj, adjncy, None, None, s.k, s.epsilon, true, s.seed, s.mode,
+            )
+            .unwrap();
+            JobOutput::Separator { separator: out.separator, weight: 0 }
+        }
+        JobKind::Ordering => {
+            let (xadj, adjncy, _, _) = g.raw();
+            let pos = kahip::api::reduced_nd(xadj, adjncy, true, s.seed, s.mode).unwrap();
+            JobOutput::Ordering { positions: pos, fill: 0 }
+        }
+        other => panic!("unexpected kind {other:?}"),
+    }
+}
+
+fn assert_matches_expected(res: &JobResult, want: &JobOutput) {
+    let got = res.outcome.as_ref().expect("job must succeed");
+    match (got.as_ref(), want) {
+        (
+            JobOutput::Partition { edgecut: ec, part: p, .. },
+            JobOutput::Partition { edgecut: wec, part: wp, .. },
+        ) => {
+            assert_eq!(ec, wec, "{}: edge cut", res.id);
+            assert_eq!(p, wp, "{}: partition must be byte-identical", res.id);
+        }
+        (
+            JobOutput::Separator { separator: s, .. },
+            JobOutput::Separator { separator: ws, .. },
+        ) => {
+            assert_eq!(s, ws, "{}: separator must be byte-identical", res.id);
+        }
+        (
+            JobOutput::Ordering { positions: p, .. },
+            JobOutput::Ordering { positions: wp, .. },
+        ) => {
+            assert_eq!(p, wp, "{}: ordering must be byte-identical", res.id);
+        }
+        (got, want) => panic!("{}: kind mismatch {got:?} vs {want:?}", res.id),
+    }
+}
+
+#[test]
+fn sixty_four_concurrent_mixed_jobs_byte_identical_with_cache_hits() {
+    let svc = Service::new(ServiceConfig {
+        workers: 4,
+        queue_capacity: 128,
+        ..Default::default()
+    });
+    let distinct = distinct_jobs();
+    assert_eq!(distinct.len(), 32);
+
+    // all 64 submissions go in before any result is drained, so up to
+    // `workers` jobs execute concurrently while the rest queue
+    let (tx, rx) = mpsc::channel();
+    for req in &distinct {
+        svc.submit(req.clone(), tx.clone()).expect("queue sized for the whole batch");
+    }
+    for (i, req) in distinct.iter().enumerate() {
+        let mut repeat = req.clone();
+        repeat.id = format!("repeat-{i}");
+        svc.submit(repeat, tx.clone()).expect("repeat submissions accepted");
+    }
+    drop(tx);
+    let results: Vec<JobResult> = rx.into_iter().collect();
+    assert_eq!(results.len(), 64, "every accepted job answers exactly once");
+
+    // byte-identical to direct calls, for originals and repeats alike
+    let by_id: HashMap<&str, &JobResult> =
+        results.iter().map(|r| (r.id.as_str(), r)).collect();
+    for (i, req) in distinct.iter().enumerate() {
+        let want = expected(req);
+        assert_matches_expected(by_id[req.id.as_str()], &want);
+        assert_matches_expected(by_id[format!("repeat-{i}").as_str()], &want);
+    }
+
+    // each repeat was submitted after its original, so it is served from
+    // the memo or coalesced onto the in-flight original — never recomputed
+    for i in 0..distinct.len() {
+        let r = by_id[format!("repeat-{i}").as_str()];
+        assert!(r.cached, "repeat-{i} must be served from the cache");
+    }
+
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, 64);
+    assert_eq!(stats.completed, 64);
+    assert_eq!(stats.failed + stats.cancelled + stats.rejected, 0);
+    assert_eq!(stats.cache_hits + stats.coalesced, 32, "all repeats hit");
+    assert!(stats.cache_hit_rate() > 0.0, "acceptance: hit rate > 0 in ServiceStats");
+    assert_eq!(stats.graphs_parsed, 2, "two distinct graphs parsed exactly once");
+    assert_eq!(stats.graphs_reused, 62, "every other submission reused the store");
+
+    // after the batch drains, an exact repeat is a guaranteed memo hit
+    let mut warm = distinct[0].clone();
+    warm.id = "warm".into();
+    let res = svc.run_sync(warm);
+    assert!(res.cached);
+    assert!(svc.stats().cache_hits >= 1);
+    assert!(svc.stats().p99_latency >= svc.stats().p50_latency);
+}
