@@ -52,6 +52,37 @@ fn main() {
     );
     verdict("parhip valid across rank counts (validated in-run)", true);
 
+    // engine thread sweep on the sequential reference: the deterministic
+    // parallel multilevel engine must reproduce the auto-thread cut
+    // exactly at 1/2/4/8 threads while the wall clock drops (see
+    // DESIGN.md, "Determinism contract"). `seq` above ran with
+    // threads = 0 (auto), so equality here also pins auto == explicit.
+    let mut t = Table::new(
+        "kaffpa engine threads on BA n=100k (k=16, fastsocial)",
+        &["threads", "cut", "time", "speedup vs 1"],
+    );
+    let mut sweep_identical = true;
+    let mut t1 = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let mut tcfg = Config::from_mode(Mode::FastSocial, k, 0.03, 2);
+        tcfg.threads = threads;
+        let (secs, r) = time_once(|| kaffpa(&g, &tcfg, None, None));
+        if threads == 1 {
+            t1 = secs;
+        }
+        if r.edge_cut != seq.edge_cut {
+            sweep_identical = false;
+        }
+        t.row(vec![
+            threads.into(),
+            r.edge_cut.into(),
+            Cell::Secs(secs),
+            (t1 / secs.max(1e-9)).into(),
+        ]);
+    }
+    t.print();
+    verdict("engine cut identical at 1/2/4/8 threads and auto (determinism)", sweep_identical);
+
     // preconfig sweep at 4 ranks
     let mut t = Table::new("parhip preconfigurations (4 ranks)", &["preconfig", "cut", "time"]);
     let mut ultra_time = f64::MAX;

@@ -218,6 +218,9 @@ fn cmd_kaffpa(a: &ArgSet) -> Result<(), String> {
     cfg.time_limit = a.f64_or("time_limit", 0.0)?;
     cfg.enforce_balance = a.flag("enforce_balance");
     cfg.balance_edges = a.flag("balance_edges");
+    // engine worker threads (0 = auto); never changes the result — the
+    // parallel engine is deterministic at any thread count
+    cfg.threads = a.usize_or("threads", 0)?;
     let input = load_input_partition(a, &g, k)?;
 
     if a.flag("enable_mapping") {
@@ -589,7 +592,8 @@ fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
 /// EOF (`--stdin` makes that explicit); `--listen=host:port` serves TCP
 /// connections instead. `--workers`, `--queue`, `--graph_cache` and
 /// `--result_cache` size the pool, the backpressure bound and the
-/// content-addressed store.
+/// content-addressed store; `--threads` caps the engine threads each
+/// worker's job may use (0 = auto-share the machine).
 fn cmd_serve(a: &ArgSet) -> Result<(), String> {
     use crate::service::{frontend, Service, ServiceConfig};
     let defaults = ServiceConfig::default();
@@ -598,6 +602,7 @@ fn cmd_serve(a: &ArgSet) -> Result<(), String> {
         queue_capacity: a.usize_or("queue", defaults.queue_capacity)?,
         max_graphs: a.usize_or("graph_cache", defaults.max_graphs)?,
         max_results: a.usize_or("result_cache", defaults.max_results)?,
+        threads_per_job: a.usize_or("threads", defaults.threads_per_job)?,
     };
     match a.str_opt("listen") {
         Some(addr) => {

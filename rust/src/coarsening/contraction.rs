@@ -20,6 +20,16 @@ pub struct CoarseLevel {
 /// Contract `g` according to `cluster`, where `cluster[v]` is an arbitrary
 /// cluster id (ids are renumbered densely in input order).
 pub fn contract(g: &Graph, cluster: &[NodeId]) -> CoarseLevel {
+    contract_par(g, cluster, 1)
+}
+
+/// [`contract`] with an explicit worker count. Determinism argument: the
+/// parallel path only changes *how* coarse edge mentions are gathered
+/// (fixed vertex-range chunks, per-chunk buffers fed to the builder in
+/// chunk order); `GraphBuilder::build` sorts all mentions and merges
+/// duplicates, so the built graph depends only on their multiset — chunk
+/// geometry and thread count cannot affect the result.
+pub fn contract_par(g: &Graph, cluster: &[NodeId], threads: usize) -> CoarseLevel {
     assert_eq!(cluster.len(), g.n());
     // renumber cluster ids densely (ids may exceed n; size by the max id)
     let max_id = cluster.iter().copied().max().unwrap_or(0) as usize;
@@ -41,12 +51,36 @@ pub fn contract(g: &Graph, cluster: &[NodeId]) -> CoarseLevel {
         vwgt[map[v as usize] as usize] += g.node_weight(v);
     }
     b.set_node_weights(vwgt);
-    for v in g.nodes() {
-        let cv = map[v as usize];
-        for (u, w) in g.neighbors_w(v) {
-            let cu = map[u as usize];
-            if cv < cu {
-                // each fine edge contributes once; GraphBuilder sums parallels
+    let threads = threads.max(1);
+    if threads == 1 {
+        for v in g.nodes() {
+            let cv = map[v as usize];
+            for (u, w) in g.neighbors_w(v) {
+                let cu = map[u as usize];
+                if cv < cu {
+                    // each fine edge contributes once; GraphBuilder sums parallels
+                    b.add_edge(cv, cu, w);
+                }
+            }
+        }
+    } else {
+        let ranges =
+            crate::util::threads::chunk_ranges(g.n(), g.n().div_ceil(threads * 4).max(1024));
+        let chunks = crate::util::threads::scoped_map(ranges.len(), threads, |ci| {
+            let mut edges: Vec<(u32, u32, i64)> = Vec::new();
+            for v in ranges[ci].clone() {
+                let cv = map[v];
+                for (u, w) in g.neighbors_w(v as u32) {
+                    let cu = map[u as usize];
+                    if cv < cu {
+                        edges.push((cv, cu, w));
+                    }
+                }
+            }
+            edges
+        });
+        for chunk in chunks {
+            for (cv, cu, w) in chunk {
                 b.add_edge(cv, cu, w);
             }
         }
@@ -107,6 +141,27 @@ mod tests {
         let lvl = contract(&g, &[7, 7, 3, 3]);
         assert_eq!(lvl.coarse.n(), 2);
         assert_eq!(lvl.map, vec![0, 0, 1, 1]);
+    }
+
+    /// Parallel contraction must produce the byte-identical coarse graph
+    /// at any worker count (the determinism contract).
+    #[test]
+    fn prop_parallel_contraction_byte_identical() {
+        crate::util::quickcheck::check(|case, rng| {
+            let n = 4 + case % 60;
+            let g = generators::random_weighted(n, 3 * n, 1, 5, rng);
+            let cl: Vec<u32> = (0..n as u32).map(|v| v / 3).collect();
+            let serial = contract(&g, &cl);
+            for t in [2usize, 4, 8] {
+                let par = contract_par(&g, &cl, t);
+                crate::prop_assert!(par.map == serial.map, "map diverged at threads={t}");
+                crate::prop_assert!(
+                    par.coarse.raw() == serial.coarse.raw(),
+                    "coarse CSR diverged at threads={t}"
+                );
+            }
+            Ok(())
+        });
     }
 
     /// Property: cut of a coarse partition == cut of its fine projection.

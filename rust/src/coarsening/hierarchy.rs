@@ -2,8 +2,8 @@
 //! coarsest graph is small enough for initial partitioning, or until
 //! contraction stalls (§2.1).
 
-use super::contraction::{contract, CoarseLevel};
-use super::lp_clustering::label_propagation;
+use super::contraction::{contract_par, CoarseLevel};
+use super::lp_clustering::label_propagation_par;
 use super::matching::heavy_edge_matching;
 use crate::graph::Graph;
 use crate::partition::config::{Coarsening, Config};
@@ -34,6 +34,7 @@ impl Hierarchy {
 pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy {
     let stop_n = (cfg.contraction_limit_factor * cfg.k as usize).max(8);
     let bound = cfg.bound(input.total_node_weight()).max(1);
+    let threads = cfg.num_threads();
     let mut levels: Vec<CoarseLevel> = Vec::new();
     let mut current = input.clone();
     while current.n() > stop_n {
@@ -47,10 +48,11 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
                 // size-constrained clustering: cap clusters well below the
                 // block bound so initial partitioning has slack.
                 let cluster_bound = (bound / 4).max(1);
-                label_propagation(&current, Some(cluster_bound), cfg.lp_iterations, rng)
+                let iters = cfg.lp_iterations;
+                label_propagation_par(&current, Some(cluster_bound), iters, rng, threads)
             }
         };
-        let mut lvl = contract(&current, &cluster);
+        let mut lvl = contract_par(&current, &cluster, threads);
         let mut shrink = lvl.coarse.n() as f64 / current.n() as f64;
         if shrink > cfg.min_shrink && cfg.coarsening == Coarsening::ClusterLp {
             // LP clustering stalls on graphs whose remaining structure has
@@ -58,7 +60,7 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
             // the level with matching before declaring a stall — the same
             // hybrid the social configurations of KaHIP use.
             let matched = heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng);
-            let m_lvl = contract(&current, &matched);
+            let m_lvl = contract_par(&current, &matched, threads);
             let m_shrink = m_lvl.coarse.n() as f64 / current.n() as f64;
             if m_shrink < shrink {
                 lvl = m_lvl;
@@ -68,10 +70,66 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
         if shrink > cfg.min_shrink {
             break; // contraction stalled
         }
+        debug_assert_eq!(check_invariants(&current, &lvl), Ok(()));
         current = lvl.coarse.clone();
         levels.push(lvl);
     }
     Hierarchy { levels }
+}
+
+/// Cross-phase invariants of one contraction level, used as debug
+/// assertions inside [`build_hierarchy`] and exercised directly by the
+/// determinism/invariant suites:
+///
+/// 1. total node weight is conserved exactly;
+/// 2. total edge weight obeys the conservation law
+///    `w(fine) = w(coarse) + w(intra-cluster fine edges)`;
+/// 3. the coarse CSR is a valid graph (symmetric, self-loop-free,
+///    no parallel edges) per [`Graph::validate`];
+/// 4. the map is a dense surjection onto `0..coarse.n()`.
+pub fn check_invariants(fine: &Graph, lvl: &CoarseLevel) -> Result<(), String> {
+    if lvl.map.len() != fine.n() {
+        return Err(format!("map len {} != fine n {}", lvl.map.len(), fine.n()));
+    }
+    if fine.total_node_weight() != lvl.coarse.total_node_weight() {
+        return Err(format!(
+            "node weight not conserved: fine {} coarse {}",
+            fine.total_node_weight(),
+            lvl.coarse.total_node_weight()
+        ));
+    }
+    // each fine edge {u,v} is intra-cluster iff map[u] == map[v]
+    let mut intra = 0i64;
+    for v in fine.nodes() {
+        for (u, w) in fine.neighbors_w(v) {
+            if v < u && lvl.map[v as usize] == lvl.map[u as usize] {
+                intra += w;
+            }
+        }
+    }
+    if fine.total_edge_weight() != lvl.coarse.total_edge_weight() + intra {
+        return Err(format!(
+            "edge weight law violated: fine {} != coarse {} + intra {}",
+            fine.total_edge_weight(),
+            lvl.coarse.total_edge_weight(),
+            intra
+        ));
+    }
+    if let Err(e) = lvl.coarse.validate() {
+        return Err(format!("coarse graph invalid: {e:?}"));
+    }
+    let cn = lvl.coarse.n() as u32;
+    let mut hit = vec![false; cn as usize];
+    for &c in &lvl.map {
+        if c >= cn {
+            return Err(format!("map entry {c} out of range (coarse n = {cn})"));
+        }
+        hit[c as usize] = true;
+    }
+    if !hit.iter().all(|&h| h) {
+        return Err("map is not surjective onto coarse nodes".into());
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -136,6 +194,34 @@ mod tests {
             hit[v as usize] = true;
         }
         assert!(hit.iter().all(|&h| h));
+    }
+
+    /// Satellite invariant suite: across every random graph family, every
+    /// hierarchy level conserves node weight exactly, obeys the edge
+    /// weight law `w(fine) = w(coarse) + w(intra)`, and yields a valid
+    /// (symmetric, self-loop-free) coarse CSR — checked by the same
+    /// [`check_invariants`] that runs as a debug assertion in the build.
+    #[test]
+    fn prop_every_level_passes_invariants_on_all_graph_families() {
+        let qc = crate::util::quickcheck::Config { cases: 28, seed: 0x1b9_0002 };
+        crate::util::quickcheck::forall(&qc, |case, rng| {
+            let g = crate::util::quickcheck::graphs::any(case, rng);
+            let mode = if case % 2 == 0 { Mode::Eco } else { Mode::EcoSocial };
+            let cfg = Config::from_mode(mode, 2 + (case % 3) as u32, 0.03, case as u64);
+            let h = build_hierarchy(&g, &cfg, rng);
+            let mut fine = &g;
+            for (i, lvl) in h.levels.iter().enumerate() {
+                if let Err(e) = check_invariants(fine, lvl) {
+                    return Err(format!("level {i}: {e}"));
+                }
+                fine = &lvl.coarse;
+            }
+            crate::prop_assert!(
+                h.coarsest(&g).total_node_weight() == g.total_node_weight(),
+                "coarsest node weight drifted"
+            );
+            Ok(())
+        });
     }
 
     #[test]

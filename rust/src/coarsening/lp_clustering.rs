@@ -25,60 +25,228 @@ pub fn label_propagation(
     iterations: usize,
     rng: &mut Rng,
 ) -> Vec<NodeId> {
+    label_propagation_par(g, upper_bound, iterations, rng, 1)
+}
+
+/// Permutation block size for speculative parallel rounds. A fixed
+/// constant (never derived from the thread count) so block boundaries —
+/// and therefore staleness outcomes — are identical at every worker
+/// count.
+const SPEC_BLOCK: usize = 512;
+/// Snapshot candidate-list cap: hubs touching more clusters than this
+/// fall back to the exact serial recomputation at apply time.
+const MAX_CANDS: usize = 64;
+
+/// [`label_propagation`] with an explicit worker count.
+///
+/// Determinism design (see DESIGN.md "Determinism contract"): the RNG
+/// draws one permutation per iteration exactly as the serial code does.
+/// The permutation is processed in fixed [`SPEC_BLOCK`]-sized blocks:
+/// each block's nodes get their neighbor-cluster connectivities
+/// *snapshotted* in parallel, then moves are applied **serially in
+/// permutation order** against live cluster weights. A snapshot is used
+/// only if none of the node's neighbors moved earlier within the same
+/// block (tracked by per-node move stamps); otherwise the connectivities
+/// are recomputed serially — the exact serial path. Since snapshots hold
+/// pure functions of neighbor cluster assignments and feasibility is
+/// always evaluated live, every move decision equals the serial one, so
+/// any thread count yields the byte-identical clustering. Iterations
+/// where most nodes are still moving (including the first) run fully
+/// serial — the gate reads the previous iteration's move count, itself a
+/// thread-count-independent value.
+pub fn label_propagation_par(
+    g: &Graph,
+    upper_bound: Option<i64>,
+    iterations: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> Vec<NodeId> {
     let n = g.n();
     let bound = upper_bound.unwrap_or(i64::MAX);
+    let threads = threads.max(1);
     let mut cluster: Vec<u32> = (0..n as u32).collect();
     let mut cluster_weight: Vec<i64> = g.nodes().map(|v| g.node_weight(v)).collect();
     // scratch: connection strength per candidate cluster, sparse reset
     let mut conn: Vec<i64> = vec![0; n];
     let mut touched: Vec<u32> = Vec::new();
+    // stamp[v] = id of the speculative block in which v last moved
+    let mut stamp: Vec<u32> = if threads > 1 { vec![0; n] } else { Vec::new() };
+    let mut block_id: u32 = 0;
+    let mut prev_moved = n; // forces the first iteration serial
     for _ in 0..iterations {
         let order = rng.permutation(n);
         let mut moved = 0usize;
-        for &v in &order {
-            let vc = cluster[v as usize];
-            let vw = g.node_weight(v);
-            if g.degree(v) == 0 {
-                continue;
-            }
-            touched.clear();
-            for (u, w) in g.neighbors_w(v) {
-                let c = cluster[u as usize];
-                if conn[c as usize] == 0 {
-                    touched.push(c);
-                }
-                conn[c as usize] += w;
-            }
-            // strongest feasible cluster; ties break toward keeping vc,
-            // then randomly among the touched order (already random-ish
-            // through the permutation).
-            let mut best = vc;
-            let mut best_conn = conn[vc as usize];
-            for &c in &touched {
-                if c == vc {
-                    continue;
-                }
-                let feasible = cluster_weight[c as usize] + vw <= bound;
-                if feasible && conn[c as usize] > best_conn {
-                    best = c;
-                    best_conn = conn[c as usize];
+        let speculate = threads > 1 && prev_moved * 8 < n;
+        if !speculate {
+            for &v in &order {
+                let did = serial_step(
+                    g,
+                    bound,
+                    &mut cluster,
+                    &mut cluster_weight,
+                    &mut conn,
+                    &mut touched,
+                    v,
+                );
+                if did {
+                    moved += 1;
                 }
             }
-            for &c in &touched {
-                conn[c as usize] = 0;
-            }
-            if best != vc {
-                cluster_weight[vc as usize] -= vw;
-                cluster_weight[best as usize] += vw;
-                cluster[v as usize] = best;
-                moved += 1;
+        } else {
+            for block in order.chunks(SPEC_BLOCK) {
+                block_id += 1;
+                let snaps = snapshot_block(g, &cluster, block, threads);
+                for (i, &v) in block.iter().enumerate() {
+                    let fresh = match &snaps[i] {
+                        Some(cands)
+                            if !g.neighbors(v).iter().any(|&u| stamp[u as usize] == block_id) =>
+                        {
+                            Some(cands)
+                        }
+                        _ => None,
+                    };
+                    let did = if let Some(cands) = fresh {
+                        apply_snapshot(g, bound, &mut cluster, &mut cluster_weight, cands, v)
+                    } else {
+                        serial_step(
+                            g,
+                            bound,
+                            &mut cluster,
+                            &mut cluster_weight,
+                            &mut conn,
+                            &mut touched,
+                            v,
+                        )
+                    };
+                    if did {
+                        stamp[v as usize] = block_id;
+                        moved += 1;
+                    }
+                }
             }
         }
+        prev_moved = moved;
         if moved == 0 {
             break;
         }
     }
     cluster
+}
+
+/// One serial LP move decision for `v` — the reference semantics both the
+/// plain serial pass and the speculative fallback path share verbatim.
+fn serial_step(
+    g: &Graph,
+    bound: i64,
+    cluster: &mut [u32],
+    cluster_weight: &mut [i64],
+    conn: &mut [i64],
+    touched: &mut Vec<u32>,
+    v: NodeId,
+) -> bool {
+    if g.degree(v) == 0 {
+        return false;
+    }
+    let vc = cluster[v as usize];
+    let vw = g.node_weight(v);
+    touched.clear();
+    for (u, w) in g.neighbors_w(v) {
+        let c = cluster[u as usize];
+        if conn[c as usize] == 0 {
+            touched.push(c);
+        }
+        conn[c as usize] += w;
+    }
+    // strongest feasible cluster; ties break toward keeping vc,
+    // then randomly among the touched order (already random-ish
+    // through the permutation).
+    let mut best = vc;
+    let mut best_conn = conn[vc as usize];
+    for &c in touched.iter() {
+        if c == vc {
+            continue;
+        }
+        let feasible = cluster_weight[c as usize] + vw <= bound;
+        if feasible && conn[c as usize] > best_conn {
+            best = c;
+            best_conn = conn[c as usize];
+        }
+    }
+    for &c in touched.iter() {
+        conn[c as usize] = 0;
+    }
+    if best != vc {
+        cluster_weight[vc as usize] -= vw;
+        cluster_weight[best as usize] += vw;
+        cluster[v as usize] = best;
+        true
+    } else {
+        false
+    }
+}
+
+/// Parallel connectivity snapshots for one block: per node, the candidate
+/// clusters in CSR first-touch order with their total edge weights —
+/// exactly what [`serial_step`]'s `touched`/`conn` pair would hold. `None`
+/// marks a hub whose candidate list outgrew [`MAX_CANDS`] (recomputed
+/// serially at apply time).
+fn snapshot_block(
+    g: &Graph,
+    cluster: &[u32],
+    block: &[NodeId],
+    threads: usize,
+) -> Vec<Option<Vec<(u32, i64)>>> {
+    crate::util::threads::scoped_map(block.len(), threads, |i| {
+        let v = block[i];
+        let mut cands: Vec<(u32, i64)> = Vec::new();
+        for (u, w) in g.neighbors_w(v) {
+            let c = cluster[u as usize];
+            if let Some(pos) = cands.iter().position(|e| e.0 == c) {
+                cands[pos].1 += w;
+            } else if cands.len() == MAX_CANDS {
+                return None;
+            } else {
+                cands.push((c, w));
+            }
+        }
+        Some(cands)
+    })
+}
+
+/// Replay a fresh snapshot through the serial decision rule: same
+/// first-touch candidate order, same strict-`>` tie-break toward keeping
+/// the current cluster, and feasibility evaluated against **live**
+/// cluster weights.
+fn apply_snapshot(
+    g: &Graph,
+    bound: i64,
+    cluster: &mut [u32],
+    cluster_weight: &mut [i64],
+    cands: &[(u32, i64)],
+    v: NodeId,
+) -> bool {
+    let vc = cluster[v as usize];
+    let vw = g.node_weight(v);
+    let mut best = vc;
+    let mut best_conn = cands.iter().find(|&&(c, _)| c == vc).map(|&(_, w)| w).unwrap_or(0);
+    for &(c, w) in cands {
+        if c == vc {
+            continue;
+        }
+        let feasible = cluster_weight[c as usize] + vw <= bound;
+        if feasible && w > best_conn {
+            best = c;
+            best_conn = w;
+        }
+    }
+    if best != vc {
+        cluster_weight[vc as usize] -= vw;
+        cluster_weight[best as usize] += vw;
+        cluster[v as usize] = best;
+        true
+    } else {
+        false
+    }
 }
 
 /// Cluster sizes (by total node weight), keyed by cluster id.
@@ -174,6 +342,27 @@ mod tests {
         let mut rng = Rng::new(4);
         let cl = label_propagation(&g, None, 5, &mut rng);
         assert_eq!(num_clusters(&cl), 5);
+    }
+
+    /// The determinism contract at module granularity: the speculative
+    /// parallel path must equal the serial path byte-for-byte at every
+    /// worker count, bounded and unbounded alike.
+    #[test]
+    fn prop_parallel_matches_serial_exactly() {
+        let cfg = crate::util::quickcheck::Config { cases: 24, seed: 0x1b9_0006 };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let n = 40 + case * 60;
+            let g = generators::barabasi_albert(n, 3, rng);
+            let bound =
+                if case % 2 == 0 { None } else { Some((g.total_node_weight() / 6).max(3)) };
+            let seed = 1000 + case as u64;
+            let serial = label_propagation_par(&g, bound, 8, &mut Rng::new(seed), 1);
+            for t in [2usize, 4, 8] {
+                let par = label_propagation_par(&g, bound, 8, &mut Rng::new(seed), t);
+                crate::prop_assert!(par == serial, "threads={t} diverged from serial");
+            }
+            Ok(())
+        });
     }
 
     #[test]

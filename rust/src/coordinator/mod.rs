@@ -51,8 +51,20 @@ pub fn multilevel(
     };
     for i in (0..hierarchy.levels.len()).rev() {
         let fine_g = if i == 0 { g } else { &hierarchy.levels[i - 1].coarse };
+        // cut consistency across uncoarsening (§2.1): projecting a coarse
+        // partition onto the finer graph must preserve the cut exactly —
+        // refinement can then only improve it from there.
+        #[cfg(debug_assertions)]
+        let cut_before = metrics::edge_cut(&hierarchy.levels[i].coarse, &p);
         p = p.project(fine_g, &hierarchy.levels[i].map);
-        refinement::refine(fine_g, &mut p, cfg, rng);
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            metrics::edge_cut(fine_g, &p),
+            cut_before,
+            "projection changed the cut at level {i}"
+        );
+        let gained = refinement::refine(fine_g, &mut p, cfg, rng);
+        debug_assert!(gained >= 0, "refinement must never worsen the cut (level {i})");
     }
     for _ in 0..cfg.global_cycles {
         if cfg.use_fcycle {

@@ -140,6 +140,14 @@ pub struct Config {
     pub time_limit: f64,
     pub enforce_balance: bool,
     pub balance_edges: bool,
+
+    /// Worker threads for the parallel multilevel engine. `0` = auto
+    /// (`KAHIP_THREADS` env var, else available parallelism); `1` = the
+    /// exact serial path. Deliberately **excluded** from
+    /// [`Config::fingerprint`]: the engine guarantees byte-identical
+    /// output at any thread count (enforced by `tests/determinism.rs`),
+    /// so the thread count cannot change a memoized result.
+    pub threads: usize,
 }
 
 impl Config {
@@ -173,6 +181,7 @@ impl Config {
             time_limit: 0.0,
             enforce_balance: false,
             balance_edges: false,
+            threads: 0,
         };
         match mode {
             Mode::Fast | Mode::FastSocial => {
@@ -205,12 +214,24 @@ impl Config {
         crate::util::block_weight_bound(total_weight, self.k, self.epsilon)
     }
 
-    /// A stable text rendering of **every** knob. Two configs with equal
-    /// fingerprints drive `kaffpa` to byte-identical results on the same
-    /// graph, so the service memoizes results under this key. The
-    /// exhaustive destructuring (no `..` rest pattern) makes adding a
-    /// `Config` field a compile error here — a new knob can never be
-    /// silently missing from the memo key.
+    /// Resolve [`Config::threads`] to a concrete worker count: a nonzero
+    /// field wins, otherwise `KAHIP_THREADS` / available parallelism via
+    /// [`crate::util::threads::available_threads`].
+    pub fn num_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::util::threads::available_threads()
+        }
+    }
+
+    /// A stable text rendering of every result-affecting knob. Two
+    /// configs with equal fingerprints drive `kaffpa` to byte-identical
+    /// results on the same graph, so the service memoizes results under
+    /// this key. The exhaustive destructuring (no `..` rest pattern)
+    /// makes adding a `Config` field a compile error here — a new knob
+    /// can never be silently missing from the memo key; an exclusion
+    /// (today only `threads`) must be spelled out and justified.
     pub fn fingerprint(&self) -> String {
         let Config {
             mode,
@@ -238,6 +259,12 @@ impl Config {
             time_limit,
             enforce_balance,
             balance_edges,
+            // `threads` is the one deliberate exclusion: the parallel
+            // engine is deterministic (byte-identical output at any
+            // thread count — see tests/determinism.rs and DESIGN.md), so
+            // including it would only fragment the service memo without
+            // ever distinguishing results.
+            threads: _,
         } = self;
         format!(
             "mode={}|k={k}|eps={epsilon}|seed={seed}|coars={coarsening:?}|\
@@ -313,6 +340,29 @@ mod tests {
         let mut tweaked = base.clone();
         tweaked.kway_fm_rounds += 1;
         assert_ne!(base.fingerprint(), tweaked.fingerprint());
+    }
+
+    /// The one deliberate fingerprint exclusion: `threads` must never
+    /// enter the memo key. Legal only because the engine is
+    /// deterministic at any thread count (tests/determinism.rs).
+    #[test]
+    fn fingerprint_ignores_threads() {
+        let base = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        for t in [1usize, 2, 4, 8, 64] {
+            let mut c = base.clone();
+            c.threads = t;
+            assert_eq!(base.fingerprint(), c.fingerprint(), "threads={t}");
+        }
+        assert!(!base.fingerprint().contains("threads"));
+    }
+
+    #[test]
+    fn num_threads_resolution() {
+        let mut c = Config::from_mode(Mode::Eco, 4, 0.03, 0);
+        assert_eq!(c.threads, 0, "every mode defaults to auto");
+        assert!(c.num_threads() >= 1, "auto resolves to something usable");
+        c.threads = 3;
+        assert_eq!(c.num_threads(), 3, "explicit knob wins");
     }
 
     #[test]
@@ -394,6 +444,7 @@ mod tests {
             assert!(!c.balance_edges, "{mode:?}");
             assert_eq!(c.time_limit, 0.0, "{mode:?}");
             assert!(!c.use_spectral_initial, "{mode:?}");
+            assert_eq!(c.threads, 0, "{mode:?}: threads defaults to auto");
             // the balance bound is positive and >= ceil-average
             assert!(c.bound(600) >= 100, "{mode:?}");
         }

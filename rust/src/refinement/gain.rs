@@ -66,27 +66,8 @@ impl GainScratch {
         let own = p.block_of(v);
         let vw = g.node_weight(v);
         self.with_conns(g, p, v, |own_conn, touched, conn| {
-            let mut best: Option<(BlockId, i64)> = None;
-            for &b in touched {
-                if b == own {
-                    continue;
-                }
-                if p.block_weight(b) + vw > bounds[b as usize] {
-                    continue;
-                }
-                let gain = conn[b as usize] - own_conn;
-                match best {
-                    None => best = Some((b, gain)),
-                    Some((bb, bg)) => {
-                        if gain > bg
-                            || (gain == bg && p.block_weight(b) < p.block_weight(bb))
-                        {
-                            best = Some((b, gain));
-                        }
-                    }
-                }
-            }
-            best
+            let cands = touched.iter().map(|&b| (b, conn[b as usize]));
+            select_best(p, own, vw, own_conn, cands, bounds)
         })
     }
 
@@ -94,6 +75,42 @@ impl GainScratch {
     pub fn gain_to(&mut self, g: &Graph, p: &Partition, v: NodeId, to: BlockId) -> i64 {
         self.with_conns(g, p, v, |own_conn, _, conn| conn[to as usize] - own_conn)
     }
+}
+
+/// The move-selection rule shared by every gain-driven path — the serial
+/// [`GainScratch::best_move`] and the parallel snapshot-replay in
+/// `label_prop_refine` both funnel through this one implementation so
+/// their tie-breaking can never drift apart (the determinism contract
+/// depends on that). `cands` yields `(block, connectivity)` pairs in
+/// first-touch order; feasibility and the lighter-block tie-break read
+/// **live** block weights from `p`.
+pub fn select_best(
+    p: &Partition,
+    own: BlockId,
+    vw: i64,
+    own_conn: i64,
+    cands: impl Iterator<Item = (BlockId, i64)>,
+    bounds: &[i64],
+) -> Option<(BlockId, i64)> {
+    let mut best: Option<(BlockId, i64)> = None;
+    for (b, c) in cands {
+        if b == own {
+            continue;
+        }
+        if p.block_weight(b) + vw > bounds[b as usize] {
+            continue;
+        }
+        let gain = c - own_conn;
+        match best {
+            None => best = Some((b, gain)),
+            Some((bb, bg)) => {
+                if gain > bg || (gain == bg && p.block_weight(b) < p.block_weight(bb)) {
+                    best = Some((b, gain));
+                }
+            }
+        }
+    }
+    best
 }
 
 /// Is `v` a boundary node (has a neighbor in another block)?

@@ -25,9 +25,22 @@ pub fn refine(
     unsuccessful_limit: usize,
     rng: &mut Rng,
 ) -> i64 {
+    refine_par(g, p, bounds, unsuccessful_limit, rng, 1)
+}
+
+/// [`refine`] with an explicit worker count: the PQ initialization gains
+/// are recomputed in parallel between the serial FM passes.
+pub fn refine_par(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> i64 {
     let mut total = 0;
     loop {
-        let gained = one_round(g, p, bounds, unsuccessful_limit, rng);
+        let gained = one_round_par(g, p, bounds, unsuccessful_limit, rng, threads);
         total += gained;
         if gained <= 0 {
             break;
@@ -44,6 +57,25 @@ pub fn one_round(
     unsuccessful_limit: usize,
     rng: &mut Rng,
 ) -> i64 {
+    one_round_par(g, p, bounds, unsuccessful_limit, rng, 1)
+}
+
+/// [`one_round`] with an explicit worker count. Only the priority-queue
+/// initialization is parallel: the partition is not mutated during it, so
+/// every `best_move` is a pure read, and the computed gains are inserted
+/// serially in permutation order — byte-identical to the serial round.
+/// (`best_move(v).is_some()` already implies `is_boundary(v)`: an
+/// interior node touches only its own block and yields no candidate.)
+/// The hill-climbing move loop itself stays serial — its journal/rollback
+/// semantics are inherently sequential.
+pub fn one_round_par(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> i64 {
     let n = g.n();
     let mut scratch = GainScratch::new(p.k());
     let mut pq = AddressablePQ::new(n);
@@ -51,9 +83,24 @@ pub fn one_round(
 
     // random insertion order over boundary nodes (§2.1)
     let order = rng.permutation(n);
-    for &v in &order {
-        if is_boundary(g, p, v) {
-            if let Some((_, gain)) = scratch.best_move(g, p, v, bounds) {
+    if threads.max(1) == 1 {
+        for &v in &order {
+            if is_boundary(g, p, v) {
+                if let Some((_, gain)) = scratch.best_move(g, p, v, bounds) {
+                    pq.insert(v, gain);
+                }
+            }
+        }
+    } else {
+        let shared: &Partition = p;
+        let gains = crate::util::threads::scoped_map_with(
+            order.len(),
+            threads,
+            || GainScratch::new(shared.k()),
+            |s, i| s.best_move(g, shared, order[i], bounds).map(|(_, gain)| gain),
+        );
+        for (i, &v) in order.iter().enumerate() {
+            if let Some(gain) = gains[i] {
                 pq.insert(v, gain);
             }
         }
@@ -127,6 +174,32 @@ mod tests {
         assert_eq!(before - after, gain);
         assert!(after < before / 2, "FM should fix stripes: {before} -> {after}");
         assert!(p.is_feasible(&g, 0.03));
+    }
+
+    /// Determinism contract: parallel PQ initialization must leave every
+    /// FM round byte-identical to the serial round.
+    #[test]
+    fn prop_parallel_matches_serial_exactly() {
+        let cfg = crate::util::quickcheck::Config { cases: 24, seed: 0x1b9_0008 };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let n = 30 + case * 10;
+            let g = generators::random_weighted(n, 3 * n, 1, 3, rng);
+            let k = 2 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let bound =
+                crate::util::block_weight_bound(g.total_node_weight(), k, 0.10).max(1);
+            let bounds = vec![bound; k as usize];
+            let seed = 700 + case as u64;
+            let mut serial = crate::partition::Partition::from_assignment(&g, k, part.clone());
+            let sgain = refine_par(&g, &mut serial, &bounds, 30, &mut Rng::new(seed), 1);
+            for t in [2usize, 4, 8] {
+                let mut par = crate::partition::Partition::from_assignment(&g, k, part.clone());
+                let pgain = refine_par(&g, &mut par, &bounds, 30, &mut Rng::new(seed), t);
+                crate::prop_assert!(pgain == sgain, "gain diverged at threads={t}");
+                crate::prop_assert!(par == serial, "partition diverged at threads={t}");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! no rollback, so we only perform strictly positive-gain moves (plus
 //! zero-gain moves toward lighter blocks to nudge balance).
 
-use super::gain::GainScratch;
+use super::gain::{select_best, GainScratch};
 use crate::graph::Graph;
 use crate::partition::Partition;
 use crate::rng::Rng;
@@ -18,29 +18,128 @@ pub fn refine(
     iterations: usize,
     rng: &mut Rng,
 ) -> i64 {
+    refine_par(g, p, bounds, iterations, rng, 1)
+}
+
+/// Fixed permutation block size for speculative parallel rounds — a
+/// constant (never thread-derived) so staleness outcomes are identical at
+/// every worker count.
+const SPEC_BLOCK: usize = 512;
+/// Candidate-list cap for snapshots; nodes touching more blocks fall back
+/// to the exact serial recomputation.
+const MAX_CANDS: usize = 64;
+
+/// [`refine`] with an explicit worker count, following the same
+/// speculative design as `coarsening::lp_clustering`: gains are
+/// snapshotted in parallel per fixed permutation block, moves are applied
+/// serially in permutation order through [`select_best`] against live
+/// block weights, and a snapshot is discarded (exact serial recompute)
+/// whenever a neighbor moved earlier in the same block. The result is
+/// byte-identical to the serial path at any thread count.
+pub fn refine_par(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    iterations: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> i64 {
     let n = g.n();
+    let threads = threads.max(1);
     let mut scratch = GainScratch::new(p.k());
+    // stamp[v] = id of the speculative block in which v last moved
+    let mut stamp: Vec<u32> = if threads > 1 { vec![0; n] } else { Vec::new() };
+    let mut block_id: u32 = 0;
     let mut total = 0i64;
+    let mut prev_moves = n; // forces the first iteration serial
     for _ in 0..iterations.max(1) {
         let order = rng.permutation(n);
         let mut round = 0i64;
-        for &v in &order {
-            let Some((to, gain)) = scratch.best_move(g, p, v, bounds) else {
-                continue;
-            };
-            let improves_balance =
-                p.block_weight(to) + g.node_weight(v) < p.block_weight(p.block_of(v));
-            if gain > 0 || (gain == 0 && improves_balance) {
-                p.move_node(g, v, to);
-                round += gain;
+        let mut moves = 0usize;
+        let speculate = threads > 1 && prev_moves * 8 < n;
+        if !speculate {
+            for &v in &order {
+                let Some((to, gain)) = scratch.best_move(g, p, v, bounds) else {
+                    continue;
+                };
+                let improves_balance =
+                    p.block_weight(to) + g.node_weight(v) < p.block_weight(p.block_of(v));
+                if gain > 0 || (gain == 0 && improves_balance) {
+                    p.move_node(g, v, to);
+                    round += gain;
+                    moves += 1;
+                }
+            }
+        } else {
+            for block in order.chunks(SPEC_BLOCK) {
+                block_id += 1;
+                let snaps = snapshot_block(g, p, block, threads);
+                for (i, &v) in block.iter().enumerate() {
+                    let fresh = match &snaps[i] {
+                        Some(cands)
+                            if !g.neighbors(v).iter().any(|&u| stamp[u as usize] == block_id) =>
+                        {
+                            Some(cands)
+                        }
+                        _ => None,
+                    };
+                    let mv = if let Some(cands) = fresh {
+                        let own = p.block_of(v);
+                        let vw = g.node_weight(v);
+                        let own_conn =
+                            cands.iter().find(|&&(b, _)| b == own).map(|&(_, c)| c).unwrap_or(0);
+                        select_best(p, own, vw, own_conn, cands.iter().copied(), bounds)
+                    } else {
+                        scratch.best_move(g, p, v, bounds)
+                    };
+                    let Some((to, gain)) = mv else {
+                        continue;
+                    };
+                    let improves_balance =
+                        p.block_weight(to) + g.node_weight(v) < p.block_weight(p.block_of(v));
+                    if gain > 0 || (gain == 0 && improves_balance) {
+                        p.move_node(g, v, to);
+                        stamp[v as usize] = block_id;
+                        round += gain;
+                        moves += 1;
+                    }
+                }
             }
         }
         total += round;
+        prev_moves = moves;
         if round == 0 {
             break;
         }
     }
     total
+}
+
+/// Parallel per-node connectivity snapshots for one block, candidates in
+/// CSR first-touch order — the same order [`GainScratch::with_conns`]
+/// produces, so replay through [`select_best`] matches the serial
+/// tie-breaking exactly.
+fn snapshot_block(
+    g: &Graph,
+    p: &Partition,
+    block: &[u32],
+    threads: usize,
+) -> Vec<Option<Vec<(u32, i64)>>> {
+    crate::util::threads::scoped_map(block.len(), threads, |i| {
+        let v = block[i];
+        let mut cands: Vec<(u32, i64)> = Vec::new();
+        for (u, w) in g.neighbors_w(v) {
+            let b = p.block_of(u);
+            if let Some(pos) = cands.iter().position(|e| e.0 == b) {
+                cands[pos].1 += w;
+            } else if cands.len() == MAX_CANDS {
+                return None;
+            } else {
+                cands.push((b, w));
+            }
+        }
+        Some(cands)
+    })
 }
 
 #[cfg(test)]
@@ -62,6 +161,31 @@ mod tests {
         assert_eq!(before - after, gain);
         assert!(after < before, "LP refinement should improve random: {before} -> {after}");
         assert!(p.validate(&g).is_ok());
+    }
+
+    /// Determinism contract: the speculative parallel path must move the
+    /// exact same nodes to the exact same blocks as the serial path.
+    #[test]
+    fn prop_parallel_matches_serial_exactly() {
+        let cfg = crate::util::quickcheck::Config { cases: 24, seed: 0x1b9_0007 };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let n = 60 + case * 50;
+            let g = generators::barabasi_albert(n, 3, rng);
+            let k = 2 + (case % 4) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let bound = crate::util::block_weight_bound(g.total_node_weight(), k, 0.10);
+            let bounds = vec![bound.max(1); k as usize];
+            let seed = 500 + case as u64;
+            let mut serial = Partition::from_assignment(&g, k, part.clone());
+            let sgain = refine_par(&g, &mut serial, &bounds, 8, &mut Rng::new(seed), 1);
+            for t in [2usize, 4, 8] {
+                let mut par = Partition::from_assignment(&g, k, part.clone());
+                let pgain = refine_par(&g, &mut par, &bounds, 8, &mut Rng::new(seed), t);
+                crate::prop_assert!(pgain == sgain, "gain diverged at threads={t}");
+                crate::prop_assert!(par == serial, "partition diverged at threads={t}");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,14 +19,16 @@ use crate::rng::Rng;
 /// Run the full refinement stack configured by `cfg` on one level.
 /// Returns the total cut improvement (>= 0).
 pub fn refine(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) -> i64 {
+    let threads = cfg.num_threads();
     let bound = cfg.bound(g.total_node_weight());
     let bounds = vec![bound; cfg.k as usize];
     let mut total = 0i64;
     if cfg.use_lp_refinement {
-        total += label_prop_refine::refine(g, p, &bounds, cfg.lp_iterations.min(5), rng);
+        total +=
+            label_prop_refine::refine_par(g, p, &bounds, cfg.lp_iterations.min(5), rng, threads);
     }
     for _ in 0..cfg.kway_fm_rounds {
-        let gained = kway_fm::refine(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+        let gained = kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
         total += gained;
         if gained == 0 {
             break;
@@ -56,7 +58,7 @@ pub fn refine(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) -> i64 
             // min-cut corridors can leave jagged boundaries that seed the
             // next-finer level badly; one FM smoothing round fixes that
             // (§Perf: +0 cost when flow found nothing)
-            total += kway_fm::refine(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+            total += kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
         }
     }
     total

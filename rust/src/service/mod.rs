@@ -53,6 +53,12 @@ pub struct ServiceConfig {
     pub max_graphs: usize,
     /// Results kept memoized (FIFO eviction).
     pub max_results: usize,
+    /// Engine threads each worker may use for its job (the parallel
+    /// multilevel engine). 0 = auto: available parallelism divided among
+    /// the workers, so the pool shares the machine instead of
+    /// oversubscribing `workers × engine-threads`. Never part of the memo
+    /// key — the engine is deterministic at any thread count.
+    pub threads_per_job: usize,
 }
 
 impl Default for ServiceConfig {
@@ -62,6 +68,7 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             max_graphs: 128,
             max_results: 4096,
+            threads_per_job: 0,
         }
     }
 }
@@ -77,8 +84,18 @@ pub struct Service {
 impl Service {
     pub fn new(cfg: ServiceConfig) -> Service {
         let store = Arc::new(GraphStore::new(cfg.max_graphs, cfg.max_results));
-        let scheduler =
-            scheduler::Scheduler::new(cfg.workers, cfg.queue_capacity, Arc::clone(&store));
+        let threads_per_job = if cfg.threads_per_job > 0 {
+            cfg.threads_per_job
+        } else {
+            // auto: split the machine across the worker pool
+            (crate::util::threads::available_threads() / cfg.workers.max(1)).max(1)
+        };
+        let scheduler = scheduler::Scheduler::new(
+            cfg.workers,
+            cfg.queue_capacity,
+            Arc::clone(&store),
+            threads_per_job,
+        );
         Service { store, scheduler }
     }
 

@@ -498,9 +498,25 @@ fn require_k(v: &Json) -> Result<u32, String> {
 /// whole point: results are byte-identical to direct library calls with
 /// the same seed, so the memo cache is sound).
 pub fn execute(g: &Graph, spec: &JobSpec) -> Result<JobOutput, String> {
+    execute_with_threads(g, spec, 0)
+}
+
+/// [`execute`] with an explicit per-job worker count for the parallel
+/// multilevel engine (0 = auto). The scheduler passes its
+/// `threads_per_job` so concurrent service workers share the machine
+/// instead of oversubscribing it. Legal precisely because the engine is
+/// deterministic at any thread count: the memoized output (keyed by
+/// [`JobSpec::fingerprint`], which never includes threads) is identical
+/// whichever worker count computed it.
+pub fn execute_with_threads(
+    g: &Graph,
+    spec: &JobSpec,
+    threads: usize,
+) -> Result<JobOutput, String> {
     match spec.kind {
         JobKind::Partition => {
-            let cfg = spec.config();
+            let mut cfg = spec.config();
+            cfg.threads = threads;
             let res = crate::coordinator::kaffpa(g, &cfg, None, None);
             Ok(JobOutput::Partition {
                 edgecut: res.edge_cut,

@@ -118,6 +118,9 @@ struct Shared {
     capacity: usize,
     store: Arc<GraphStore>,
     stats: StatsCollector,
+    /// Engine threads each worker hands to `execute_with_threads` so the
+    /// pool shares the machine instead of oversubscribing it (0 = auto).
+    threads_per_job: usize,
 }
 
 /// The queue + worker pool. Owned by [`super::Service`].
@@ -127,7 +130,12 @@ pub(crate) struct Scheduler {
 }
 
 impl Scheduler {
-    pub(crate) fn new(workers: usize, capacity: usize, store: Arc<GraphStore>) -> Scheduler {
+    pub(crate) fn new(
+        workers: usize,
+        capacity: usize,
+        store: Arc<GraphStore>,
+        threads_per_job: usize,
+    ) -> Scheduler {
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
@@ -139,6 +147,7 @@ impl Scheduler {
             capacity: capacity.max(1),
             store,
             stats: StatsCollector::new(),
+            threads_per_job,
         });
         let workers = (0..workers.max(1))
             .map(|_| {
@@ -382,7 +391,11 @@ fn worker_loop(shared: &Shared) {
                 // always be resolved — a leaked entry would hang every
                 // future identical request on a job nobody owns
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    protocol::execute(&task.graph, &task.spec)
+                    protocol::execute_with_threads(
+                        &task.graph,
+                        &task.spec,
+                        shared.threads_per_job,
+                    )
                 }))
                 .unwrap_or_else(|payload| {
                     let msg = payload

@@ -64,6 +64,82 @@ pub fn ramped_size(case: usize, lo: usize, hi: usize) -> usize {
     (lo + (case * (hi - lo)) / 63).min(hi)
 }
 
+/// Seeded random graph families for property tests. Every sample is a
+/// valid CSR graph (symmetric, no self-loops, no parallel edges) and is a
+/// pure function of `(family, case, rng state)`, so the determinism suite
+/// and the pipeline property tests can regenerate identical inputs from a
+/// reported `(case, seed)` pair.
+pub mod graphs {
+    use crate::graph::{generators, Graph, GraphBuilder};
+    use crate::rng::Rng;
+
+    /// The family names, cycled by [`any`]. Deliberately includes the
+    /// degenerate shapes (disconnected, single vertex, star hubs) that
+    /// historically shake out edge cases in coarsening and refinement.
+    pub const FAMILIES: [&str; 7] = [
+        "grid",
+        "random-geometric",
+        "erdos-renyi",
+        "power-law",
+        "disconnected",
+        "single-vertex",
+        "star",
+    ];
+
+    /// Sample one graph of the named family, size-ramped by `case`.
+    pub fn sample(family: &str, case: usize, rng: &mut Rng) -> Graph {
+        let s = super::ramped_size(case, 1, 12);
+        match family {
+            "grid" => generators::grid2d(2 + s, 2 + s / 2),
+            "random-geometric" => {
+                let n = 20 + 15 * s;
+                generators::random_geometric(n, 2.0 / (n as f64).sqrt(), rng)
+            }
+            "erdos-renyi" => {
+                let n = 10 + 20 * s;
+                generators::erdos_renyi_gnm(n, 3 * n, rng)
+            }
+            "power-law" => generators::barabasi_albert(20 + 30 * s, 3, rng),
+            "disconnected" => {
+                let grid = generators::grid2d(2 + s / 2, 2);
+                let ba = generators::barabasi_albert(10 + 10 * s, 2, rng);
+                union(&[&grid, &ba, &Graph::isolated(1 + s / 4)])
+            }
+            "single-vertex" => Graph::isolated(1),
+            "star" => generators::star(3 + 5 * s),
+            other => panic!("unknown graph family {other}"),
+        }
+    }
+
+    /// Cycle through all families by case index — the workhorse for
+    /// property tests that want structural diversity across cases.
+    pub fn any(case: usize, rng: &mut Rng) -> Graph {
+        sample(FAMILIES[case % FAMILIES.len()], case / FAMILIES.len(), rng)
+    }
+
+    /// Disjoint union with node ids offset per part — the canonical way
+    /// to build guaranteed-disconnected test graphs.
+    pub fn union(parts: &[&Graph]) -> Graph {
+        let n: usize = parts.iter().map(|g| g.n()).sum();
+        let mut b = GraphBuilder::new(n);
+        let mut weights = Vec::with_capacity(n);
+        let mut off = 0u32;
+        for g in parts {
+            for v in g.nodes() {
+                weights.push(g.node_weight(v));
+                for (u, w) in g.neighbors_w(v) {
+                    if v < u {
+                        b.add_edge(v + off, u + off, w);
+                    }
+                }
+            }
+            off += g.n() as u32;
+        }
+        b.set_node_weights(weights);
+        b.build().expect("union of valid graphs is valid")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +163,38 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    fn graph_families_produce_valid_deterministic_csr() {
+        for family in graphs::FAMILIES {
+            for case in [0usize, 3, 11] {
+                let g = graphs::sample(family, case, &mut crate::rng::Rng::new(42));
+                assert!(g.validate().is_ok(), "{family} case {case} invalid");
+                assert!(g.n() >= 1, "{family} case {case} empty");
+                let again = graphs::sample(family, case, &mut crate::rng::Rng::new(42));
+                assert_eq!(g.raw(), again.raw(), "{family} case {case} not seeded");
+            }
+        }
+        // `any` cycles every family and never panics over a full run
+        for case in 0..(graphs::FAMILIES.len() * 2) {
+            let g = graphs::any(case, &mut crate::rng::Rng::new(7));
+            assert!(g.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn union_is_disconnected_and_conserves_weight() {
+        let a = crate::graph::generators::grid2d(3, 3);
+        let b = crate::graph::generators::star(4);
+        let u = graphs::union(&[&a, &b]);
+        assert_eq!(u.n(), a.n() + b.n());
+        assert_eq!(u.m(), a.m() + b.m());
+        assert_eq!(u.total_node_weight(), a.total_node_weight() + b.total_node_weight());
+        // no edge crosses the offset boundary
+        for v in 0..a.n() as u32 {
+            assert!(u.neighbors(v).iter().all(|&x| (x as usize) < a.n()));
+        }
     }
 
     #[test]

@@ -23,7 +23,10 @@ pub fn median(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts to the end instead of panicking — the service
+    // stats path feeds caller-supplied latencies here and must not trust
+    // them to be well-formed
+    s.sort_by(f64::total_cmp);
     let n = s.len();
     if n % 2 == 1 {
         s[n / 2]
@@ -45,7 +48,7 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// midpoint convention; the service reports p50/p99 job latencies with it.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp); // NaN-safe: see median
     percentile_sorted(&s, p)
 }
 
@@ -88,6 +91,35 @@ mod tests {
         assert_eq!(median(&[]), 0.0);
         assert_eq!(stddev(&[5.0]), 0.0);
         assert_eq!(median(&[3.0]), 3.0);
+    }
+
+    /// Percentile edge cases the service stats path depends on: empty
+    /// slice, single element, exact p=0 / p=100 endpoints, out-of-range
+    /// p, and NaN inputs (must not panic — total_cmp ordering).
+    #[test]
+    fn percentile_edge_cases() {
+        // empty and single-element
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        for p in [0.0, 50.0, 100.0, -5.0, 400.0] {
+            assert_eq!(percentile(&[2.5], p), 2.5, "single element at p={p}");
+        }
+        // exact endpoints pick min and max
+        let xs = [5.0, 1.0, 9.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+        // p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 1000.0), 9.0);
+        // NaN must not panic; it sorts after +inf, so low percentiles of
+        // mostly-finite data stay finite
+        let with_nan = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert!(percentile(&with_nan, 100.0).is_nan());
+        // median likewise must survive NaN (used to panic via partial_cmp)
+        assert_eq!(median(&[1.0, f64::NAN, 3.0]), 3.0, "NaN sorts last");
+        let _ = median(&[f64::NAN; 3]);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! this degrades gracefully to near-sequential execution but preserves the
 //! concurrency structure (threads + channels), which is what the simulated
 //! message-passing layer needs.
+//!
+//! The multilevel engine's parallel phases additionally rely on the
+//! **deterministic-reduce contract** of this module (see DESIGN.md
+//! "Determinism contract"): `scoped_map`/`scoped_map_with` return results
+//! in *index order* no matter which worker computed them or in which
+//! wall-clock order they finished. As long as `f(i)` is a pure function of
+//! `i` (worker-local state is scratch only), the reduced output is a value
+//! that cannot depend on the worker count or on scheduling races.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -49,6 +57,88 @@ where
         out[i] = Some(v);
     }
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Like [`scoped_map`], but each worker thread builds one reusable state
+/// value with `init` (typically a scratch buffer such as a
+/// `GainScratch`) that is threaded through every call it makes. Results
+/// are still returned in index order. Determinism contract: `f(state, i)`
+/// must return a value that depends only on `i` (and captured shared
+/// data) — the state is scratch, not an accumulator — so the output is
+/// independent of how indices land on workers.
+pub fn scoped_map_with<T, S, I, F>(n: usize, workers: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let init = &init;
+            let f = &f;
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut state, i);
+                    if tx.send((i, v)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    drop(tx); // scope joined all workers; close our own sender
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in rx {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Default worker count for the parallel engine: the `KAHIP_THREADS`
+/// environment variable when set to a positive integer (CI pins the
+/// determinism job with it), otherwise the OS-reported parallelism.
+pub fn available_threads() -> usize {
+    if let Ok(v) = std::env::var("KAHIP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `0..n` into contiguous in-order ranges of at most `chunk` items.
+/// The parallel contraction path maps one range per task; because the
+/// per-range outputs are merged in range order, the chunk size (and thus
+/// the thread count) cannot affect the merged result.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<std::ops::Range<usize>> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(chunk));
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
 }
 
 /// A long-lived FIFO task pool for the coordinator's background work
@@ -110,6 +200,48 @@ mod tests {
     fn scoped_map_empty_and_single() {
         assert!(scoped_map(0, 4, |i| i).is_empty());
         assert_eq!(scoped_map(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn scoped_map_with_reuses_state_without_leaking_into_results() {
+        // State counts calls per worker; results must ignore it entirely.
+        let out = scoped_map_with(
+            200,
+            4,
+            || 0usize,
+            |calls, i| {
+                *calls += 1;
+                assert!(*calls <= 200);
+                i * 3
+            },
+        );
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+        // Identical values at every worker count (determinism contract).
+        for workers in [1, 2, 8] {
+            let again = scoped_map_with(200, workers, || 0usize, |_, i| i * 3);
+            assert_eq!(again, out);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, chunk) in [(0, 16), (1, 16), (16, 16), (17, 16), (100, 7), (5, 0)] {
+            let ranges = chunk_ranges(n, chunk);
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                assert!(r.end > r.start);
+                expect = r.end;
+            }
+            assert_eq!(expect, n);
+        }
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
     }
 
     #[test]

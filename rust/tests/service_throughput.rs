@@ -3,6 +3,11 @@
 //! Every result must be byte-identical to the corresponding direct
 //! library call with the same seed, and repeat-graph submissions must be
 //! served from the `GraphStore` cache (hit rate > 0 in `ServiceStats`).
+//!
+//! The stress test at the bottom pushes 128 mixed jobs through a
+//! deliberately undersized pool (3 workers, queue of 8) with cancellation
+//! and queue-full injection, and checks the no-hang / no-lost-response /
+//! ledger-reconciliation guarantees under backpressure.
 
 use kahip::graph::generators;
 use kahip::partition::config::{Config, Mode};
@@ -11,6 +16,7 @@ use kahip::service::{
 };
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 /// The mixed workload: 32 distinct jobs over two graphs, then the same
 /// 32 again (repeat-graph, repeat-job submissions) = 64 total.
@@ -166,4 +172,153 @@ fn sixty_four_concurrent_mixed_jobs_byte_identical_with_cache_hits() {
     assert!(res.cached);
     assert!(svc.stats().cache_hits >= 1);
     assert!(svc.stats().p99_latency >= svc.stats().p50_latency);
+}
+
+/// Stress: 128 mixed jobs against 3 workers and a queue of 8, with
+/// cancellation of queued jobs and guaranteed queue-full rejections.
+/// Guarantees under test: the service never hangs, every *accepted* job
+/// answers exactly once (ok or "cancelled" — never silence), rejected
+/// submissions fail fast with `QueueFull`, the stats ledger reconciles,
+/// and results that did run are byte-identical to direct library calls
+/// (so the memo stays sound under backpressure).
+#[test]
+fn stress_128_jobs_with_cancellation_and_queue_full_injection() {
+    const BLOCKERS: usize = 3;
+    const BURST: usize = 125; // BLOCKERS + BURST = 128 total submissions
+    let svc = Service::new(ServiceConfig {
+        workers: BLOCKERS,
+        queue_capacity: 8,
+        threads_per_job: 1,
+        ..Default::default()
+    });
+    let (tx, rx) = mpsc::channel();
+
+    // Phase 1: occupy every worker with a time-limited partition job
+    // (non-cacheable, runs ~400ms) so the burst below meets a full pool.
+    let grid = generators::grid2d(12, 12);
+    let mut rng = kahip::rng::Rng::new(7);
+    let ba = generators::barabasi_albert(150, 3, &mut rng);
+    for i in 0..BLOCKERS {
+        let req = JobRequest {
+            id: format!("blocker-{i}"),
+            graph: GraphPayload::from_graph(&grid),
+            spec: JobSpec {
+                k: 4,
+                seed: 9000 + i as u64,
+                mode: Mode::Eco,
+                time_limit: 0.4,
+                ..JobSpec::defaults(JobKind::Partition)
+            },
+        };
+        svc.submit(req, tx.clone()).expect("empty queue accepts blockers");
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().queue_depth > 0 {
+        assert!(Instant::now() < deadline, "workers never picked up the blockers");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Phase 2: burst-submit 125 distinct non-blocking jobs. With all
+    // workers held and capacity 8, most must bounce with QueueFull.
+    let mut accepted: Vec<(JobRequest, kahip::service::CancelHandle)> = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..BURST {
+        let (gname, g) = if i % 2 == 0 { ("grid", &grid) } else { ("ba", &ba) };
+        let (kind, k) = match i % 3 {
+            0 => (JobKind::Partition, [2u32, 4, 8][(i / 3) % 3]),
+            1 => (JobKind::Separator, 2),
+            _ => (JobKind::Ordering, 2),
+        };
+        let req = JobRequest {
+            id: format!("burst-{gname}-{i}"),
+            graph: GraphPayload::from_graph(g),
+            spec: JobSpec {
+                k,
+                seed: 5000 + i as u64,
+                mode: Mode::Eco,
+                ..JobSpec::defaults(kind)
+            },
+        };
+        match svc.submit(req.clone(), tx.clone()) {
+            Ok(handle) => accepted.push((req, handle)),
+            Err(kahip::service::SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "125 bursts into a queue of 8 must inject QueueFull");
+    assert_eq!(accepted.len() + rejected, BURST);
+
+    // Phase 3: cancel every other accepted burst job while it queues. A
+    // job cancelled before pickup answers "cancelled"; one already picked
+    // up runs to completion — both are legal, silence is not.
+    let mut cancelled_ids = Vec::new();
+    for (req, handle) in accepted.iter().skip(1).step_by(2) {
+        handle.cancel();
+        cancelled_ids.push(req.id.clone());
+    }
+
+    // Phase 4: drain. Every accepted job (blockers included) must answer
+    // exactly once; recv_timeout turns a lost response into a failure
+    // instead of a hang.
+    drop(tx);
+    let expected_answers = BLOCKERS + accepted.len();
+    let mut results: HashMap<String, JobResult> = HashMap::new();
+    for _ in 0..expected_answers {
+        let res = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a submitted job never answered (lost response or hang)");
+        assert!(
+            results.insert(res.id.clone(), res).is_none(),
+            "a job answered more than once"
+        );
+    }
+    assert!(
+        rx.recv_timeout(Duration::from_millis(100)).is_err(),
+        "more answers than accepted jobs"
+    );
+
+    // Phase 5: verify outcomes. Jobs that ran are byte-identical to the
+    // direct library call; errors are exactly the injected cancellations.
+    let mut ran_ok = Vec::new();
+    let mut answered_cancelled = 0usize;
+    for (req, _) in &accepted {
+        let res = &results[&req.id];
+        match &res.outcome {
+            Ok(_) => {
+                assert_matches_expected(res, &expected(req));
+                ran_ok.push(req);
+            }
+            Err(e) => {
+                assert_eq!(e, "cancelled", "{}: only cancellation may fail a job", req.id);
+                assert!(cancelled_ids.contains(&req.id), "{}: spurious cancellation", req.id);
+                answered_cancelled += 1;
+            }
+        }
+    }
+    assert_eq!(ran_ok.len() + answered_cancelled, accepted.len());
+    for i in 0..BLOCKERS {
+        let res = &results[&format!("blocker-{i}")];
+        assert!(res.outcome.is_ok(), "time-limited blockers must still succeed");
+    }
+
+    // Phase 6: ledger reconciliation, then warm memo hits — re-running a
+    // job that completed under stress must be served from the memo with
+    // the identical bytes.
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, expected_answers as u64, "accepted == submitted");
+    assert_eq!(stats.rejected, rejected as u64);
+    assert_eq!(stats.failed, 0, "no job may fail for any reason but cancellation");
+    assert_eq!(stats.cancelled, answered_cancelled as u64);
+    assert_eq!(
+        stats.completed + stats.cancelled,
+        expected_answers as u64,
+        "ledger must reconcile: every accepted job completed or was cancelled"
+    );
+    for (i, req) in ran_ok.iter().take(3).enumerate() {
+        let mut warm = (*req).clone();
+        warm.id = format!("stress-warm-{i}");
+        let res = svc.run_sync(warm);
+        assert!(res.cached, "{}: exact repeat must hit the memo", res.id);
+        assert_matches_expected(&res, &expected(req));
+    }
 }
