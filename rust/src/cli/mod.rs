@@ -204,6 +204,14 @@ fn load_input_partition(a: &ArgSet, g: &Graph, k: u32) -> Result<Option<Partitio
     }
 }
 
+/// `--trace_json=<path>` (or the dashed spelling `--trace-json=`):
+/// where to write the observability trace. On `kaffpa` the run's V-cycle
+/// report goes there as one JSON document; on `serve` every executed job
+/// appends one `{"id","job","trace"}` line.
+fn trace_json_opt(a: &ArgSet) -> Option<&str> {
+    a.str_opt("trace_json").or_else(|| a.str_opt("trace-json"))
+}
+
 fn spectral_backend() -> Option<crate::runtime::PjrtRuntime> {
     match crate::runtime::PjrtRuntime::load_default() {
         Ok(rt) => Some(rt),
@@ -252,7 +260,22 @@ fn cmd_kaffpa(a: &ArgSet) -> Result<(), String> {
     let backend = spectral_backend();
     cfg.use_spectral_initial = backend.is_some();
     let be = backend.as_ref().map(|b| b as &dyn crate::initial::spectral::FiedlerBackend);
+    let trace_path = trace_json_opt(a);
+    let cap = trace_path.map(|_| {
+        let t = if cfg.threads == 0 {
+            crate::util::threads::available_threads()
+        } else {
+            cfg.threads
+        };
+        crate::obs::Capture::start("kaffpa", t)
+    });
     let res = crate::coordinator::kaffpa(&g, &cfg, be, input);
+    if let (Some(path), Some(cap)) = (trace_path, cap) {
+        let trace = cap.finish();
+        std::fs::write(path, trace.to_json().render() + "\n")
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote trace to {path}");
+    }
     println!(
         "cut {} balance {:.5} reps {} time {:.3}s",
         res.edge_cut, res.balance, res.repetitions, res.seconds
@@ -593,7 +616,8 @@ fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
 /// connections instead. `--workers`, `--queue`, `--graph_cache` and
 /// `--result_cache` size the pool, the backpressure bound and the
 /// content-addressed store; `--threads` caps the engine threads each
-/// worker's job may use (0 = auto-share the machine).
+/// worker's job may use (0 = auto-share the machine); `--trace_json=<path>`
+/// appends one trace line per executed job (see [`crate::obs`]).
 fn cmd_serve(a: &ArgSet) -> Result<(), String> {
     use crate::service::{frontend, Service, ServiceConfig};
     let defaults = ServiceConfig::default();
@@ -603,6 +627,7 @@ fn cmd_serve(a: &ArgSet) -> Result<(), String> {
         max_graphs: a.usize_or("graph_cache", defaults.max_graphs)?,
         max_results: a.usize_or("result_cache", defaults.max_results)?,
         threads_per_job: a.usize_or("threads", defaults.threads_per_job)?,
+        trace_log: trace_json_opt(a).map(str::to_string),
     };
     match a.str_opt("listen") {
         Some(addr) => {
@@ -692,6 +717,16 @@ mod tests {
         assert_eq!(a.mode(Mode::Eco).unwrap(), Mode::StrongSocial);
         let a = ArgSet::parse(&args(&["--preconfiguration=bogus"])).unwrap();
         assert!(a.mode(Mode::Eco).is_err());
+    }
+
+    #[test]
+    fn trace_json_accepts_both_spellings() {
+        let a = ArgSet::parse(&args(&["g", "--trace_json=/tmp/t.json"])).unwrap();
+        assert_eq!(trace_json_opt(&a), Some("/tmp/t.json"));
+        let a = ArgSet::parse(&args(&["g", "--trace-json=/tmp/t.json"])).unwrap();
+        assert_eq!(trace_json_opt(&a), Some("/tmp/t.json"));
+        let a = ArgSet::parse(&args(&["g"])).unwrap();
+        assert_eq!(trace_json_opt(&a), None);
     }
 
     #[test]

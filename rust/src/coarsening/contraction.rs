@@ -66,6 +66,9 @@ pub fn contract_par(g: &Graph, cluster: &[NodeId], threads: usize) -> CoarseLeve
     } else {
         let ranges =
             crate::util::threads::chunk_ranges(g.n(), g.n().div_ceil(threads * 4).max(1024));
+        if crate::obs::capturing() {
+            crate::obs::count("contract_chunks", ranges.len() as u64);
+        }
         let chunks = crate::util::threads::scoped_map(ranges.len(), threads, |ci| {
             let mut edges: Vec<(u32, u32, i64)> = Vec::new();
             for v in ranges[ci].clone() {

@@ -38,7 +38,8 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
     let mut levels: Vec<CoarseLevel> = Vec::new();
     let mut current = input.clone();
     while current.n() > stop_n {
-        let cluster = match cfg.coarsening {
+        crate::obs::begin_level("coarsen", levels.len(), current.n(), current.m());
+        let cluster = crate::obs::phase("clustering", || match cfg.coarsening {
             Coarsening::Matching => {
                 // pairs must respect the block bound; a safe per-node cap
                 // is bound/2 so even at the coarsest level nodes fit.
@@ -51,26 +52,35 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
                 let iters = cfg.lp_iterations;
                 label_propagation_par(&current, Some(cluster_bound), iters, rng, threads)
             }
-        };
-        let mut lvl = contract_par(&current, &cluster, threads);
+        });
+        let mut lvl =
+            crate::obs::phase("contraction", || contract_par(&current, &cluster, threads));
         let mut shrink = lvl.coarse.n() as f64 / current.n() as f64;
         if shrink > cfg.min_shrink && cfg.coarsening == Coarsening::ClusterLp {
             // LP clustering stalls on graphs whose remaining structure has
             // no clusters left (e.g. the hub core of an RMAT graph); retry
             // the level with matching before declaring a stall — the same
             // hybrid the social configurations of KaHIP use.
-            let matched = heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng);
-            let m_lvl = contract_par(&current, &matched, threads);
+            crate::obs::count("lp_stall_retries", 1);
+            let matched = crate::obs::phase("clustering", || {
+                heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng)
+            });
+            let m_lvl =
+                crate::obs::phase("contraction", || contract_par(&current, &matched, threads));
             let m_shrink = m_lvl.coarse.n() as f64 / current.n() as f64;
             if m_shrink < shrink {
                 lvl = m_lvl;
                 shrink = m_shrink;
             }
         }
+        // shrink = coarse n / fine n; the level's coarsening ratio
+        crate::obs::metric("ratio", shrink);
         if shrink > cfg.min_shrink {
+            crate::obs::end_level();
             break; // contraction stalled
         }
         debug_assert_eq!(check_invariants(&current, &lvl), Ok(()));
+        crate::obs::end_level();
         current = lvl.coarse.clone();
         levels.push(lvl);
     }

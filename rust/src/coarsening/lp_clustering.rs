@@ -73,6 +73,12 @@ pub fn label_propagation_par(
     let mut stamp: Vec<u32> = if threads > 1 { vec![0; n] } else { Vec::new() };
     let mut block_id: u32 = 0;
     let mut prev_moved = n; // forces the first iteration serial
+    // observability tallies (plain locals — flushed once at the end, so
+    // the hot loop pays two register bumps, captured or not)
+    let mut obs_iterations = 0u64;
+    let mut obs_moves = 0u64;
+    let mut obs_fresh = 0u64;
+    let mut obs_recomputed = 0u64;
     for _ in 0..iterations {
         let order = rng.permutation(n);
         let mut moved = 0usize;
@@ -106,8 +112,10 @@ pub fn label_propagation_par(
                         _ => None,
                     };
                     let did = if let Some(cands) = fresh {
+                        obs_fresh += 1;
                         apply_snapshot(g, bound, &mut cluster, &mut cluster_weight, cands, v)
                     } else {
+                        obs_recomputed += 1;
                         serial_step(
                             g,
                             bound,
@@ -125,10 +133,20 @@ pub fn label_propagation_par(
                 }
             }
         }
+        obs_iterations += 1;
+        obs_moves += moved as u64;
         prev_moved = moved;
         if moved == 0 {
             break;
         }
+    }
+    if crate::obs::capturing() {
+        crate::obs::count("lp_iterations", obs_iterations);
+        crate::obs::count("lp_moves", obs_moves);
+        // the PR-6 speculative path: snapshots applied fresh vs. detected
+        // stale and recomputed serially (the recompute rate)
+        crate::obs::count("lp_snapshot_fresh", obs_fresh);
+        crate::obs::count("lp_snapshot_recomputed", obs_recomputed);
     }
     cluster
 }

@@ -41,40 +41,50 @@ pub fn multilevel(
     if g.n() == 0 {
         return Partition::trivial(g, cfg.k);
     }
-    let hierarchy = build_hierarchy(g, cfg, rng);
+    let hierarchy = crate::obs::phase("coarsening", || build_hierarchy(g, cfg, rng));
     // graphs per level: input + all coarse
-    let mut p = {
+    let mut p = crate::obs::phase("initial_partition", || {
         let coarsest = hierarchy.coarsest(g);
         let mut p = initial_partition(coarsest, cfg, rng, backend);
         refinement::refine(coarsest, &mut p, cfg, rng);
         p
-    };
+    });
     for i in (0..hierarchy.levels.len()).rev() {
         let fine_g = if i == 0 { g } else { &hierarchy.levels[i - 1].coarse };
+        crate::obs::begin_level("uncoarsen", i, fine_g.n(), fine_g.m());
         // cut consistency across uncoarsening (§2.1): projecting a coarse
         // partition onto the finer graph must preserve the cut exactly —
         // refinement can then only improve it from there.
         #[cfg(debug_assertions)]
         let cut_before = metrics::edge_cut(&hierarchy.levels[i].coarse, &p);
-        p = p.project(fine_g, &hierarchy.levels[i].map);
+        p = crate::obs::phase("projection", || p.project(fine_g, &hierarchy.levels[i].map));
         #[cfg(debug_assertions)]
         debug_assert_eq!(
             metrics::edge_cut(fine_g, &p),
             cut_before,
             "projection changed the cut at level {i}"
         );
-        let gained = refinement::refine(fine_g, &mut p, cfg, rng);
+        let gained =
+            crate::obs::phase("refinement", || refinement::refine(fine_g, &mut p, cfg, rng));
         debug_assert!(gained >= 0, "refinement must never worsen the cut (level {i})");
-    }
-    for _ in 0..cfg.global_cycles {
-        if cfg.use_fcycle {
-            cycles::fcycle(g, &mut p, cfg, rng);
-        } else {
-            cycles::vcycle(g, &mut p, cfg, rng);
+        // cut/balance per level cost one O(m) sweep — only paid when traced
+        if crate::obs::capturing() {
+            crate::obs::metric("cut", metrics::edge_cut(fine_g, &p) as f64);
+            crate::obs::metric("balance", metrics::balance(fine_g, &p));
         }
+        crate::obs::end_level();
     }
+    crate::obs::phase("global_cycles", || {
+        for _ in 0..cfg.global_cycles {
+            if cfg.use_fcycle {
+                cycles::fcycle(g, &mut p, cfg, rng);
+            } else {
+                cycles::vcycle(g, &mut p, cfg, rng);
+            }
+        }
+    });
     if cfg.enforce_balance {
-        force_balance(g, &mut p, cfg, rng);
+        crate::obs::phase("force_balance", || force_balance(g, &mut p, cfg, rng));
     }
     p
 }
@@ -135,9 +145,15 @@ pub fn kaffpa(
     let (partition, edge_cut, _) = best.unwrap();
     // the assignment is on `work`, which shares node ids with `g`
     let partition = Partition::from_assignment(g, cfg.k, partition.into_assignment());
+    let balance = metrics::balance(g, &partition);
+    if crate::obs::capturing() {
+        crate::obs::count("repetitions", reps as u64);
+        crate::obs::metric("best_cut", edge_cut as f64);
+        crate::obs::metric("best_balance", balance);
+    }
     PartitionResult {
         edge_cut,
-        balance: metrics::balance(g, &partition),
+        balance,
         partition,
         repetitions: reps,
         seconds: timer.elapsed_secs(),

@@ -19,6 +19,12 @@
 //! worker pool, and a content-addressed graph store that parses each
 //! distinct graph once and memoizes exact-repeat requests.
 //!
+//! Every layer reports into [`obs`], the observability subsystem: jobs
+//! requesting `"trace": true` get a per-level V-cycle report, and the
+//! service exposes Prometheus-format metrics via the `metrics` job kind —
+//! without perturbing results (tracing is pure observation; see
+//! `tests/determinism.rs`).
+//!
 //! ## Quickstart
 //!
 //! ```
@@ -51,6 +57,7 @@ pub mod ilp;
 pub mod initial;
 pub mod kaba;
 pub mod mapping;
+pub mod obs;
 pub mod ordering;
 pub mod parhip;
 pub mod partition;

@@ -1,0 +1,319 @@
+//! End-to-end observability: a low-overhead span/counter/metric recorder
+//! the multilevel engine reports into, producing a per-job [`Trace`]
+//! (the V-cycle report) without perturbing results.
+//!
+//! ## Design
+//!
+//! Recording is *pull-free and sink-local*: a thread that wants a trace
+//! installs a capture on **itself** ([`Capture::start`]); every
+//! instrumentation point in the engine then funnels into that thread's
+//! builder. Worker threads spawned by `util::threads` do not inherit the
+//! capture — the fork-join sites measure their workers explicitly and
+//! report the aggregate from the capturing caller, which is what keeps
+//! the recorder lock-free and the engine's code paths identical with
+//! tracing on or off.
+//!
+//! ## Overhead model (see DESIGN.md "Observability")
+//!
+//! When **no capture is installed anywhere** ([`capturing`] is false),
+//! every instrumentation point costs one relaxed atomic load of the
+//! global capture count and a predictable branch — no allocation, no
+//! locks, no TLS access. When a capture is installed on *some other*
+//! thread, the cost adds one thread-local lookup. Only the capturing
+//! thread itself pays for recording (a `Vec` push or linear counter
+//! bump on a handful of names). `benches/trace_overhead.rs` checks the
+//! disabled-path cost against the <2% budget.
+//!
+//! ## Determinism
+//!
+//! The recorder only ever *observes*: no instrumentation point feeds a
+//! value back into the engine, so trace-on and trace-off runs execute
+//! the same moves in the same order (`tests/determinism.rs` pins
+//! byte-identical partitions for every JobKind × thread count).
+
+mod trace;
+pub mod prometheus;
+
+pub use trace::{LevelReport, PoolUtil, Trace};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Number of captures installed across all threads. The fast path of
+/// every recording call is a relaxed load of this counter.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static CURRENT: RefCell<Option<Builder>> = const { RefCell::new(None) };
+}
+
+struct Builder {
+    trace: Trace,
+    /// The level currently receiving counters/metrics/phases, if any.
+    open: Option<LevelReport>,
+    started: Instant,
+}
+
+/// True iff a capture is installed on the *current* thread. Engine code
+/// uses this to skip work that only exists to feed the trace (e.g.
+/// computing the per-level cut).
+#[inline]
+pub fn capturing() -> bool {
+    ACTIVE.load(Ordering::Relaxed) > 0
+        && CURRENT.with(|c| c.try_borrow().map(|b| b.is_some()).unwrap_or(false))
+}
+
+/// Run `f` on the installed builder, if any. All recording goes through
+/// here: the borrow is held only for the duration of `f`, and `f` never
+/// calls back into user code, so re-entrancy cannot double-borrow.
+#[inline]
+fn with_builder(f: impl FnOnce(&mut Builder)) {
+    if ACTIVE.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Ok(mut cur) = c.try_borrow_mut() {
+            if let Some(b) = cur.as_mut() {
+                f(b);
+            }
+        }
+    });
+}
+
+/// Bump a named counter by `delta` (attaches to the open level, else to
+/// the trace's globals). No-op without a capture.
+pub fn count(name: &'static str, delta: u64) {
+    with_builder(|b| {
+        let counters = match b.open.as_mut() {
+            Some(l) => &mut l.counters,
+            None => &mut b.trace.counters,
+        };
+        match counters.iter_mut().find(|(n, _)| *n == name) {
+            Some(entry) => entry.1 += delta,
+            None => counters.push((name, delta)),
+        }
+    });
+}
+
+/// Set a named point metric (last write wins; attaches like [`count`]).
+pub fn metric(name: &'static str, value: f64) {
+    with_builder(|b| {
+        let metrics = match b.open.as_mut() {
+            Some(l) => &mut l.metrics,
+            None => &mut b.trace.metrics,
+        };
+        match metrics.iter_mut().find(|(n, _)| *n == name) {
+            Some(entry) => entry.1 = value,
+            None => metrics.push((name, value)),
+        }
+    });
+}
+
+/// Add `secs` to a named phase span (attaches like [`count`]).
+pub fn phase_secs(name: &'static str, secs: f64) {
+    with_builder(|b| {
+        let phases = match b.open.as_mut() {
+            Some(l) => &mut l.phases,
+            None => &mut b.trace.phases,
+        };
+        match phases.iter_mut().find(|(n, _, _)| *n == name) {
+            Some(entry) => {
+                entry.1 += secs;
+                entry.2 += 1;
+            }
+            None => phases.push((name, secs, 1)),
+        }
+    });
+}
+
+/// Time `f` as one call of the named phase. Without a capture this is
+/// exactly `f()` — the clock is not even read.
+#[inline]
+pub fn phase<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
+    if !capturing() {
+        return f();
+    }
+    let t = Instant::now();
+    let out = f();
+    phase_secs(name, t.elapsed().as_secs_f64());
+    out
+}
+
+/// Open a V-cycle level; subsequent counters/metrics/phases attach to it
+/// until [`end_level`]. An already-open level is flushed first (levels
+/// never nest — the V-cycle is a sequence).
+pub fn begin_level(stage: &'static str, index: usize, nodes: usize, edges: usize) {
+    with_builder(|b| {
+        if let Some(mut prev) = b.open.take() {
+            prev.finalize();
+            b.trace.levels.push(prev);
+        }
+        b.open = Some(LevelReport::new(stage, index, nodes, edges));
+    });
+}
+
+/// Close the open level and append it to the trace.
+pub fn end_level() {
+    with_builder(|b| {
+        if let Some(mut lvl) = b.open.take() {
+            lvl.finalize();
+            b.trace.levels.push(lvl);
+        }
+    });
+}
+
+/// Report one measured fork-join region: per worker slot `(busy seconds,
+/// tasks executed)`. Called by `util::threads` from the capturing thread
+/// after the scope joins.
+pub fn pool_record(per_worker: &[(f64, u64)]) {
+    with_builder(|b| b.trace.pool.absorb(per_worker));
+}
+
+/// RAII capture installed on the current thread. [`Capture::finish`]
+/// yields the [`Trace`]; if the traced code panics instead, `Drop`
+/// uninstalls the capture so the thread (service workers are reused
+/// across jobs) does not leak a stale builder.
+#[must_use = "a Capture that is dropped without finish() discards its trace"]
+pub struct Capture {
+    finished: bool,
+}
+
+impl Capture {
+    /// Install a capture for `job` on the current thread. A capture that
+    /// is already installed is replaced (its partial trace is dropped).
+    pub fn start(job: &str, threads: usize) -> Capture {
+        CURRENT.with(|c| {
+            let mut cur = c.borrow_mut();
+            if cur.is_none() {
+                ACTIVE.fetch_add(1, Ordering::Relaxed);
+            }
+            *cur = Some(Builder {
+                trace: Trace::new(job, threads),
+                open: None,
+                started: Instant::now(),
+            });
+        });
+        Capture { finished: false }
+    }
+
+    /// Uninstall the capture and return the finalized trace.
+    pub fn finish(mut self) -> Trace {
+        self.finished = true;
+        take_installed().unwrap_or_default()
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = take_installed();
+        }
+    }
+}
+
+fn take_installed() -> Option<Trace> {
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        cur.take().map(|mut b| {
+            ACTIVE.fetch_sub(1, Ordering::Relaxed);
+            if let Some(mut lvl) = b.open.take() {
+                lvl.finalize();
+                b.trace.levels.push(lvl);
+            }
+            b.trace.seconds = b.started.elapsed().as_secs_f64();
+            b.trace.finalize();
+            b.trace
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_capture_means_no_recording() {
+        assert!(!capturing());
+        count("ghost", 1);
+        metric("ghost", 1.0);
+        phase_secs("ghost", 1.0);
+        let got = phase("ghost", || 41 + 1);
+        assert_eq!(got, 42);
+        // a later capture must not see any of it
+        let cap = Capture::start("probe", 1);
+        let t = cap.finish();
+        assert!(t.counters.is_empty() && t.phases.is_empty());
+    }
+
+    #[test]
+    fn capture_collects_globals_and_levels() {
+        let cap = Capture::start("job", 2);
+        assert!(capturing());
+        count("reps", 1);
+        count("reps", 2);
+        phase_secs("setup", 0.25);
+        begin_level("coarsen", 0, 10, 20);
+        count("lp_iterations", 5);
+        metric("ratio", 0.5);
+        let v = phase("clustering", || 7);
+        assert_eq!(v, 7);
+        end_level();
+        metric("best_cut", 13.0);
+        pool_record(&[(0.5, 4), (0.25, 2)]);
+        let t = cap.finish();
+        assert!(!capturing());
+        assert_eq!(t.job, "job");
+        assert_eq!(t.threads, 2);
+        assert_eq!(t.counter("reps"), Some(3));
+        assert_eq!(t.metric("best_cut"), Some(13.0));
+        assert_eq!(t.levels.len(), 1);
+        let lvl = &t.levels[0];
+        assert_eq!((lvl.stage, lvl.index, lvl.nodes, lvl.edges), ("coarsen", 0, 10, 20));
+        assert_eq!(lvl.counter("lp_iterations"), Some(5));
+        assert_eq!(lvl.metric("ratio"), Some(0.5));
+        assert_eq!(lvl.phases.len(), 1, "phase inside an open level attaches to it");
+        assert_eq!(t.pool.forks, 1);
+        assert_eq!(t.pool.workers, vec![(0.5, 4), (0.25, 2)]);
+        assert!(t.seconds >= 0.0);
+    }
+
+    #[test]
+    fn dangling_level_is_flushed_on_finish() {
+        let cap = Capture::start("job", 1);
+        begin_level("uncoarsen", 3, 5, 6);
+        count("fm_moves", 2);
+        let t = cap.finish();
+        assert_eq!(t.levels.len(), 1);
+        assert_eq!(t.levels[0].counter("fm_moves"), Some(2));
+    }
+
+    #[test]
+    fn drop_without_finish_uninstalls() {
+        {
+            let _cap = Capture::start("doomed", 1);
+            assert!(capturing());
+            // dropped here without finish(), as after a worker panic
+        }
+        assert!(!capturing());
+        count("after", 1);
+        let t = Capture::start("next", 1).finish();
+        assert!(t.counter("after").is_none());
+    }
+
+    #[test]
+    fn captures_are_per_thread() {
+        let cap = Capture::start("main", 1);
+        count("mine", 1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // sibling thread: global ACTIVE is hot but no local capture
+                assert!(!capturing());
+                count("theirs", 1);
+            });
+        });
+        let t = cap.finish();
+        assert_eq!(t.counter("mine"), Some(1));
+        assert!(t.counter("theirs").is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! Prometheus text-exposition-format rendering (the `Metrics` JobKind's
+//! wire format). Std-only writer for the three families the service
+//! exposes: counters, gauges, and log-bucketed histograms
+//! (`util::stat::LogHistogram`).
+//!
+//! Format contract (validated by `tests/service_trace.rs` and the CI
+//! smoke scrape): one `# HELP`/`# TYPE` pair per metric name before its
+//! first sample, cumulative `le` buckets ending in `+Inf`, and
+//! `_sum`/`_count` series per histogram. Series of one histogram name
+//! with different labels share a single header block.
+
+use crate::util::stat::LogHistogram;
+use std::fmt::Write as _;
+
+/// Builds one exposition document. Metric names must be emitted grouped
+/// (all series of a name via one call, or consecutive calls) — the
+/// writer tracks which names already carry a header.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+    seen: Vec<&'static str>,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    fn header(&mut self, name: &'static str, help: &str, kind: &str) {
+        if self.seen.contains(&name) {
+            return;
+        }
+        self.seen.push(name);
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    pub fn counter(&mut self, name: &'static str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    pub fn gauge(&mut self, name: &'static str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    /// Emit one histogram series labeled `labels` (e.g. `[("kind",
+    /// "partition")]`). Buckets are a published subset of the
+    /// `LogHistogram` bounds — cumulative counts stay exact because the
+    /// underlying buckets nest — plus the mandatory `+Inf`.
+    pub fn histogram(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &LogHistogram,
+    ) {
+        self.header(name, help, "histogram");
+        for (bound, cumulative) in h.published_buckets() {
+            let le = format_bound(bound);
+            let lbl = label_set(labels, Some(&le));
+            let _ = writeln!(self.out, "{name}_bucket{lbl} {cumulative}");
+        }
+        let lbl = label_set(labels, None);
+        let _ = writeln!(self.out, "{name}_sum{lbl} {}", h.sum());
+        let _ = writeln!(self.out, "{name}_count{lbl} {}", h.count());
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn format_bound(bound: f64) -> String {
+    if bound.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{bound}")
+    }
+}
+
+fn label_set(labels: &[(&str, &str)], le: Option<&str>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_carry_one_header_each() {
+        let mut w = PromWriter::new();
+        w.counter("kahip_jobs_total", "Jobs.", 7);
+        w.gauge("kahip_queue_depth", "Depth.", 2.0);
+        let text = w.finish();
+        assert!(text.contains("# HELP kahip_jobs_total Jobs.\n"));
+        assert!(text.contains("# TYPE kahip_jobs_total counter\n"));
+        assert!(text.contains("\nkahip_jobs_total 7\n") || text.starts_with("# HELP"));
+        assert!(text.contains("kahip_queue_depth 2\n"));
+    }
+
+    #[test]
+    fn histogram_series_share_one_header() {
+        let mut a = LogHistogram::new();
+        a.record(0.01);
+        a.record(0.02);
+        let mut b = LogHistogram::new();
+        b.record(1.0);
+        let mut w = PromWriter::new();
+        w.histogram("kahip_lat", "Latency.", &[("kind", "partition")], &a);
+        w.histogram("kahip_lat", "Latency.", &[("kind", "ordering")], &b);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE kahip_lat histogram").count(), 1);
+        assert!(text.contains("kahip_lat_bucket{kind=\"partition\",le=\"+Inf\"} 2"));
+        assert!(text.contains("kahip_lat_bucket{kind=\"ordering\",le=\"+Inf\"} 1"));
+        assert!(text.contains("kahip_lat_count{kind=\"partition\"} 2"));
+        assert!(text.contains("kahip_lat_sum{kind=\"ordering\"} 1"));
+    }
+
+    #[test]
+    fn bucket_counts_are_cumulative_and_monotone() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let mut w = PromWriter::new();
+        w.histogram("m", "M.", &[], &h);
+        let text = w.finish();
+        let mut last = 0u64;
+        let mut saw_inf = false;
+        for line in text.lines().filter(|l| l.starts_with("m_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+            saw_inf |= line.contains("le=\"+Inf\"");
+        }
+        assert!(saw_inf);
+        assert_eq!(last, 100, "+Inf bucket equals total count");
+    }
+}

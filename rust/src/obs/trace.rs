@@ -1,0 +1,275 @@
+//! The trace data model: what one observed job execution looks like once
+//! the recorder's thread-local buffers are flushed.
+//!
+//! A [`Trace`] is the structured **V-cycle report** of one engine run:
+//! global phase timings and counters, one [`LevelReport`] per hierarchy
+//! level (coarsening downwards, then uncoarsening upwards), and the
+//! fork-join pool's utilization ([`PoolUtil`]). It renders to the
+//! service's JSON value type so it can ride on a `JobResult` line or be
+//! written to a `--trace_json` file unchanged.
+//!
+//! Rendering is deterministic: counters, metrics and phases are sorted by
+//! name when the capture finishes, so two traces of the same run diff
+//! cleanly even though the engine records them in execution order.
+
+use crate::service::json::Json;
+
+/// Named wall-clock spans: `(name, total seconds, number of calls)`.
+pub type Phases = Vec<(&'static str, f64, u64)>;
+/// Named monotonic counters: `(name, total)`.
+pub type Counters = Vec<(&'static str, u64)>;
+/// Named point metrics (last write wins): `(name, value)`.
+pub type Metrics = Vec<(&'static str, f64)>;
+
+/// One hierarchy level of the V-cycle, as seen by the stage that worked
+/// on it. Counters/metrics/phases recorded while the level is open attach
+/// here instead of to the trace's globals.
+#[derive(Clone, Debug, Default)]
+pub struct LevelReport {
+    /// `"coarsen"` (building the hierarchy) or `"uncoarsen"` (projecting
+    /// and refining back up).
+    pub stage: &'static str,
+    /// Level index: 0 is the input graph's level on both stages.
+    pub index: usize,
+    /// Nodes of the *fine* graph this level works on.
+    pub nodes: usize,
+    /// Edges of the fine graph.
+    pub edges: usize,
+    pub counters: Counters,
+    pub metrics: Metrics,
+    pub phases: Phases,
+}
+
+impl LevelReport {
+    pub(super) fn new(stage: &'static str, index: usize, nodes: usize, edges: usize) -> Self {
+        LevelReport { stage, index, nodes, edges, ..Default::default() }
+    }
+
+    pub(super) fn finalize(&mut self) {
+        self.counters.sort_by_key(|&(n, _)| n);
+        self.metrics.sort_by_key(|&(n, _)| n);
+        self.phases.sort_by_key(|&(n, _, _)| n);
+    }
+
+    /// Counter lookup (tests and report consumers).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// Metric lookup.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("stage".into(), Json::Str(self.stage.into())),
+            ("level".into(), Json::Int(self.index as i64)),
+            ("nodes".into(), Json::Int(self.nodes as i64)),
+            ("edges".into(), Json::Int(self.edges as i64)),
+        ];
+        if !self.metrics.is_empty() {
+            fields.push(("metrics".into(), metrics_json(&self.metrics)));
+        }
+        if !self.counters.is_empty() {
+            fields.push(("counters".into(), counters_json(&self.counters)));
+        }
+        if !self.phases.is_empty() {
+            fields.push(("phases".into(), phases_json(&self.phases)));
+        }
+        Json::Obj(fields)
+    }
+}
+
+/// Utilization of the fork-join pool (`util::threads`) over the whole
+/// job: how many measured fork-joins ran, and per worker slot the busy
+/// wall-clock and the number of tasks (chunks) it pulled off the shared
+/// counter. Slot `i` aggregates every fork's worker `i`, so imbalance
+/// shows up as slot 0 doing more than the last slot.
+#[derive(Clone, Debug, Default)]
+pub struct PoolUtil {
+    /// Fork-join regions measured (scoped_map calls under capture).
+    pub forks: u64,
+    /// Per worker slot: `(busy seconds, tasks executed)`.
+    pub workers: Vec<(f64, u64)>,
+}
+
+impl PoolUtil {
+    pub(super) fn absorb(&mut self, per_worker: &[(f64, u64)]) {
+        self.forks += 1;
+        if self.workers.len() < per_worker.len() {
+            self.workers.resize(per_worker.len(), (0.0, 0));
+        }
+        for (slot, &(busy, tasks)) in per_worker.iter().enumerate() {
+            self.workers[slot].0 += busy;
+            self.workers[slot].1 += tasks;
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("forks".into(), Json::Int(self.forks as i64)),
+            (
+                "workers".into(),
+                Json::Arr(
+                    self.workers
+                        .iter()
+                        .map(|&(busy, tasks)| {
+                            Json::Obj(vec![
+                                ("busy_seconds".into(), Json::Float(busy)),
+                                ("tasks".into(), Json::Int(tasks as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One job's complete observation record.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// What was traced (job kind name or CLI program name).
+    pub job: String,
+    /// Engine threads the traced run was allowed to use.
+    pub threads: usize,
+    /// Wall-clock from capture start to finish.
+    pub seconds: f64,
+    pub counters: Counters,
+    pub metrics: Metrics,
+    pub phases: Phases,
+    /// V-cycle levels in the order the engine visited them.
+    pub levels: Vec<LevelReport>,
+    pub pool: PoolUtil,
+}
+
+impl Trace {
+    pub(super) fn new(job: &str, threads: usize) -> Trace {
+        Trace { job: job.to_string(), threads, ..Default::default() }
+    }
+
+    pub(super) fn finalize(&mut self) {
+        self.counters.sort_by_key(|&(n, _)| n);
+        self.metrics.sort_by_key(|&(n, _)| n);
+        self.phases.sort_by_key(|&(n, _, _)| n);
+    }
+
+    /// Global counter lookup.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// Global metric lookup.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| *n == name).map(|&(_, v)| v)
+    }
+
+    /// Levels of one stage, in visit order.
+    pub fn levels_of(&self, stage: &str) -> impl Iterator<Item = &LevelReport> {
+        self.levels.iter().filter(move |l| l.stage == stage)
+    }
+
+    /// Render the full V-cycle report as a JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("job".into(), Json::Str(self.job.clone())),
+            ("threads".into(), Json::Int(self.threads as i64)),
+            ("seconds".into(), Json::Float(self.seconds)),
+            ("phases".into(), phases_json(&self.phases)),
+            ("counters".into(), counters_json(&self.counters)),
+        ];
+        if !self.metrics.is_empty() {
+            fields.push(("metrics".into(), metrics_json(&self.metrics)));
+        }
+        fields.push((
+            "levels".into(),
+            Json::Arr(self.levels.iter().map(|l| l.to_json()).collect()),
+        ));
+        fields.push(("pool".into(), self.pool.to_json()));
+        Json::Obj(fields)
+    }
+}
+
+fn counters_json(counters: &Counters) -> Json {
+    Json::Obj(counters.iter().map(|&(n, v)| (n.to_string(), Json::Int(v as i64))).collect())
+}
+
+fn metrics_json(metrics: &Metrics) -> Json {
+    Json::Obj(metrics.iter().map(|&(n, v)| (n.to_string(), Json::Float(v))).collect())
+}
+
+fn phases_json(phases: &Phases) -> Json {
+    Json::Obj(
+        phases
+            .iter()
+            .map(|&(n, secs, calls)| {
+                (
+                    n.to_string(),
+                    Json::Obj(vec![
+                        ("seconds".into(), Json::Float(secs)),
+                        ("calls".into(), Json::Int(calls as i64)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_absorbs_across_forks() {
+        let mut p = PoolUtil::default();
+        p.absorb(&[(0.5, 3), (0.2, 1)]);
+        p.absorb(&[(0.1, 2)]);
+        assert_eq!(p.forks, 2);
+        assert_eq!(p.workers.len(), 2);
+        assert_eq!(p.workers[0].1, 5);
+        assert_eq!(p.workers[1].1, 1);
+        assert!((p.workers[0].0 - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_json_has_report_shape() {
+        let mut t = Trace::new("partition", 4);
+        t.seconds = 1.5;
+        t.phases.push(("coarsening", 0.5, 3));
+        t.counters.push(("repetitions", 2));
+        let mut lvl = LevelReport::new("coarsen", 0, 100, 250);
+        lvl.metrics.push(("ratio", 0.5));
+        lvl.counters.push(("lp_iterations", 7));
+        t.levels.push(lvl);
+        t.pool.absorb(&[(0.1, 4)]);
+        let j = t.to_json();
+        assert_eq!(j.get("job").unwrap().as_str(), Some("partition"));
+        assert_eq!(j.get("threads").unwrap().as_i64(), Some(4));
+        let levels = j.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0].get("nodes").unwrap().as_i64(), Some(100));
+        assert_eq!(
+            levels[0].get("metrics").unwrap().get("ratio").unwrap().as_f64(),
+            Some(0.5)
+        );
+        let pool = j.get("pool").unwrap();
+        assert_eq!(pool.get("forks").unwrap().as_i64(), Some(1));
+        assert_eq!(pool.get("workers").unwrap().as_arr().unwrap().len(), 1);
+        // rendered line must itself be valid JSON
+        let line = j.render();
+        assert_eq!(crate::service::json::parse(&line).unwrap(), j);
+    }
+
+    #[test]
+    fn finalize_sorts_for_diff_stability() {
+        let mut t = Trace::new("x", 1);
+        t.counters.push(("zeta", 1));
+        t.counters.push(("alpha", 2));
+        t.phases.push(("z_phase", 0.1, 1));
+        t.phases.push(("a_phase", 0.2, 1));
+        t.finalize();
+        assert_eq!(t.counters[0].0, "alpha");
+        assert_eq!(t.phases[0].0, "a_phase");
+    }
+}

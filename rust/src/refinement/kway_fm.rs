@@ -152,6 +152,11 @@ pub fn one_round_par(
         p.move_node(g, v, from);
     }
     debug_assert!(p.validate(g).is_ok());
+    if crate::obs::capturing() {
+        crate::obs::count("fm_rounds", 1);
+        crate::obs::count("fm_moves", best_len as u64);
+        crate::obs::count("fm_rolled_back", (journal.len() - best_len) as u64);
+    }
     best_gain
 }
 

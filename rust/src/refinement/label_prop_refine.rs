@@ -52,6 +52,12 @@ pub fn refine_par(
     let mut block_id: u32 = 0;
     let mut total = 0i64;
     let mut prev_moves = n; // forces the first iteration serial
+    // observability tallies, flushed once after the loop (see
+    // lp_clustering for the overhead rationale)
+    let mut obs_iterations = 0u64;
+    let mut obs_moves = 0u64;
+    let mut obs_fresh = 0u64;
+    let mut obs_recomputed = 0u64;
     for _ in 0..iterations.max(1) {
         let order = rng.permutation(n);
         let mut round = 0i64;
@@ -84,12 +90,14 @@ pub fn refine_par(
                         _ => None,
                     };
                     let mv = if let Some(cands) = fresh {
+                        obs_fresh += 1;
                         let own = p.block_of(v);
                         let vw = g.node_weight(v);
                         let own_conn =
                             cands.iter().find(|&&(b, _)| b == own).map(|&(_, c)| c).unwrap_or(0);
                         select_best(p, own, vw, own_conn, cands.iter().copied(), bounds)
                     } else {
+                        obs_recomputed += 1;
                         scratch.best_move(g, p, v, bounds)
                     };
                     let Some((to, gain)) = mv else {
@@ -107,10 +115,18 @@ pub fn refine_par(
             }
         }
         total += round;
+        obs_iterations += 1;
+        obs_moves += moves as u64;
         prev_moves = moves;
         if round == 0 {
             break;
         }
+    }
+    if crate::obs::capturing() {
+        crate::obs::count("lp_refine_iterations", obs_iterations);
+        crate::obs::count("lp_refine_moves", obs_moves);
+        crate::obs::count("lp_refine_snapshot_fresh", obs_fresh);
+        crate::obs::count("lp_refine_snapshot_recomputed", obs_recomputed);
     }
     total
 }

@@ -24,42 +24,56 @@ pub fn refine(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) -> i64 
     let bounds = vec![bound; cfg.k as usize];
     let mut total = 0i64;
     if cfg.use_lp_refinement {
-        total +=
-            label_prop_refine::refine_par(g, p, &bounds, cfg.lp_iterations.min(5), rng, threads);
+        total += crate::obs::phase("refine_lp", || {
+            label_prop_refine::refine_par(g, p, &bounds, cfg.lp_iterations.min(5), rng, threads)
+        });
     }
-    for _ in 0..cfg.kway_fm_rounds {
-        let gained = kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
-        total += gained;
-        if gained == 0 {
-            break;
+    total += crate::obs::phase("refine_kway_fm", || {
+        let mut fm_total = 0i64;
+        for _ in 0..cfg.kway_fm_rounds {
+            let gained =
+                kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
+            fm_total += gained;
+            if gained == 0 {
+                break;
+            }
         }
-    }
+        fm_total
+    });
     if cfg.use_multitry_fm {
         // localized searches use a tighter stopping limit than global FM
         // (§2.1: "a more localized search"); a quarter of the global limit
         // keeps each try small — see EXPERIMENTS.md §Perf L3.
         let local_limit = (cfg.fm_unsuccessful_limit / 4).max(15);
-        total += multitry_fm::refine(g, p, &bounds, cfg.multitry_rounds, local_limit, rng);
+        total += crate::obs::phase("refine_multitry", || {
+            multitry_fm::refine(g, p, &bounds, cfg.multitry_rounds, local_limit, rng)
+        });
     }
     if cfg.use_pairwise_fm {
-        total += quotient::pairwise_fm(g, p, &bounds, cfg.fm_unsuccessful_limit, rng);
+        total += crate::obs::phase("refine_pairwise", || {
+            quotient::pairwise_fm(g, p, &bounds, cfg.fm_unsuccessful_limit, rng)
+        });
     }
     if cfg.use_flow_refinement {
-        let flow_gain = flow::flow_refine::refine_all_pairs(
-            g,
-            p,
-            bound,
-            cfg.flow_region_factor,
-            cfg.use_most_balanced_cut,
-            rng,
-        );
-        total += flow_gain;
-        if flow_gain > 0 {
-            // min-cut corridors can leave jagged boundaries that seed the
-            // next-finer level badly; one FM smoothing round fixes that
-            // (§Perf: +0 cost when flow found nothing)
-            total += kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
-        }
+        total += crate::obs::phase("refine_flow", || {
+            let flow_gain = flow::flow_refine::refine_all_pairs(
+                g,
+                p,
+                bound,
+                cfg.flow_region_factor,
+                cfg.use_most_balanced_cut,
+                rng,
+            );
+            let mut gained = flow_gain;
+            if flow_gain > 0 {
+                // min-cut corridors can leave jagged boundaries that seed the
+                // next-finer level badly; one FM smoothing round fixes that
+                // (§Perf: +0 cost when flow found nothing)
+                gained +=
+                    kway_fm::refine_par(g, p, &bounds, cfg.fm_unsuccessful_limit, rng, threads);
+            }
+            gained
+        });
     }
     total
 }

@@ -142,6 +142,7 @@ mod tests {
         lines.push(fig4_line("p1", 0));
         lines.push(fig4_line("p2", 0)); // identical → cached (memo or coalesced)
         lines.push(r#"{"id":"s1","job":"stats"}"#.to_string());
+        lines.push(r#"{"id":"m1","job":"metrics"}"#.to_string());
         lines.push("this is not json".to_string());
         let payload = lines.join("\n") + "\n";
         sock.write_all(payload.as_bytes()).unwrap();
@@ -153,7 +154,7 @@ mod tests {
         for line in reader.lines() {
             responses.push(json::parse(&line.unwrap()).unwrap());
         }
-        assert_eq!(responses.len(), 4);
+        assert_eq!(responses.len(), 5);
         let by_id = |id: &str| {
             responses
                 .iter()
@@ -177,6 +178,13 @@ mod tests {
         let s1 = by_id("s1");
         assert_eq!(s1.get("ok").unwrap().as_bool(), Some(true));
         assert!(s1.get("p50_latency").is_some());
+        let m1 = by_id("m1");
+        assert_eq!(m1.get("ok").unwrap().as_bool(), Some(true));
+        let exposition = m1.get("metrics").unwrap().as_str().unwrap();
+        assert!(
+            exposition.contains("# TYPE kahip_job_latency_seconds histogram"),
+            "metrics job must return Prometheus text through the JSON envelope"
+        );
         let bad = by_id("?");
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
         assert!(bad.get("error").unwrap().as_str().unwrap().contains("bad request"));

@@ -59,6 +59,9 @@ pub struct ServiceConfig {
     /// oversubscribing `workers × engine-threads`. Never part of the memo
     /// key — the engine is deterministic at any thread count.
     pub threads_per_job: usize,
+    /// `--trace-json` sink: when set, every executed job's V-cycle report
+    /// is appended to this file as one JSON line (`{"id","job","trace"}`).
+    pub trace_log: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -69,6 +72,7 @@ impl Default for ServiceConfig {
             max_graphs: 128,
             max_results: 4096,
             threads_per_job: 0,
+            trace_log: None,
         }
     }
 }
@@ -95,6 +99,7 @@ impl Service {
             cfg.queue_capacity,
             Arc::clone(&store),
             threads_per_job,
+            cfg.trace_log.as_deref(),
         );
         Service { store, scheduler }
     }
@@ -263,6 +268,65 @@ mod tests {
             }
             other => panic!("wrong output {other:?}"),
         }
+    }
+
+    #[test]
+    fn metrics_job_answers_prometheus_text() {
+        let svc = Service::new(ServiceConfig::default());
+        svc.run_sync(grid_request("warm", 2, 6));
+        let req = JobRequest {
+            id: "m".into(),
+            graph: GraphPayload::None,
+            spec: JobSpec::defaults(JobKind::Metrics),
+        };
+        let res = svc.run_sync(req);
+        match res.outcome.unwrap().as_ref() {
+            JobOutput::Metrics(text) => {
+                assert!(text.contains("# TYPE kahip_jobs_completed_total counter"));
+                assert!(text.contains("kahip_jobs_completed_total 1"));
+                assert!(text.contains(
+                    "kahip_job_latency_seconds_count{kind=\"partition\"} 1"
+                ));
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+        // introspection stays out of the job ledger
+        assert_eq!(svc.stats().submitted, 1);
+    }
+
+    #[test]
+    fn traced_job_returns_vcycle_report_and_identical_partition() {
+        // 16x16 grid: large enough that the hierarchy has levels
+        // (contraction stops at contraction_limit_factor * k = 40 nodes)
+        let g = generators::grid2d(16, 16);
+        let request = |id: &str, trace: bool| JobRequest {
+            id: id.into(),
+            graph: GraphPayload::from_graph(&g),
+            spec: JobSpec { k: 2, seed: 11, trace, ..JobSpec::defaults(JobKind::Partition) },
+        };
+        let svc = Service::new(ServiceConfig { workers: 1, ..Default::default() });
+        let plain = svc.run_sync(request("p", false));
+        let traced = svc.run_sync(request("t", true));
+        // tracing must not perturb the result, and must not be served
+        // from the memo the plain run populated
+        assert!(!traced.cached, "traced jobs bypass the cache");
+        let (a, b) = match (
+            plain.outcome.unwrap().as_ref(),
+            traced.outcome.as_ref().unwrap().as_ref(),
+        ) {
+            (JobOutput::Partition { part: a, .. }, JobOutput::Partition { part: b, .. }) => {
+                (a.clone(), b.clone())
+            }
+            _ => panic!("wrong outputs"),
+        };
+        assert_eq!(a, b, "trace-on and trace-off partitions must be byte-identical");
+        let trace = traced.trace.expect("trace attached when requested");
+        assert_eq!(trace.job, "partition");
+        assert!(!trace.levels.is_empty(), "V-cycle report has levels");
+        let lvl = trace.levels_of("uncoarsen").next().expect("uncoarsen levels present");
+        assert!(lvl.nodes > 0 && lvl.edges > 0);
+        assert!(lvl.metric("cut").is_some() && lvl.metric("balance").is_some());
+        assert!(!trace.phases.is_empty(), "global phase times present");
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! | — (§4.8 SPAC)            | `edge_partition`   |
 //! | `process_mapping`        | `process_mapping`  |
 //! | — (introspection)        | `stats`            |
+//! | — (introspection)        | `metrics`          |
+//!
+//! Any graph job may set `"trace": true` to receive the engine's V-cycle
+//! report ([`crate::obs::Trace`]) in the response; `metrics` returns the
+//! service counters in Prometheus text exposition format.
 
 use super::json::{self, Json};
 use super::stats::ServiceStats;
@@ -32,9 +37,24 @@ pub enum JobKind {
     ProcessMapping,
     /// Answered synchronously by the service (never queued).
     Stats,
+    /// Prometheus text exposition of the service counters; answered
+    /// synchronously like `stats`.
+    Metrics,
 }
 
 impl JobKind {
+    /// Every kind in protocol order — the slot layout of the per-kind
+    /// latency histograms in [`super::stats`].
+    pub const ALL: [JobKind; 7] = [
+        JobKind::Partition,
+        JobKind::Separator,
+        JobKind::Ordering,
+        JobKind::EdgePartition,
+        JobKind::ProcessMapping,
+        JobKind::Stats,
+        JobKind::Metrics,
+    ];
+
     pub fn parse(s: &str) -> Option<JobKind> {
         match s {
             "partition" => Some(JobKind::Partition),
@@ -43,6 +63,7 @@ impl JobKind {
             "edge_partition" => Some(JobKind::EdgePartition),
             "process_mapping" => Some(JobKind::ProcessMapping),
             "stats" => Some(JobKind::Stats),
+            "metrics" => Some(JobKind::Metrics),
             _ => None,
         }
     }
@@ -55,7 +76,19 @@ impl JobKind {
             JobKind::EdgePartition => "edge_partition",
             JobKind::ProcessMapping => "process_mapping",
             JobKind::Stats => "stats",
+            JobKind::Metrics => "metrics",
         }
+    }
+
+    /// Index of this kind in [`JobKind::ALL`].
+    pub fn slot(&self) -> usize {
+        JobKind::ALL.iter().position(|k| k == self).expect("every kind is in ALL")
+    }
+
+    /// Whether this kind operates on a graph. Introspection kinds
+    /// (`stats`, `metrics`) do not and are answered without queueing.
+    pub fn needs_graph(&self) -> bool {
+        !matches!(self, JobKind::Stats | JobKind::Metrics)
     }
 }
 
@@ -84,6 +117,11 @@ pub struct JobSpec {
     pub distances: Vec<i64>,
     /// Recursive-bisection mapping instead of global multisection.
     pub map_bisection: bool,
+    /// Attach the engine's V-cycle report ([`crate::obs::Trace`]) to the
+    /// result. Excluded from the memo fingerprint — tracing never changes
+    /// the output — but traced jobs bypass the cache so the report always
+    /// describes a real execution.
+    pub trace: bool,
 }
 
 impl JobSpec {
@@ -104,6 +142,7 @@ impl JobSpec {
             hierarchy: Vec::new(),
             distances: Vec::new(),
             map_bisection: false,
+            trace: false,
         }
     }
 
@@ -120,9 +159,13 @@ impl JobSpec {
     /// partition job with a wall-clock `time_limit` repeats passes until
     /// the deadline, so its result depends on machine load — serving it
     /// from the cache would silently skip the search the client paid
-    /// for. Everything else is deterministic given the seed.
+    /// for. Traced jobs also bypass the cache: the client asked to watch
+    /// an execution, and a memoized result has none to report (the
+    /// *output* is still identical, which is why `trace` stays out of
+    /// [`JobSpec::fingerprint`]). Everything else is deterministic given
+    /// the seed.
     pub fn cacheable(&self) -> bool {
-        self.kind != JobKind::Stats && self.time_limit == 0.0
+        self.kind.needs_graph() && self.time_limit == 0.0 && !self.trace
     }
 
     /// Memo key part: every knob that can influence the job's output. Two
@@ -160,6 +203,7 @@ impl JobSpec {
                 )
             }
             JobKind::Stats => "stats".into(),
+            JobKind::Metrics => "metrics".into(),
         }
     }
 }
@@ -234,6 +278,7 @@ impl JobRequest {
             spec.mode =
                 Mode::parse(name).ok_or_else(|| format!("unknown preconfiguration '{name}'"))?;
         }
+        spec.trace = flag(&v, "trace")?;
         match kind {
             JobKind::Partition => {
                 spec.k = require_k(&v)?;
@@ -267,10 +312,10 @@ impl JobRequest {
                 spec.map_bisection = flag(&v, "bisection")?;
                 spec.k = spec.hierarchy.iter().product::<usize>() as u32;
             }
-            JobKind::Stats => {}
+            JobKind::Stats | JobKind::Metrics => {}
         }
 
-        let graph = if kind == JobKind::Stats {
+        let graph = if !kind.needs_graph() {
             GraphPayload::None
         } else if let Some(x) = v.get("xadj") {
             let xadj = x.to_u32_vec("xadj")?;
@@ -333,15 +378,18 @@ impl JobRequest {
                     fields.push(("bisection".into(), Json::Bool(true)));
                 }
             }
-            JobKind::Stats => {}
+            JobKind::Stats | JobKind::Metrics => {}
         }
-        if self.spec.kind != JobKind::Stats {
+        if self.spec.kind.needs_graph() {
             fields.push(("imbalance".into(), Json::Float(self.spec.epsilon)));
             fields.push(("seed".into(), Json::Int(self.spec.seed as i64)));
             fields.push((
                 "preconfiguration".into(),
                 Json::Str(self.spec.mode.name().into()),
             ));
+            if self.spec.trace {
+                fields.push(("trace".into(), Json::Bool(true)));
+            }
             match &self.graph {
                 GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => {
                     fields.push(("xadj".into(), Json::from_u32s(xadj)));
@@ -383,6 +431,8 @@ pub enum JobOutput {
     EdgePartition { assignment: Vec<u32>, vertex_cut: i64, replication: f64 },
     Mapping { edgecut: i64, qap: i64, part: Vec<u32> },
     Stats(ServiceStats),
+    /// Prometheus text exposition of the service counters.
+    Metrics(String),
 }
 
 /// Outcome of one request, tagged with its id.
@@ -399,6 +449,9 @@ pub struct JobResult {
     /// Wall-clock seconds spent executing (0 for cache hits).
     pub seconds: f64,
     pub outcome: Result<Arc<JobOutput>, String>,
+    /// The engine's V-cycle report, present iff the request set
+    /// `"trace": true` and the job executed.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 impl JobResult {
@@ -414,6 +467,7 @@ impl JobResult {
             cached: false,
             seconds: 0.0,
             outcome: Err(msg.into()),
+            trace: None,
         }
     }
 
@@ -466,6 +520,12 @@ impl JobResult {
                             fields.extend(stat_fields);
                         }
                     }
+                    JobOutput::Metrics(text) => {
+                        fields.push(("metrics".into(), Json::Str(text.clone())));
+                    }
+                }
+                if let Some(t) = &self.trace {
+                    fields.push(("trace".into(), t.to_json()));
                 }
             }
         }
@@ -571,8 +631,27 @@ pub fn execute_with_threads(
             );
             Ok(JobOutput::Mapping { edgecut: out.edgecut, qap: out.qap, part: out.part })
         }
-        JobKind::Stats => Err("stats jobs are answered by the service, not the pool".into()),
+        JobKind::Stats | JobKind::Metrics => {
+            Err("introspection jobs are answered by the service, not the pool".into())
+        }
     }
+}
+
+/// [`execute_with_threads`] under a trace capture when the spec asks for
+/// one. Tracing is pure observation — the output is byte-identical to the
+/// untraced call (pinned by `tests/determinism.rs`) — so this returns the
+/// usual outcome plus the [`crate::obs::Trace`] when one was recorded.
+pub fn execute_traced(
+    g: &Graph,
+    spec: &JobSpec,
+    threads: usize,
+) -> (Result<JobOutput, String>, Option<crate::obs::Trace>) {
+    if !spec.trace {
+        return (execute_with_threads(g, spec, threads), None);
+    }
+    let cap = crate::obs::Capture::start(spec.kind.name(), threads);
+    let out = execute_with_threads(g, spec, threads);
+    (out, Some(cap.finish()))
 }
 
 #[cfg(test)]
@@ -651,6 +730,61 @@ mod tests {
         let r = JobRequest::from_json(r#"{"id":"s","job":"stats"}"#).unwrap();
         assert!(matches!(r.graph, GraphPayload::None));
         assert_eq!(r.spec.kind, JobKind::Stats);
+        let r = JobRequest::from_json(r#"{"id":"m","job":"metrics"}"#).unwrap();
+        assert!(matches!(r.graph, GraphPayload::None));
+        assert_eq!(r.spec.kind, JobKind::Metrics);
+        assert!(!r.spec.cacheable());
+    }
+
+    #[test]
+    fn trace_flag_roundtrips_and_stays_out_of_the_fingerprint() {
+        let plain = JobRequest::from_json(&fig4_line("i", 2, 0)).unwrap();
+        let line = fig4_line("t", 2, 0)
+            .replace(r#""job":"partition""#, r#""job":"partition","trace":true"#);
+        let traced = JobRequest::from_json(&line).unwrap();
+        assert!(traced.spec.trace);
+        assert!(!plain.spec.trace);
+        // identical output ⇒ identical memo key; but traced runs bypass it
+        assert_eq!(traced.spec.fingerprint(), plain.spec.fingerprint());
+        assert!(plain.spec.cacheable());
+        assert!(!traced.spec.cacheable());
+        let again = JobRequest::from_json(&traced.to_json_line()).unwrap();
+        assert!(again.spec.trace, "trace flag must survive to_json_line");
+    }
+
+    #[test]
+    fn kind_slots_match_all_order() {
+        for (i, kind) in JobKind::ALL.iter().enumerate() {
+            assert_eq!(kind.slot(), i);
+            assert_eq!(JobKind::parse(kind.name()), Some(*kind));
+        }
+        assert!(!JobKind::Stats.needs_graph());
+        assert!(!JobKind::Metrics.needs_graph());
+        assert!(JobKind::Partition.needs_graph());
+    }
+
+    #[test]
+    fn traced_result_embeds_the_vcycle_report() {
+        let trace =
+            crate::obs::Trace { job: "partition".into(), threads: 2, ..Default::default() };
+        let ok = JobResult {
+            id: "t1".into(),
+            kind: Some(JobKind::Partition),
+            graph_hash: None,
+            cached: false,
+            seconds: 0.1,
+            outcome: Ok(Arc::new(JobOutput::Partition {
+                edgecut: 3,
+                balance: 1.0,
+                part: vec![0, 1],
+            })),
+            trace: Some(trace),
+        };
+        let line = ok.to_json_line();
+        let v = super::super::json::parse(&line).unwrap();
+        let t = v.get("trace").expect("trace object present");
+        assert_eq!(t.get("job").unwrap().as_str(), Some("partition"));
+        assert_eq!(t.get("threads").unwrap().as_i64(), Some(2));
     }
 
     #[test]
@@ -728,6 +862,7 @@ mod tests {
                 balance: 1.0,
                 part: vec![0, 1],
             })),
+            trace: None,
         };
         let line = ok.to_json_line();
         assert!(line.contains(r#""ok":true"#));

@@ -121,6 +121,11 @@ struct Shared {
     /// Engine threads each worker hands to `execute_with_threads` so the
     /// pool shares the machine instead of oversubscribing it (0 = auto).
     threads_per_job: usize,
+    /// `--trace-json` sink: when set, every executed job is traced and
+    /// its V-cycle report appended here as one JSON line (in addition to
+    /// any client-requested trace in the response). IO errors are
+    /// swallowed — observability must never fail a job.
+    trace_sink: Option<Mutex<std::fs::File>>,
 }
 
 /// The queue + worker pool. Owned by [`super::Service`].
@@ -135,7 +140,17 @@ impl Scheduler {
         capacity: usize,
         store: Arc<GraphStore>,
         threads_per_job: usize,
+        trace_log: Option<&str>,
     ) -> Scheduler {
+        let trace_sink = trace_log.and_then(|path| {
+            match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+                Ok(f) => Some(Mutex::new(f)),
+                Err(e) => {
+                    eprintln!("kahip serve: cannot open trace log {path}: {e}");
+                    None
+                }
+            }
+        });
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
@@ -148,6 +163,7 @@ impl Scheduler {
             store,
             stats: StatsCollector::new(),
             threads_per_job,
+            trace_sink,
         });
         let workers = (0..workers.max(1))
             .map(|_| {
@@ -169,18 +185,23 @@ impl Scheduler {
     ) -> Result<CancelHandle, SubmitError> {
         let shared = &self.shared;
 
-        // stats jobs are answered synchronously — never queued, and not
-        // counted in the job ledger (submitted must stay reconcilable
-        // with completed + failed + cancelled + rejected)
-        if req.spec.kind == JobKind::Stats {
+        // introspection jobs (stats, metrics) are answered synchronously —
+        // never queued, and not counted in the job ledger (submitted must
+        // stay reconcilable with completed + failed + cancelled + rejected)
+        if !req.spec.kind.needs_graph() {
             let snap = self.snapshot();
+            let outcome = match req.spec.kind {
+                JobKind::Metrics => protocol::JobOutput::Metrics(snap.to_prometheus()),
+                _ => protocol::JobOutput::Stats(snap),
+            };
             let _ = tx.send(JobResult {
                 id: req.id,
-                kind: Some(JobKind::Stats),
+                kind: Some(req.spec.kind),
                 graph_hash: None,
                 cached: false,
                 seconds: 0.0,
-                outcome: Ok(Arc::new(protocol::JobOutput::Stats(snap))),
+                outcome: Ok(Arc::new(outcome)),
+                trace: None,
             });
             return Ok(CancelHandle::noop());
         }
@@ -208,7 +229,7 @@ impl Scheduler {
             Ok(x) => x,
             Err(e) => {
                 shared.stats.submitted();
-                shared.stats.finished(false, false, Duration::ZERO);
+                shared.stats.finished(req.spec.kind, false, false, Duration::ZERO);
                 let mut res = JobResult::error(req.id, Some(req.spec.kind), e);
                 res.graph_hash = None;
                 let _ = tx.send(res);
@@ -266,7 +287,7 @@ impl Scheduler {
                 };
                 if let Some(out) = memo {
                     shared.stats.submitted();
-                    shared.stats.finished(true, false, Duration::ZERO);
+                    shared.stats.finished(req.spec.kind, true, false, Duration::ZERO);
                     let _ = tx.send(JobResult {
                         id: req.id,
                         kind: Some(req.spec.kind),
@@ -274,6 +295,7 @@ impl Scheduler {
                         cached: true,
                         seconds: 0.0,
                         outcome: Ok(out),
+                        trace: None,
                     });
                     return Ok(CancelHandle::noop());
                 }
@@ -365,12 +387,12 @@ fn worker_loop(shared: &Shared) {
         if task.cancel.load(Ordering::SeqCst) {
             let waiters =
                 if task.registered { remove_inflight(shared, &key) } else { Vec::new() };
-            shared.stats.finished(false, true, task.enqueued.elapsed());
+            shared.stats.finished(task.spec.kind, false, true, task.enqueued.elapsed());
             let _ = task
                 .tx
                 .send(JobResult::error(task.id, Some(task.spec.kind), "cancelled"));
             for w in waiters {
-                shared.stats.finished(false, true, w.enqueued.elapsed());
+                shared.stats.finished(w.kind, false, true, w.enqueued.elapsed());
                 let _ = w.tx.send(JobResult::error(w.id, Some(w.kind), "cancelled"));
             }
             continue;
@@ -382,20 +404,25 @@ fn worker_loop(shared: &Shared) {
         // never memoized
         let memoized =
             if task.spec.cacheable() { shared.store.lookup_quiet(&key) } else { None };
-        let (outcome, cached, seconds) = match memoized {
-            Some(out) => (Ok(out), true, 0.0),
+        let (outcome, cached, seconds, trace) = match memoized {
+            Some(out) => (Ok(out), true, 0.0, None),
             None => {
+                // the --trace-json sink traces every executed job, even
+                // when the client did not ask for a trace in its response
+                let spec = if shared.trace_sink.is_some() && !task.spec.trace {
+                    let mut forced = task.spec.clone();
+                    forced.trace = true;
+                    std::borrow::Cow::Owned(forced)
+                } else {
+                    std::borrow::Cow::Borrowed(&task.spec)
+                };
                 let t0 = Instant::now();
                 // contain panics from the partitioning pipeline: the
                 // worker must survive, and the inflight entry below must
                 // always be resolved — a leaked entry would hang every
                 // future identical request on a job nobody owns
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    protocol::execute_with_threads(
-                        &task.graph,
-                        &task.spec,
-                        shared.threads_per_job,
-                    )
+                    protocol::execute_traced(&task.graph, &spec, shared.threads_per_job)
                 }))
                 .unwrap_or_else(|payload| {
                     let msg = payload
@@ -403,23 +430,36 @@ fn worker_loop(shared: &Shared) {
                         .map(|s| s.to_string())
                         .or_else(|| payload.downcast_ref::<String>().cloned())
                         .unwrap_or_else(|| "unknown panic".into());
-                    Err(format!("job panicked: {msg}"))
+                    (Err(format!("job panicked: {msg}")), None)
                 });
+                let (run, trace) = run;
+                if let (Some(sink), Some(t)) = (&shared.trace_sink, &trace) {
+                    let line = super::json::Json::Obj(vec![
+                        ("id".into(), super::json::Json::Str(task.id.clone())),
+                        ("job".into(), super::json::Json::Str(task.spec.kind.name().into())),
+                        ("trace".into(), t.to_json()),
+                    ])
+                    .render();
+                    use std::io::Write as _;
+                    let _ = writeln!(sink.lock().unwrap(), "{line}");
+                }
+                // the response carries the trace only if the client asked
+                let trace = if task.spec.trace { trace } else { None };
                 match run {
                     Ok(out) => {
                         let out = Arc::new(out);
                         if task.spec.cacheable() {
                             shared.store.insert(&key, Arc::clone(&out));
                         }
-                        (Ok(out), false, t0.elapsed().as_secs_f64())
+                        (Ok(out), false, t0.elapsed().as_secs_f64(), trace)
                     }
-                    Err(e) => (Err(e), false, t0.elapsed().as_secs_f64()),
+                    Err(e) => (Err(e), false, t0.elapsed().as_secs_f64(), trace),
                 }
             }
         };
 
         let waiters = if task.registered { remove_inflight(shared, &key) } else { Vec::new() };
-        shared.stats.finished(outcome.is_ok(), false, task.enqueued.elapsed());
+        shared.stats.finished(task.spec.kind, outcome.is_ok(), false, task.enqueued.elapsed());
         let _ = task.tx.send(JobResult {
             id: task.id,
             kind: Some(task.spec.kind),
@@ -427,9 +467,10 @@ fn worker_loop(shared: &Shared) {
             cached,
             seconds,
             outcome: outcome.clone(),
+            trace,
         });
         for w in waiters {
-            shared.stats.finished(outcome.is_ok(), false, w.enqueued.elapsed());
+            shared.stats.finished(w.kind, outcome.is_ok(), false, w.enqueued.elapsed());
             let _ = w.tx.send(JobResult {
                 id: w.id,
                 kind: Some(w.kind),
@@ -437,6 +478,7 @@ fn worker_loop(shared: &Shared) {
                 cached: true,
                 seconds: 0.0,
                 outcome: outcome.clone(),
+                trace: None,
             });
         }
     }

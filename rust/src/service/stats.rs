@@ -1,15 +1,21 @@
-//! Service observability: counters + a latency reservoir, snapshotted as
-//! [`ServiceStats`] (the payload of a `{"job":"stats"}` request and of the
-//! end-of-session report `kahip serve` prints to stderr).
+//! Service observability: counters + per-[`JobKind`] latency histograms,
+//! snapshotted as [`ServiceStats`] (the payload of a `{"job":"stats"}`
+//! request, the Prometheus document of a `{"job":"metrics"}` request, and
+//! the end-of-session report `kahip serve` prints to stderr).
+//!
+//! Latencies land in log-bucketed [`LogHistogram`]s — O(1) memory however
+//! long the service runs (the old bounded reservoir forgot everything
+//! older than its window), mergeable across kinds for the global
+//! percentiles, and directly exposable as Prometheus histogram series.
+//! Quantiles are bucket-resolution: within a factor of 2 of exact.
 
 use super::json::Json;
+use super::protocol::JobKind;
 use super::store::StoreCounters;
-use crate::util::stat;
+use crate::obs::prometheus::PromWriter;
+use crate::util::stat::LogHistogram;
 use std::sync::Mutex;
 use std::time::Duration;
-
-/// Completed-job latencies kept for percentile estimation (ring buffer).
-const LATENCY_RESERVOIR: usize = 4096;
 
 /// A point-in-time snapshot of the service.
 #[derive(Clone, Debug, Default)]
@@ -40,9 +46,13 @@ pub struct ServiceStats {
     pub graphs_reused: u64,
     pub results_stored: usize,
     /// Median end-to-end job latency (submit → result), seconds.
+    /// Bucket-resolution estimate from the merged histograms.
     pub p50_latency: f64,
     /// 99th-percentile end-to-end job latency, seconds.
     pub p99_latency: f64,
+    /// Per-kind latency histograms in [`JobKind::ALL`] order (the
+    /// Prometheus `kahip_job_latency_seconds{kind=...}` series).
+    pub latency: Vec<(&'static str, LogHistogram)>,
 }
 
 impl ServiceStats {
@@ -111,9 +121,65 @@ impl ServiceStats {
             ("p99_latency".into(), Json::Float(self.p99_latency)),
         ])
     }
+
+    /// Prometheus text exposition of the snapshot — the payload of a
+    /// `{"job":"metrics"}` request. The schema is fixed: every series is
+    /// emitted on every scrape (histograms included, zero-count or not),
+    /// so dashboards never see metrics appear mid-session.
+    pub fn to_prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        w.gauge("kahip_workers", "Worker threads executing jobs.", self.workers as f64);
+        w.gauge("kahip_queue_depth", "Jobs currently queued.", self.queue_depth as f64);
+        w.gauge("kahip_queue_capacity", "Job queue capacity.", self.queue_capacity as f64);
+        w.counter("kahip_jobs_submitted_total", "Accepted job submissions.", self.submitted);
+        w.counter("kahip_jobs_completed_total", "Jobs finished ok.", self.completed);
+        w.counter("kahip_jobs_failed_total", "Jobs finished with an error.", self.failed);
+        w.counter("kahip_jobs_cancelled_total", "Jobs cancelled while queued.", self.cancelled);
+        w.counter(
+            "kahip_jobs_rejected_total",
+            "Submissions refused by backpressure.",
+            self.rejected,
+        );
+        w.counter("kahip_cache_hits_total", "Result-memo hits at submit time.", self.cache_hits);
+        w.counter("kahip_cache_misses_total", "Result-memo misses.", self.cache_misses);
+        w.counter(
+            "kahip_jobs_coalesced_total",
+            "Submissions coalesced onto an in-flight job.",
+            self.coalesced,
+        );
+        w.gauge(
+            "kahip_cache_hit_rate",
+            "Fraction of lookups served without recomputation.",
+            self.cache_hit_rate(),
+        );
+        w.gauge(
+            "kahip_graphs_stored",
+            "Graphs in the content-addressed store.",
+            self.graphs_stored as f64,
+        );
+        w.counter(
+            "kahip_graphs_parsed_total",
+            "Inline graphs parsed and interned.",
+            self.graphs_parsed,
+        );
+        w.counter(
+            "kahip_graphs_reused_total",
+            "Graph-store hits by content hash.",
+            self.graphs_reused,
+        );
+        w.gauge("kahip_results_stored", "Memoized results held.", self.results_stored as f64);
+        for (kind, h) in &self.latency {
+            w.histogram(
+                "kahip_job_latency_seconds",
+                "End-to-end job latency (submit to result).",
+                &[("kind", kind)],
+                h,
+            );
+        }
+        w.finish()
+    }
 }
 
-#[derive(Default)]
 struct Counters {
     submitted: u64,
     completed: u64,
@@ -121,8 +187,22 @@ struct Counters {
     cancelled: u64,
     rejected: u64,
     coalesced: u64,
-    latencies: Vec<f64>,
-    next_slot: usize,
+    /// Per-kind latency histograms, indexed by [`JobKind::slot`].
+    latency: Vec<LogHistogram>,
+}
+
+impl Default for Counters {
+    fn default() -> Counters {
+        Counters {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            cancelled: 0,
+            rejected: 0,
+            coalesced: 0,
+            latency: vec![LogHistogram::new(); JobKind::ALL.len()],
+        }
+    }
 }
 
 /// Shared mutable counters behind the snapshot.
@@ -148,8 +228,8 @@ impl StatsCollector {
         self.inner.lock().unwrap().coalesced += 1;
     }
 
-    /// Record a finished job: outcome class + end-to-end latency.
-    pub fn finished(&self, ok: bool, cancelled: bool, latency: Duration) {
+    /// Record a finished job: kind, outcome class, end-to-end latency.
+    pub fn finished(&self, kind: JobKind, ok: bool, cancelled: bool, latency: Duration) {
         let mut c = self.inner.lock().unwrap();
         if cancelled {
             c.cancelled += 1;
@@ -158,19 +238,14 @@ impl StatsCollector {
         } else {
             c.failed += 1;
         }
-        let secs = latency.as_secs_f64();
-        if c.latencies.len() < LATENCY_RESERVOIR {
-            c.latencies.push(secs);
-        } else {
-            let slot = c.next_slot;
-            c.latencies[slot] = secs;
-            c.next_slot = (slot + 1) % LATENCY_RESERVOIR;
-        }
+        let slot = kind.slot();
+        c.latency[slot].record(latency.as_secs_f64());
     }
 
     /// Snapshot, merging in the queue view and the store counters. The
-    /// latency reservoir is copied out and sorted **outside** the lock,
-    /// once for both percentiles — a stats poll must not stall workers.
+    /// histograms are copied out under the lock (a few hundred bytes) and
+    /// merged for the global percentiles outside it — a stats poll must
+    /// not stall workers.
     pub fn snapshot(
         &self,
         workers: usize,
@@ -178,9 +253,9 @@ impl StatsCollector {
         queue_capacity: usize,
         store: StoreCounters,
     ) -> ServiceStats {
-        let (mut snap, mut latencies) = {
+        let mut snap = {
             let c = self.inner.lock().unwrap();
-            let snap = ServiceStats {
+            ServiceStats {
                 workers,
                 queue_depth,
                 queue_capacity,
@@ -198,12 +273,18 @@ impl StatsCollector {
                 results_stored: store.results_stored,
                 p50_latency: 0.0,
                 p99_latency: 0.0,
-            };
-            (snap, c.latencies.clone())
+                latency: JobKind::ALL
+                    .iter()
+                    .map(|k| (k.name(), c.latency[k.slot()].clone()))
+                    .collect(),
+            }
         };
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        snap.p50_latency = stat::percentile_sorted(&latencies, 50.0);
-        snap.p99_latency = stat::percentile_sorted(&latencies, 99.0);
+        let mut merged = LogHistogram::new();
+        for (_, h) in &snap.latency {
+            merged.merge(h);
+        }
+        snap.p50_latency = merged.quantile(50.0);
+        snap.p99_latency = merged.quantile(99.0);
         snap
     }
 }
@@ -219,9 +300,9 @@ mod tests {
         s.submitted();
         s.rejected();
         s.coalesced();
-        s.finished(true, false, Duration::from_millis(10));
-        s.finished(false, false, Duration::from_millis(20));
-        s.finished(false, true, Duration::from_millis(1));
+        s.finished(JobKind::Partition, true, false, Duration::from_millis(10));
+        s.finished(JobKind::Ordering, false, false, Duration::from_millis(20));
+        s.finished(JobKind::Partition, false, true, Duration::from_millis(1));
         let snap = s.snapshot(4, 2, 64, StoreCounters { hits: 3, misses: 1, ..Default::default() });
         assert_eq!(snap.workers, 4);
         assert_eq!(snap.queue_depth, 2);
@@ -234,6 +315,14 @@ mod tests {
         assert!(snap.p50_latency > 0.0);
         assert!(snap.p99_latency >= snap.p50_latency);
         assert!((snap.cache_hit_rate() - 0.8).abs() < 1e-12, "(3+1)/(3+1+1)");
+        // latencies landed in the right per-kind series
+        assert_eq!(snap.latency.len(), JobKind::ALL.len());
+        let by_kind = |name: &str| {
+            snap.latency.iter().find(|(n, _)| *n == name).map(|(_, h)| h.count()).unwrap()
+        };
+        assert_eq!(by_kind("partition"), 2);
+        assert_eq!(by_kind("ordering"), 1);
+        assert_eq!(by_kind("separator"), 0);
     }
 
     #[test]
@@ -251,14 +340,56 @@ mod tests {
         assert!(j.contains("\"cache_hit_rate\":1"));
     }
 
+    /// The histogram replacement for the old bounded reservoir: memory
+    /// stays O(1) at any volume, nothing is forgotten, and the percentile
+    /// estimates stay within one log2 bucket (a factor of 2) of exact.
     #[test]
-    fn latency_reservoir_wraps() {
+    fn latency_percentiles_within_one_bucket_of_exact() {
         let s = StatsCollector::new();
-        for i in 0..(LATENCY_RESERVOIR + 10) {
-            s.finished(true, false, Duration::from_nanos(i as u64));
+        // skewed latency population: 900 fast jobs, 90 medium, 10 slow
+        let mut exact: Vec<f64> = Vec::new();
+        for i in 0..900u64 {
+            exact.push(1e-3 + i as f64 * 1e-6);
         }
-        let c = s.inner.lock().unwrap();
-        assert_eq!(c.latencies.len(), LATENCY_RESERVOIR);
-        assert_eq!(c.next_slot, 10);
+        for i in 0..90u64 {
+            exact.push(0.05 + i as f64 * 1e-4);
+        }
+        for i in 0..10u64 {
+            exact.push(2.0 + i as f64 * 0.1);
+        }
+        for &x in &exact {
+            s.finished(JobKind::Partition, true, false, Duration::from_secs_f64(x));
+        }
+        let snap = s.snapshot(1, 0, 8, StoreCounters::default());
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (p, est) in [(50.0, snap.p50_latency), (99.0, snap.p99_latency)] {
+            let truth = crate::util::stat::percentile_sorted(&exact, p);
+            assert!(
+                truth <= est && est <= 2.0 * truth,
+                "p{p}: estimate {est} not within one bucket of exact {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_has_fixed_schema() {
+        let s = StatsCollector::new();
+        s.submitted();
+        s.finished(JobKind::Partition, true, false, Duration::from_millis(5));
+        let snap = s.snapshot(2, 0, 8, StoreCounters { hits: 1, ..Default::default() });
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE kahip_workers gauge"));
+        assert!(text.contains("kahip_workers 2"));
+        assert!(text.contains("kahip_jobs_submitted_total 1"));
+        assert!(text.contains("kahip_cache_hits_total 1"));
+        assert!(text.contains("# TYPE kahip_job_latency_seconds histogram"));
+        // every kind appears even with zero observations (stable schema)
+        for kind in JobKind::ALL {
+            let series = format!("kahip_job_latency_seconds_count{{kind=\"{}\"}}", kind.name());
+            assert!(text.contains(&series), "missing latency series for {}", kind.name());
+        }
+        assert!(
+            text.contains("kahip_job_latency_seconds_bucket{kind=\"partition\",le=\"+Inf\"} 1")
+        );
     }
 }

@@ -70,6 +70,127 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Buckets of a [`LogHistogram`], including the `+Inf` catch-all.
+pub const LOG_BUCKETS: usize = 44;
+/// Upper bound of bucket 0 in the unit of the recorded values. The
+/// service records seconds, so bucket 0 is "≤ 1µs" and the last finite
+/// bound is `1e-6 · 2^42 ≈ 4.4e6 s` — wider than any plausible latency.
+const LOG_MIN: f64 = 1e-6;
+
+/// A fixed-size base-2 log-bucketed histogram: bucket `i` counts values
+/// in `(ub(i-1), ub(i)]` with `ub(i) = 1e-6 · 2^i`; the last bucket is
+/// `+Inf`. Memory is constant (`44 × u64`), so it can sit under a
+/// service-stats lock forever without growing — it replaces the
+/// latency reservoir that previously capped quantile accuracy by
+/// *sampling*. Here every value is counted and quantiles are exact up
+/// to bucket resolution: [`LogHistogram::quantile`] returns the upper
+/// bound of the bucket holding the nearest-rank sample, which is within
+/// one bucket (a factor of 2) of the exact order statistic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    counts: [u64; LOG_BUCKETS],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: [0; LOG_BUCKETS], count: 0, sum: 0.0 }
+    }
+
+    /// Upper bound of bucket `i` (`+Inf` for the last bucket).
+    pub fn upper_bound(i: usize) -> f64 {
+        if i + 1 >= LOG_BUCKETS {
+            f64::INFINITY
+        } else {
+            LOG_MIN * 2f64.powi(i as i32)
+        }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        if !(x > LOG_MIN) {
+            // NaN, non-positive, and sub-resolution values land in bucket 0
+            return 0;
+        }
+        let i = (x / LOG_MIN).log2().ceil() as i64;
+        (i.max(0) as usize).min(LOG_BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket_of(x)] += 1;
+        self.count += 1;
+        if x.is_finite() && x > 0.0 {
+            self.sum += x;
+        }
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of the recorded (finite, positive) values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Quantile estimate for `p` in 0..=100 using the same nearest-rank
+    /// convention as [`percentile`]: the upper bound of the bucket that
+    /// contains the rank. Because both orderings agree bucket-wise, this
+    /// is the bound of the *exact* order statistic's bucket — never more
+    /// than one bucket (2×) above it. Returns 0.0 when empty; values in
+    /// the `+Inf` bucket report the largest finite bound.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return if i + 1 >= LOG_BUCKETS {
+                    Self::upper_bound(LOG_BUCKETS - 2)
+                } else {
+                    Self::upper_bound(i)
+                };
+            }
+        }
+        Self::upper_bound(LOG_BUCKETS - 2)
+    }
+
+    /// `(upper bound, cumulative count)` pairs for a published subset of
+    /// the bounds (every third, plus `+Inf`) — the Prometheus `le`
+    /// series. Cumulative counts stay exact because base-2 buckets nest
+    /// inside the coarser published grid.
+    pub fn published_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cumulative = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cumulative += c;
+            if i + 1 < LOG_BUCKETS && i % 3 == 2 {
+                out.push((Self::upper_bound(i), cumulative));
+            }
+        }
+        out.push((f64::INFINITY, self.count));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +254,68 @@ mod tests {
         assert_eq!(percentile(&[9.0, 1.0, 5.0], 200.0), 9.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn log_histogram_bucket_edges() {
+        assert_eq!(LogHistogram::upper_bound(0), 1e-6);
+        assert_eq!(LogHistogram::upper_bound(1), 2e-6);
+        assert!(LogHistogram::upper_bound(LOG_BUCKETS - 1).is_infinite());
+        // exact bound values land in their own bucket (half-open below)
+        assert_eq!(LogHistogram::bucket_of(1e-6), 0);
+        assert_eq!(LogHistogram::bucket_of(2e-6), 1);
+        assert_eq!(LogHistogram::bucket_of(2.1e-6), 2);
+        // degenerate inputs must not panic or index out of range
+        assert_eq!(LogHistogram::bucket_of(0.0), 0);
+        assert_eq!(LogHistogram::bucket_of(-4.0), 0);
+        assert_eq!(LogHistogram::bucket_of(f64::NAN), 0);
+        assert_eq!(LogHistogram::bucket_of(f64::INFINITY), LOG_BUCKETS - 1);
+        assert_eq!(LogHistogram::bucket_of(1e30), LOG_BUCKETS - 1);
+    }
+
+    /// The satellite guarantee replacing the latency reservoir: p50/p99
+    /// from the histogram stay within one bucket (a factor of 2) of the
+    /// exact order statistic computed by [`percentile`].
+    #[test]
+    fn log_histogram_quantiles_within_one_bucket_of_exact() {
+        // a skewed latency-like sample: many fast, few slow
+        let mut xs: Vec<f64> = (1..=400).map(|i| 1e-4 * (1.0 + (i % 37) as f64)).collect();
+        xs.extend((1..=20).map(|i| 0.5 + 0.1 * i as f64));
+        let mut h = LogHistogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), xs.len() as u64);
+        assert!((h.sum() - xs.iter().sum::<f64>()).abs() < 1e-9);
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = h.quantile(p);
+            assert!(
+                est >= exact && est <= 2.0 * exact,
+                "p{p}: estimate {est} not within one bucket of exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_and_empty() {
+        let empty = LogHistogram::new();
+        assert_eq!(empty.quantile(50.0), 0.0);
+        assert_eq!(empty.published_buckets().last().unwrap().1, 0);
+        let mut a = LogHistogram::new();
+        a.record(0.001);
+        let mut b = LogHistogram::new();
+        b.record(0.002);
+        b.record(1.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 1.003).abs() < 1e-12);
+        // published buckets end in +Inf carrying the total count
+        let pub_b = a.published_buckets();
+        let (last_bound, last_count) = *pub_b.last().unwrap();
+        assert!(last_bound.is_infinite());
+        assert_eq!(last_count, 3);
+        // cumulative counts are monotone
+        assert!(pub_b.windows(2).all(|w| w[0].1 <= w[1].1));
     }
 }

@@ -16,6 +16,45 @@
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-worker `(busy seconds, tasks pulled)` measurements of one
+/// fork-join region, gathered only when the *calling* thread has an
+/// observability capture installed ([`crate::obs::capturing`]). The
+/// decision is made before spawning — worker threads never consult
+/// thread-local state — so the measured and unmeasured code paths issue
+/// the identical task schedule.
+struct ForkMeter {
+    enabled: bool,
+    per_worker: Mutex<Vec<(usize, f64, u64)>>,
+}
+
+impl ForkMeter {
+    fn new() -> ForkMeter {
+        ForkMeter { enabled: crate::obs::capturing(), per_worker: Mutex::new(Vec::new()) }
+    }
+
+    /// Record one worker's totals (called from the worker thread).
+    fn worker_done(&self, slot: usize, busy: f64, tasks: u64) {
+        if self.enabled && tasks > 0 {
+            self.per_worker.lock().unwrap().push((slot, busy, tasks));
+        }
+    }
+
+    /// Flush the aggregate to the capture (called from the forking
+    /// thread after the scope joined).
+    fn report(self, workers: usize) {
+        if !self.enabled {
+            return;
+        }
+        let mut slots = vec![(0.0f64, 0u64); workers];
+        for (slot, busy, tasks) in self.per_worker.into_inner().unwrap() {
+            slots[slot].0 += busy;
+            slots[slot].1 += tasks;
+        }
+        crate::obs::pool_record(&slots);
+    }
+}
 
 /// Run `f(i)` for `i in 0..n` on up to `workers` OS threads, returning the
 /// results in index order. `f` must be `Sync` (shared) — per-call mutable
@@ -29,25 +68,46 @@ where
     if n == 0 {
         return Vec::new();
     }
+    let meter = ForkMeter::new();
     if workers == 1 {
+        if meter.enabled {
+            let t = Instant::now();
+            let out: Vec<T> = (0..n).map(&f).collect();
+            crate::obs::pool_record(&[(t.elapsed().as_secs_f64(), n as u64)]);
+            return out;
+        }
         return (0..n).map(&f).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let tx = tx.clone();
             let next = &next;
             let f = &f;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+            let meter = &meter;
+            s.spawn(move || {
+                let mut busy = 0.0f64;
+                let mut tasks = 0u64;
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = if meter.enabled {
+                        let t = Instant::now();
+                        let v = f(i);
+                        busy += t.elapsed().as_secs_f64();
+                        tasks += 1;
+                        v
+                    } else {
+                        f(i)
+                    };
+                    if tx.send((i, v)).is_err() {
+                        break;
+                    }
                 }
-                let v = f(i);
-                if tx.send((i, v)).is_err() {
-                    break;
-                }
+                meter.worker_done(w, busy, tasks);
             });
         }
     });
@@ -56,6 +116,7 @@ where
     for (i, v) in rx {
         out[i] = Some(v);
     }
+    meter.report(workers);
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 
@@ -76,30 +137,49 @@ where
     if n == 0 {
         return Vec::new();
     }
+    let meter = ForkMeter::new();
     if workers == 1 {
         let mut state = init();
+        if meter.enabled {
+            let t = Instant::now();
+            let out: Vec<T> = (0..n).map(|i| f(&mut state, i)).collect();
+            crate::obs::pool_record(&[(t.elapsed().as_secs_f64(), n as u64)]);
+            return out;
+        }
         return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let tx = tx.clone();
             let next = &next;
             let init = &init;
             let f = &f;
+            let meter = &meter;
             s.spawn(move || {
                 let mut state = init();
+                let mut busy = 0.0f64;
+                let mut tasks = 0u64;
                 loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let v = f(&mut state, i);
+                    let v = if meter.enabled {
+                        let t = Instant::now();
+                        let v = f(&mut state, i);
+                        busy += t.elapsed().as_secs_f64();
+                        tasks += 1;
+                        v
+                    } else {
+                        f(&mut state, i)
+                    };
                     if tx.send((i, v)).is_err() {
                         break;
                     }
                 }
+                meter.worker_done(w, busy, tasks);
             });
         }
     });
@@ -108,6 +188,7 @@ where
     for (i, v) in rx {
         out[i] = Some(v);
     }
+    meter.report(workers);
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 
@@ -242,6 +323,29 @@ mod tests {
     #[test]
     fn available_threads_is_positive() {
         assert!(available_threads() >= 1);
+    }
+
+    /// With a capture installed on the calling thread, fork-join regions
+    /// report per-worker busy time and task (chunk) counts; without one
+    /// they record nothing. Either way the results are identical.
+    #[test]
+    fn scoped_map_reports_pool_utilization_under_capture() {
+        let plain = scoped_map(64, 3, |i| i + 1);
+        let cap = crate::obs::Capture::start("fork", 3);
+        let measured = scoped_map(64, 3, |i| i + 1);
+        let serial = scoped_map_with(10, 1, || (), |_, i| i);
+        let t = cap.finish();
+        assert_eq!(measured, plain);
+        assert_eq!(serial.len(), 10);
+        assert_eq!(t.pool.forks, 2, "both fork-join regions measured");
+        let total_tasks: u64 = t.pool.workers.iter().map(|w| w.1).sum();
+        assert_eq!(total_tasks, 64 + 10);
+        assert!(t.pool.workers.iter().all(|w| w.0 >= 0.0));
+        // and with no capture, nothing leaks into a later trace
+        let again = scoped_map(16, 2, |i| i);
+        assert_eq!(again.len(), 16);
+        let empty = crate::obs::Capture::start("probe", 1).finish();
+        assert_eq!(empty.pool.forks, 0);
     }
 
     #[test]

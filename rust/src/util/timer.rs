@@ -59,15 +59,14 @@ impl PhaseTimes {
         e.1 += 1;
     }
 
-    /// (phase, total seconds, call count), sorted by descending total.
+    /// (phase, total seconds, call count) in phase-name order. The order
+    /// is deterministic (BTreeMap iteration) so trace output and bench
+    /// tables are diff-stable across runs — sorting by descending total,
+    /// as this used to do, reshuffled rows whenever two phases swapped
+    /// places by a few microseconds.
     pub fn report(&self) -> Vec<(String, f64, u64)> {
         let m = self.inner.lock().unwrap();
-        let mut v: Vec<_> = m
-            .iter()
-            .map(|(k, (d, c))| (k.clone(), d.as_secs_f64(), *c))
-            .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        v
+        m.iter().map(|(k, (d, c))| (k.clone(), d.as_secs_f64(), *c)).collect()
     }
 
     pub fn render(&self) -> String {
@@ -102,5 +101,20 @@ mod tests {
         let a = rep.iter().find(|r| r.0 == "a").unwrap();
         assert_eq!(a.2, 2);
         assert!(!p.render().is_empty());
+    }
+
+    #[test]
+    fn report_order_is_deterministic_by_name() {
+        let p = PhaseTimes::new();
+        // "zebra" gets the larger total; name order must still win
+        p.add("zebra", Duration::from_millis(50));
+        p.add("alpha", Duration::from_millis(1));
+        p.add("mid", Duration::from_millis(10));
+        let rep = p.report();
+        let names: Vec<&str> = rep.iter().map(|r| r.0.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "mid", "zebra"]);
+        let lines: Vec<String> = p.render().lines().map(|l| l.to_string()).collect();
+        assert!(lines[0].starts_with("alpha"));
+        assert!(lines[2].starts_with("zebra"));
     }
 }

@@ -15,7 +15,7 @@ use kahip::coarsening::hierarchy::{build_hierarchy, check_invariants};
 use kahip::partition::config::{Config, Mode};
 use kahip::partition::{metrics, Partition};
 use kahip::rng::Rng;
-use kahip::service::protocol::execute_with_threads;
+use kahip::service::protocol::{execute_traced, execute_with_threads};
 use kahip::service::{JobKind, JobOutput, JobResult, JobSpec};
 use kahip::util::quickcheck::graphs;
 use std::sync::Arc;
@@ -36,6 +36,7 @@ fn canonical_line(kind: JobKind, out: JobOutput) -> String {
         cached: false,
         seconds: 0.0,
         outcome: Ok(Arc::new(out)),
+        trace: None,
     }
     .to_json_line()
 }
@@ -90,6 +91,46 @@ fn every_job_kind_is_byte_identical_across_thread_counts() {
                         canonical_line(kind, out),
                         want,
                         "{gname}/{kind:?} seed {seed} {mode:?}: {t} threads diverged from 1"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Observability must not perturb results: running a job with tracing
+/// captured ([`execute_traced`] with `trace: true`) renders the identical
+/// response line as the untraced run, for every job kind at every thread
+/// count. The recorder only *reads* engine state — counters accumulate in
+/// plain locals and flush at phase boundaries — so any divergence here
+/// means instrumentation leaked into a decision path.
+#[test]
+fn tracing_is_invisible_to_results_for_every_kind_and_thread_count() {
+    for (gname, g) in headline_graphs() {
+        for kind in ALL_KINDS {
+            let spec = spec_for(kind, 77, Mode::EcoSocial);
+            let baseline = execute_with_threads(&g, &spec, 1)
+                .unwrap_or_else(|e| panic!("{gname}/{kind:?} untraced failed: {e}"));
+            let want = canonical_line(kind, baseline);
+            let mut traced_spec = spec.clone();
+            traced_spec.trace = true;
+            for &t in &THREADS {
+                let (out, trace) = execute_traced(&g, &traced_spec, t);
+                let out =
+                    out.unwrap_or_else(|e| panic!("{gname}/{kind:?} traced t={t} failed: {e}"));
+                assert_eq!(
+                    canonical_line(kind, out),
+                    want,
+                    "{gname}/{kind:?} t={t}: tracing changed the result"
+                );
+                let trace = trace.expect("trace-flagged runs must return a trace");
+                assert_eq!(trace.threads, t, "{gname}/{kind:?}: trace records its thread count");
+                // graphs above the coarsening threshold (20·k nodes) must
+                // show the multilevel hierarchy in the report
+                if kind == JobKind::Partition && g.n() > 100 {
+                    assert!(
+                        trace.levels_of("uncoarsen").next().is_some(),
+                        "{gname}: traced partition run reported no uncoarsening levels"
                     );
                 }
             }

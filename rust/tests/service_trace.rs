@@ -1,0 +1,238 @@
+//! End-to-end observability acceptance tests (DESIGN.md "Observability"):
+//! the Metrics job must emit *valid* Prometheus text exposition — checked
+//! by a hand-rolled validator, not string spot-checks — and a `trace:true`
+//! request must round-trip a full V-cycle report through a live TCP serve
+//! session without perturbing the partition.
+
+use kahip::graph::generators;
+use kahip::service::{
+    frontend, json, GraphPayload, JobKind, JobOutput, JobRequest, JobSpec, Service, ServiceConfig,
+};
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Strict structural validator for the Prometheus text exposition format:
+/// every sample belongs to a `# HELP`/`# TYPE`-announced family (TYPE
+/// before the first sample), every value parses as a float, and every
+/// histogram series has increasing `le` bounds, cumulative (monotone
+/// non-decreasing) bucket counts, a terminal `+Inf` bucket, and matching
+/// `_sum`/`_count` samples with `_count` equal to the `+Inf` bucket.
+fn validate_exposition(text: &str) {
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut helps: HashSet<String> = HashSet::new();
+    // histogram bucket series: (family, labels-without-le) → [(le, count)]
+    let mut buckets: HashMap<(String, String), Vec<(f64, f64)>> = HashMap::new();
+    let mut sums: HashSet<(String, String)> = HashSet::new();
+    let mut counts: HashMap<(String, String), f64> = HashMap::new();
+
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP names a metric");
+            helps.insert(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE names a metric");
+            let kind = it.next().expect("TYPE declares a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE {kind} for {name}"
+            );
+            assert!(
+                types.insert(name.to_string(), kind.to_string()).is_none(),
+                "duplicate TYPE for {name}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment line {line:?}");
+
+        // sample: name[{labels}] value
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample {line:?}"));
+        let value: f64 =
+            value.parse().unwrap_or_else(|e| panic!("bad value in {line:?}: {e}"));
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .unwrap_or_else(|| panic!("unclosed labels in {line:?}"));
+                (n, labels)
+            }
+            None => (series, ""),
+        };
+
+        // resolve the family: histogram samples carry a suffix
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let f = name.strip_suffix(suf)?;
+                (types.get(f).map(String::as_str) == Some("histogram")).then(|| f.to_string())
+            })
+            .unwrap_or_else(|| name.to_string());
+        assert!(types.contains_key(&family), "sample {name} has no preceding # TYPE");
+        assert!(helps.contains(&family), "sample {name} has no preceding # HELP");
+
+        if types[&family] == "histogram" {
+            // split out the le label; the rest keys the series
+            let mut le = None;
+            let rest: Vec<&str> = labels
+                .split(',')
+                .filter(|l| !l.is_empty())
+                .filter(|l| match l.strip_prefix("le=\"") {
+                    Some(v) => {
+                        le = Some(v.strip_suffix('"').expect("closed le label").to_string());
+                        false
+                    }
+                    None => true,
+                })
+                .collect();
+            let key = (family.clone(), rest.join(","));
+            if name.ends_with("_bucket") {
+                let le = le.expect("bucket sample has an le label");
+                let bound = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+                buckets.entry(key).or_default().push((bound, value));
+            } else if name.ends_with("_sum") {
+                sums.insert(key);
+            } else if name.ends_with("_count") {
+                counts.insert(key, value);
+            } else {
+                panic!("bare sample {name} for histogram family {family}");
+            }
+        }
+    }
+
+    assert!(!buckets.is_empty(), "exposition contains no histogram series");
+    for (key, series) in &buckets {
+        let (family, labels) = key;
+        let ctx = format!("{family}{{{labels}}}");
+        for pair in series.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "{ctx}: le bounds not increasing");
+            assert!(pair[0].1 <= pair[1].1, "{ctx}: bucket counts not cumulative");
+        }
+        let last = series.last().unwrap();
+        assert!(last.0.is_infinite(), "{ctx}: final bucket must be +Inf");
+        assert!(sums.contains(key), "{ctx}: missing _sum");
+        let total = counts.get(key).unwrap_or_else(|| panic!("{ctx}: missing _count"));
+        assert_eq!(last.1, *total, "{ctx}: +Inf bucket must equal _count");
+    }
+}
+
+#[test]
+fn metrics_job_emits_valid_prometheus_exposition() {
+    let svc = Service::new(ServiceConfig { workers: 2, ..Default::default() });
+    let g = generators::grid2d(8, 8);
+    // warm the ledger: two distinct jobs, one memo hit, one failure
+    for (id, seed) in [("w1", 1u64), ("w2", 2), ("w3", 2)] {
+        let req = JobRequest {
+            id: id.into(),
+            graph: GraphPayload::from_graph(&g),
+            spec: JobSpec { k: 2, seed, ..JobSpec::defaults(JobKind::Partition) },
+        };
+        assert!(svc.run_sync(req).outcome.is_ok());
+    }
+    let bad = JobRequest {
+        id: "bad".into(),
+        graph: GraphPayload::Stored("feedbeef".into()),
+        spec: JobSpec { k: 2, ..JobSpec::defaults(JobKind::Partition) },
+    };
+    assert!(svc.run_sync(bad).outcome.is_err());
+
+    let res = svc.run_sync(JobRequest {
+        id: "m".into(),
+        graph: GraphPayload::None,
+        spec: JobSpec::defaults(JobKind::Metrics),
+    });
+    let text = match res.outcome.unwrap().as_ref() {
+        JobOutput::Metrics(text) => text.clone(),
+        other => panic!("wrong output {other:?}"),
+    };
+    validate_exposition(&text);
+    // fixed schema: every job kind's latency series is present even at
+    // zero observations, so scrapes never see series appear mid-session
+    for kind in JobKind::ALL {
+        assert!(
+            text.contains(&format!("kind=\"{}\"", kind.name())),
+            "missing latency series for {kind:?}"
+        );
+    }
+    // w1 + w2 computed, w3 served from the memo — all three complete
+    assert!(text.contains("kahip_jobs_completed_total 3"));
+    assert!(text.contains("kahip_jobs_failed_total 1"));
+    assert!(text.contains("kahip_cache_hits_total 1"));
+}
+
+#[test]
+fn trace_round_trips_through_a_live_tcp_session() {
+    // threads_per_job=2 exercises the parallel engine, so the trace's
+    // pool section sees real fork-joins; 16x16 is past the coarsening
+    // threshold (20·k = 40 nodes), so the V-cycle has levels
+    let svc = Arc::new(Service::new(ServiceConfig {
+        workers: 1,
+        threads_per_job: 2,
+        ..Default::default()
+    }));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let _ = frontend::serve_tcp(svc, listener);
+        });
+    }
+    let g = generators::grid2d(16, 16);
+    let (xadj, adjncy, _, _) = g.raw();
+    let arr = |v: &[u32]| v.iter().map(u32::to_string).collect::<Vec<_>>().join(",");
+    let line = |id: &str, trace: &str| {
+        format!(
+            r#"{{"id":"{id}","job":"partition","k":2,"seed":11{trace},"xadj":[{}],"adjncy":[{}]}}"#,
+            arr(xadj),
+            arr(adjncy)
+        )
+    };
+    let mut sock = TcpStream::connect(addr).unwrap();
+    let payload = line("plain", "") + "\n" + &line("traced", r#","trace":true"#) + "\n";
+    sock.write_all(payload.as_bytes()).unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut responses = HashMap::new();
+    for l in BufReader::new(sock).lines() {
+        let v = json::parse(&l.unwrap()).unwrap();
+        let id = v.get("id").unwrap().as_str().unwrap().to_string();
+        responses.insert(id, v);
+    }
+    let plain = &responses["plain"];
+    let traced = &responses["traced"];
+    assert_eq!(traced.get("ok").unwrap().as_bool(), Some(true));
+    assert!(plain.get("trace").is_none(), "untraced response must not carry a trace");
+    assert_eq!(
+        plain.get("part").unwrap().as_arr().unwrap(),
+        traced.get("part").unwrap().as_arr().unwrap(),
+        "tracing must not perturb the partition"
+    );
+
+    let trace = traced.get("trace").expect("trace:true response carries the report");
+    assert_eq!(trace.get("job").unwrap().as_str(), Some("partition"));
+    let levels = trace.get("levels").unwrap().as_arr().unwrap();
+    assert!(!levels.is_empty(), "V-cycle report has hierarchy levels");
+    let uncoarsen = levels
+        .iter()
+        .find(|l| l.get("stage").unwrap().as_str() == Some("uncoarsen"))
+        .expect("report includes uncoarsening levels");
+    assert!(uncoarsen.get("nodes").unwrap().as_i64().unwrap() > 0);
+    assert!(uncoarsen.get("edges").unwrap().as_i64().unwrap() > 0);
+    let metrics = uncoarsen.get("metrics").expect("uncoarsen level reports metrics");
+    assert!(metrics.get("cut").is_some(), "level reports its cut");
+    assert!(metrics.get("balance").is_some(), "level reports its balance");
+    let pool = trace.get("pool").unwrap();
+    assert!(
+        !pool.get("workers").unwrap().as_arr().unwrap().is_empty(),
+        "pool utilization recorded under the parallel engine"
+    );
+    assert!(trace.get("phases").unwrap().get("coarsening").is_some());
+}
