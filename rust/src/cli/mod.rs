@@ -613,13 +613,18 @@ fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
 /// `kahip serve`: the persistent partitioning service (see
 /// [`crate::service`]). Default is JSON-lines over stdin/stdout until
 /// EOF (`--stdin` makes that explicit); `--listen=host:port` serves TCP
-/// connections instead. `--workers`, `--queue`, `--graph_cache` and
-/// `--result_cache` size the pool, the backpressure bound and the
-/// content-addressed store; `--threads` caps the engine threads each
-/// worker's job may use (0 = auto-share the machine); `--trace_json=<path>`
-/// appends one trace line per executed job (see [`crate::obs`]).
+/// connections instead through a nonblocking multiplexed poll loop.
+/// `--workers`, `--queue`, `--graph_cache` and `--result_cache` size the
+/// pool, the backpressure bound and the content-addressed store;
+/// `--store_dir=<dir>` persists interned graphs and memoized results
+/// across restarts (`--store_cap_mb` caps the on-disk bytes, default
+/// 1024); `--max_conns` and `--idle_timeout` (seconds) control TCP
+/// admission and connection reaping; `--threads` caps the engine threads
+/// each worker's job may use (0 = auto-share the machine);
+/// `--trace_json=<path>` appends one trace line per executed job (see
+/// [`crate::obs`]).
 fn cmd_serve(a: &ArgSet) -> Result<(), String> {
-    use crate::service::{frontend, Service, ServiceConfig};
+    use crate::service::{frontend, FrontendConfig, Service, ServiceConfig};
     let defaults = ServiceConfig::default();
     let cfg = ServiceConfig {
         workers: a.usize_or("workers", defaults.workers)?,
@@ -628,15 +633,25 @@ fn cmd_serve(a: &ArgSet) -> Result<(), String> {
         max_results: a.usize_or("result_cache", defaults.max_results)?,
         threads_per_job: a.usize_or("threads", defaults.threads_per_job)?,
         trace_log: trace_json_opt(a).map(str::to_string),
+        store_dir: a.str_opt("store_dir").map(str::to_string),
+        disk_cap_bytes: a.u64_or("store_cap_mb", 1024)? << 20,
     };
     match a.str_opt("listen") {
         Some(addr) => {
+            let fdefaults = FrontendConfig::default();
+            let fcfg = FrontendConfig {
+                max_conns: a.usize_or("max_conns", fdefaults.max_conns)?,
+                idle_timeout: std::time::Duration::from_secs_f64(
+                    a.f64_or("idle_timeout", fdefaults.idle_timeout.as_secs_f64())?,
+                ),
+                ..fdefaults
+            };
             let listener =
                 std::net::TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
             let local = listener.local_addr().map_err(|e| e.to_string())?;
             eprintln!("kahip serve: listening on {local} ({} workers)", cfg.workers);
             let svc = std::sync::Arc::new(Service::new(cfg));
-            frontend::serve_tcp(svc, listener).map_err(|e| e.to_string())
+            frontend::serve_tcp_with(svc, listener, fcfg, None).map_err(|e| e.to_string())
         }
         None => {
             let svc = Service::new(cfg);

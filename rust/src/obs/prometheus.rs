@@ -45,6 +45,20 @@ impl PromWriter {
         let _ = writeln!(self.out, "{name} {value}");
     }
 
+    /// A gauge series with labels (e.g. `[("kind", "graphs")]`). Series
+    /// of one name share a single header, like histogram series.
+    pub fn gauge_labeled(
+        &mut self,
+        name: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.header(name, help, "gauge");
+        let lbl = label_set(labels, None);
+        let _ = writeln!(self.out, "{name}{lbl} {value}");
+    }
+
     /// Emit one histogram series labeled `labels` (e.g. `[("kind",
     /// "partition")]`). Buckets are a published subset of the
     /// `LogHistogram` bounds — cumulative counts stay exact because the
@@ -111,6 +125,17 @@ mod tests {
         assert!(text.contains("# TYPE kahip_jobs_total counter\n"));
         assert!(text.contains("\nkahip_jobs_total 7\n") || text.starts_with("# HELP"));
         assert!(text.contains("kahip_queue_depth 2\n"));
+    }
+
+    #[test]
+    fn labeled_gauge_series_share_one_header() {
+        let mut w = PromWriter::new();
+        w.gauge_labeled("kahip_entries", "Entries.", &[("kind", "graphs")], 3.0);
+        w.gauge_labeled("kahip_entries", "Entries.", &[("kind", "results")], 5.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE kahip_entries gauge").count(), 1);
+        assert!(text.contains("kahip_entries{kind=\"graphs\"} 3\n"));
+        assert!(text.contains("kahip_entries{kind=\"results\"} 5\n"));
     }
 
     #[test]

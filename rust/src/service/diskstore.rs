@@ -1,0 +1,833 @@
+//! The persistent tier of the content-addressed store: interned CSR
+//! graphs and memo entries spilled to disk under `--store_dir`, keyed by
+//! the same 128-bit content hash as the in-memory tables, so the memo
+//! survives restarts and graphs can be served by hash across process
+//! lifetimes.
+//!
+//! On-disk layout (all names are lowercase hex of the FNV-128 hashes):
+//!
+//! ```text
+//! <store_dir>/
+//!   graphs/<graph_hash>.g              one interned CSR graph
+//!   results/<graph_hash>-<fp_hash>.r   one memo entry (fp_hash = FNV-128
+//!                                      of the job fingerprint; the full
+//!                                      fingerprint is stored inside and
+//!                                      re-checked on load)
+//!   tmp/                               staging area for atomic writes
+//! ```
+//!
+//! Every file is `magic(4) + payload + FNV-128 checksum(16)`; writes go
+//! to `tmp/` and are published with `fs::rename` (atomic on one
+//! filesystem), so readers and a crash mid-write can never observe a
+//! half-written entry — at worst the entry is absent. A file that fails
+//! the checksum, the magic, or payload decoding is *skipped with a
+//! warning and deleted*, never a panic: corruption degrades to a cache
+//! miss.
+//!
+//! Eviction is FIFO over one unified ledger (graphs and results
+//! together, ordered by insertion — mtime at startup) under a byte cap,
+//! with the same coherence rule as the memory tier: evicting a graph
+//! drops every result memoized against it, so no tier ever holds a
+//! result whose graph it cannot resolve.
+
+use super::protocol::JobOutput;
+use super::store::{fnv128_bytes, fnv128_hex, ResultKey};
+use crate::graph::Graph;
+use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const GRAPH_MAGIC: [u8; 4] = *b"KGF1";
+const RESULT_MAGIC: [u8; 4] = *b"KMR1";
+/// magic + checksum: the minimum size of any well-formed entry.
+const ENVELOPE: usize = 4 + 16;
+
+/// Raw CSR arrays read back from a graph entry. The caller re-validates
+/// through [`Graph::from_csr`] — the checksum guards against bit rot,
+/// `from_csr` against a hostile or stale store directory.
+pub struct DiskGraph {
+    pub xadj: Vec<u32>,
+    pub adjncy: Vec<u32>,
+    pub vwgt: Option<Vec<i64>>,
+    pub adjwgt: Option<Vec<i64>>,
+}
+
+/// Counters merged into [`super::store::StoreCounters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DiskCounters {
+    /// Entries (graphs or results) loaded from disk.
+    pub hits: u64,
+    /// Lookups that consulted disk and found nothing usable.
+    pub misses: u64,
+    /// Entries evicted by the FIFO byte cap (including coherence
+    /// cascades: results dropped with their graph).
+    pub evictions: u64,
+    /// Entries skipped and deleted due to checksum/format corruption.
+    pub corrupt: u64,
+    /// Graph entries currently on disk.
+    pub graphs: usize,
+    /// Result entries currently on disk.
+    pub results: usize,
+    /// Total payload bytes currently on disk.
+    pub bytes: u64,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum DiskKey {
+    Graph(String),
+    /// `(graph_hash, fingerprint_hash)` — the file-name form of a
+    /// [`ResultKey`].
+    Result(String, String),
+}
+
+struct DiskInner {
+    /// Unified FIFO ledger: insertion order across both kinds.
+    order: VecDeque<DiskKey>,
+    entries: HashMap<DiskKey, u64>,
+    bytes: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    corrupt: u64,
+}
+
+/// One store directory. Thread-safe; all methods take `&self`.
+pub struct DiskStore {
+    dir: PathBuf,
+    cap_bytes: u64,
+    inner: Mutex<DiskInner>,
+}
+
+/// Staging-file sequence, process-global so two store instances over one
+/// directory (in-process restarts, tests) never collide on a tmp name —
+/// across processes the pid in the name disambiguates.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl DiskStore {
+    /// Open (creating if needed) a store directory and index every entry
+    /// already present, oldest-first by mtime so the FIFO cap keeps the
+    /// newest entries. Leftover staging files from a crashed writer are
+    /// removed; result files whose graph entry is missing are dropped
+    /// (the coherence invariant must hold from the first lookup).
+    pub fn open(dir: impl AsRef<Path>, cap_bytes: u64) -> io::Result<DiskStore> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(dir.join("graphs"))?;
+        fs::create_dir_all(dir.join("results"))?;
+        fs::create_dir_all(dir.join("tmp"))?;
+        if let Ok(leftovers) = fs::read_dir(dir.join("tmp")) {
+            for f in leftovers.flatten() {
+                let _ = fs::remove_file(f.path());
+            }
+        }
+        let store = DiskStore {
+            dir,
+            cap_bytes,
+            inner: Mutex::new(DiskInner {
+                order: VecDeque::new(),
+                entries: HashMap::new(),
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                corrupt: 0,
+            }),
+        };
+        store.index_existing()?;
+        Ok(store)
+    }
+
+    fn index_existing(&self) -> io::Result<()> {
+        let mut found: Vec<(std::time::SystemTime, DiskKey, u64)> = Vec::new();
+        for entry in fs::read_dir(self.dir.join("graphs"))?.flatten() {
+            let Some(key) = parse_graph_name(&entry.file_name()) else { continue };
+            if let Ok(meta) = entry.metadata() {
+                let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                found.push((mtime, key, meta.len()));
+            }
+        }
+        let graph_hashes: std::collections::HashSet<String> = found
+            .iter()
+            .filter_map(|(_, k, _)| match k {
+                DiskKey::Graph(h) => Some(h.clone()),
+                DiskKey::Result(..) => None,
+            })
+            .collect();
+        for entry in fs::read_dir(self.dir.join("results"))?.flatten() {
+            let Some(key) = parse_result_name(&entry.file_name()) else { continue };
+            let DiskKey::Result(gh, _) = &key else { unreachable!() };
+            if !graph_hashes.contains(gh) {
+                // orphaned result (its graph is gone): never serve it
+                let _ = fs::remove_file(entry.path());
+                continue;
+            }
+            if let Ok(meta) = entry.metadata() {
+                let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                found.push((mtime, key, meta.len()));
+            }
+        }
+        found.sort_by_key(|e| e.0);
+        let mut inner = self.inner.lock().unwrap();
+        for (_, key, len) in found {
+            if inner.entries.insert(key.clone(), len).is_none() {
+                inner.order.push_back(key);
+                inner.bytes += len;
+            }
+        }
+        self.enforce_cap(&mut inner);
+        Ok(())
+    }
+
+    fn path_of(&self, key: &DiskKey) -> PathBuf {
+        match key {
+            DiskKey::Graph(h) => self.dir.join("graphs").join(format!("{h}.g")),
+            DiskKey::Result(gh, fh) => self.dir.join("results").join(format!("{gh}-{fh}.r")),
+        }
+    }
+
+    fn result_key(key: &ResultKey) -> DiskKey {
+        DiskKey::Result(key.0.clone(), fnv128_hex(key.1.as_bytes()))
+    }
+
+    pub fn has_graph(&self, hash: &str) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.contains_key(&DiskKey::Graph(hash.to_string()))
+    }
+
+    /// Spill an interned graph. Returns the graph hashes evicted from
+    /// disk by the byte cap (their dependent results are already dropped
+    /// here; the caller reconciles its memory tier).
+    pub fn store_graph(&self, hash: &str, g: &Graph) -> Vec<String> {
+        let (xadj, adjncy, vwgt, adjwgt) = g.raw();
+        let mut w = Wr::new(GRAPH_MAGIC);
+        w.u32s(xadj);
+        w.u32s(adjncy);
+        w.opt_i64s(Some(vwgt));
+        w.opt_i64s(Some(adjwgt));
+        self.publish(DiskKey::Graph(hash.to_string()), w.seal())
+    }
+
+    /// Load a graph entry; `None` is a miss (absent or corrupt — corrupt
+    /// entries are warned about and deleted).
+    pub fn load_graph(&self, hash: &str) -> Option<DiskGraph> {
+        let key = DiskKey::Graph(hash.to_string());
+        let body = self.read_entry(&key, &GRAPH_MAGIC)?;
+        self.resolve(key, decode_graph(&mut Rd::new(&body)))
+    }
+
+    /// Spill a memoized result. Skipped (returning no evictions) when the
+    /// graph itself is not on disk — a result must never outlive its
+    /// graph in this tier. Returns graph hashes evicted by the byte cap.
+    pub fn store_result(&self, key: &ResultKey, out: &JobOutput) -> Vec<String> {
+        if !self.has_graph(&key.0) {
+            return Vec::new();
+        }
+        let mut w = Wr::new(RESULT_MAGIC);
+        w.str_(&key.0);
+        w.str_(&key.1);
+        if !encode_output(out, &mut w) {
+            return Vec::new(); // introspection outputs are never memoized
+        }
+        self.publish(Self::result_key(key), w.seal())
+    }
+
+    /// Load a memo entry; verifies the stored graph hash and full
+    /// fingerprint against the requested key (the file name only carries
+    /// a hash of the fingerprint).
+    pub fn load_result(&self, key: &ResultKey) -> Option<JobOutput> {
+        let dkey = Self::result_key(key);
+        let body = self.read_entry(&dkey, &RESULT_MAGIC)?;
+        self.resolve(dkey, decode_result(&mut Rd::new(&body), key))
+    }
+
+    /// Shared tail of the load paths: count the hit, or treat a decode
+    /// failure as corruption (warn, delete, count a miss).
+    fn resolve<T>(&self, key: DiskKey, decoded: Result<T, String>) -> Option<T> {
+        match decoded {
+            Ok(v) => {
+                self.inner.lock().unwrap().hits += 1;
+                Some(v)
+            }
+            Err(e) => {
+                self.discard_corrupt(&key, &e);
+                None
+            }
+        }
+    }
+
+    pub fn counters(&self) -> DiskCounters {
+        let inner = self.inner.lock().unwrap();
+        let graphs =
+            inner.entries.keys().filter(|k| matches!(k, DiskKey::Graph(_))).count();
+        DiskCounters {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            corrupt: inner.corrupt,
+            graphs,
+            results: inner.entries.len() - graphs,
+            bytes: inner.bytes,
+        }
+    }
+
+    /// Read + verify one entry's envelope. `None` counts a miss (absent
+    /// file) or corruption (bad envelope: warned and deleted).
+    fn read_entry(&self, key: &DiskKey, magic: &[u8; 4]) -> Option<Vec<u8>> {
+        let path = self.path_of(key);
+        let data = match fs::read(&path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                self.inner.lock().unwrap().misses += 1;
+                return None;
+            }
+            Err(e) => {
+                self.discard_corrupt(key, &format!("unreadable: {e}"));
+                return None;
+            }
+        };
+        if data.len() < ENVELOPE {
+            self.discard_corrupt(key, "truncated (shorter than the envelope)");
+            return None;
+        }
+        if data[..4] != magic[..] {
+            self.discard_corrupt(key, "bad magic (wrong kind or format version)");
+            return None;
+        }
+        let (body, sum) = data.split_at(data.len() - 16);
+        if fnv128_bytes(body).as_slice() != sum {
+            self.discard_corrupt(key, "checksum mismatch");
+            return None;
+        }
+        Some(body[4..].to_vec())
+    }
+
+    /// A corrupt entry degrades to a miss: warn once, delete the file,
+    /// drop it from the ledger. Never panics — restart durability must
+    /// not turn disk rot into an outage.
+    fn discard_corrupt(&self, key: &DiskKey, why: &str) {
+        let path = self.path_of(key);
+        eprintln!("kahip serve: skipping corrupt store entry {}: {why}", path.display());
+        let _ = fs::remove_file(&path);
+        let mut inner = self.inner.lock().unwrap();
+        inner.corrupt += 1;
+        inner.misses += 1;
+        if let Some(sz) = inner.entries.remove(key) {
+            inner.bytes = inner.bytes.saturating_sub(sz);
+            inner.order.retain(|k| k != key);
+        }
+    }
+
+    /// Crash-safe publish: write to `tmp/`, fsync, rename into place.
+    /// Concurrent writers of the same key are safe — both render
+    /// byte-identical content (it is content-addressed) and rename is
+    /// atomic, so the loser simply overwrites the winner with the same
+    /// bytes. Returns graph hashes evicted by the byte cap.
+    fn publish(&self, key: DiskKey, bytes: Vec<u8>) -> Vec<String> {
+        let tmp = self.dir.join("tmp").join(format!(
+            "{}-{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if write_file(&tmp, &bytes).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return Vec::new();
+        }
+        if fs::rename(&tmp, self.path_of(&key)).is_err() {
+            let _ = fs::remove_file(&tmp);
+            return Vec::new();
+        }
+        let len = bytes.len() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.insert(key.clone(), len) {
+            None => {
+                inner.order.push_back(key);
+                inner.bytes += len;
+            }
+            Some(old) => {
+                inner.bytes = inner.bytes.saturating_sub(old) + len;
+            }
+        }
+        self.enforce_cap(&mut inner)
+    }
+
+    /// FIFO eviction down to the byte cap (0 = unbounded). Evicting a
+    /// graph cascades to every result memoized against it.
+    fn enforce_cap(&self, inner: &mut DiskInner) -> Vec<String> {
+        let mut evicted_graphs = Vec::new();
+        if self.cap_bytes == 0 {
+            return evicted_graphs;
+        }
+        while inner.bytes > self.cap_bytes {
+            let Some(key) = inner.order.pop_front() else { break };
+            let Some(sz) = inner.entries.remove(&key) else { continue };
+            inner.bytes = inner.bytes.saturating_sub(sz);
+            inner.evictions += 1;
+            let _ = fs::remove_file(self.path_of(&key));
+            if let DiskKey::Graph(h) = &key {
+                let dead: Vec<DiskKey> = inner
+                    .entries
+                    .keys()
+                    .filter(|k| matches!(k, DiskKey::Result(g, _) if g == h))
+                    .cloned()
+                    .collect();
+                for k in &dead {
+                    if let Some(sz) = inner.entries.remove(k) {
+                        inner.bytes = inner.bytes.saturating_sub(sz);
+                        inner.evictions += 1;
+                        let _ = fs::remove_file(self.path_of(k));
+                    }
+                }
+                if !dead.is_empty() {
+                    let entries = &inner.entries;
+                    inner.order.retain(|k| entries.contains_key(k));
+                }
+                evicted_graphs.push(h.clone());
+            }
+        }
+        evicted_graphs
+    }
+}
+
+fn write_file(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = fs::File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()
+}
+
+fn decode_graph(r: &mut Rd) -> Result<DiskGraph, String> {
+    let g = DiskGraph {
+        xadj: r.u32s()?,
+        adjncy: r.u32s()?,
+        vwgt: r.opt_i64s()?,
+        adjwgt: r.opt_i64s()?,
+    };
+    r.done()?;
+    Ok(g)
+}
+
+/// Decode a result body, verifying the *full* stored key against the
+/// requested one — the file name only carries a hash of the fingerprint.
+fn decode_result(r: &mut Rd, key: &ResultKey) -> Result<JobOutput, String> {
+    let gh = r.str_()?;
+    let fp = r.str_()?;
+    if gh != key.0 || fp != key.1 {
+        return Err("stored key does not match the file name".into());
+    }
+    let out = decode_output(r)?;
+    r.done()?;
+    Ok(out)
+}
+
+fn hex32(s: &str) -> bool {
+    s.len() == 32 && s.bytes().all(|b| b.is_ascii_hexdigit())
+}
+
+fn parse_graph_name(name: &std::ffi::OsStr) -> Option<DiskKey> {
+    let stem = name.to_str()?.strip_suffix(".g")?;
+    hex32(stem).then(|| DiskKey::Graph(stem.to_string()))
+}
+
+fn parse_result_name(name: &std::ffi::OsStr) -> Option<DiskKey> {
+    let stem = name.to_str()?.strip_suffix(".r")?;
+    let (gh, fh) = stem.split_once('-')?;
+    (hex32(gh) && hex32(fh)).then(|| DiskKey::Result(gh.to_string(), fh.to_string()))
+}
+
+// ---------------------------------------------------------------------
+// binary record encoding: length-prefixed little-endian arrays
+
+struct Wr {
+    out: Vec<u8>,
+}
+
+impl Wr {
+    fn new(magic: [u8; 4]) -> Wr {
+        Wr { out: magic.to_vec() }
+    }
+
+    fn u8(&mut self, x: u8) {
+        self.out.push(x);
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn i64(&mut self, x: i64) {
+        self.u64(x as u64);
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits()); // bit-exact round-trip
+    }
+
+    fn u32s(&mut self, xs: &[u32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn i64s(&mut self, xs: &[i64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.i64(x);
+        }
+    }
+
+    fn opt_i64s(&mut self, xs: Option<&[i64]>) {
+        match xs {
+            None => self.u8(0),
+            Some(xs) => {
+                self.u8(1);
+                self.i64s(xs);
+            }
+        }
+    }
+
+    fn str_(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.out.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append the checksum trailer and return the finished record.
+    fn seal(mut self) -> Vec<u8> {
+        let sum = fnv128_bytes(&self.out);
+        self.out.extend_from_slice(&sum);
+        self.out
+    }
+}
+
+/// Bounds-checked reader over a record body. Every method errors instead
+/// of slicing out of range, so truncated files decode to `Err`, not a
+/// panic.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() - self.pos < n {
+            return Err("truncated payload".into());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len(&mut self) -> Result<usize, String> {
+        let n = self.u64()?;
+        usize::try_from(n).map_err(|_| "length overflows usize".to_string())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.len()?;
+        let raw = self.take(n.checked_mul(4).ok_or("length overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i64s(&mut self) -> Result<Vec<i64>, String> {
+        let n = self.len()?;
+        let raw = self.take(n.checked_mul(8).ok_or("length overflow")?)?;
+        Ok(raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap()) ).collect())
+    }
+
+    fn opt_i64s(&mut self) -> Result<Option<Vec<i64>>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.i64s()?)),
+            t => Err(format!("bad option tag {t}")),
+        }
+    }
+
+    fn str_(&mut self) -> Result<String, String> {
+        let n = self.len()?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "invalid utf-8 in string".to_string())
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err("trailing bytes after payload".into())
+        }
+    }
+}
+
+/// Encode a memoizable output. `false` for introspection outputs
+/// (stats/metrics), which are never cacheable and so never reach disk.
+fn encode_output(out: &JobOutput, w: &mut Wr) -> bool {
+    match out {
+        JobOutput::Partition { edgecut, balance, part } => {
+            w.u8(1);
+            w.i64(*edgecut);
+            w.f64(*balance);
+            w.u32s(part);
+        }
+        JobOutput::Separator { separator, weight } => {
+            w.u8(2);
+            w.u32s(separator);
+            w.i64(*weight);
+        }
+        JobOutput::Ordering { positions, fill } => {
+            w.u8(3);
+            w.u32s(positions);
+            w.u64(*fill);
+        }
+        JobOutput::EdgePartition { assignment, vertex_cut, replication } => {
+            w.u8(4);
+            w.u32s(assignment);
+            w.i64(*vertex_cut);
+            w.f64(*replication);
+        }
+        JobOutput::Mapping { edgecut, qap, part } => {
+            w.u8(5);
+            w.i64(*edgecut);
+            w.i64(*qap);
+            w.u32s(part);
+        }
+        JobOutput::Stats(_) | JobOutput::Metrics(_) => return false,
+    }
+    true
+}
+
+fn decode_output(r: &mut Rd) -> Result<JobOutput, String> {
+    match r.u8()? {
+        1 => Ok(JobOutput::Partition {
+            edgecut: r.i64()?,
+            balance: r.f64()?,
+            part: r.u32s()?,
+        }),
+        2 => Ok(JobOutput::Separator { separator: r.u32s()?, weight: r.i64()? }),
+        3 => Ok(JobOutput::Ordering { positions: r.u32s()?, fill: r.u64()? }),
+        4 => Ok(JobOutput::EdgePartition {
+            assignment: r.u32s()?,
+            vertex_cut: r.i64()?,
+            replication: r.f64()?,
+        }),
+        5 => Ok(JobOutput::Mapping { edgecut: r.i64()?, qap: r.i64()?, part: r.u32s()? }),
+        t => Err(format!("unknown output tag {t}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::sync::atomic::AtomicU32;
+
+    static DIR_SEQ: AtomicU32 = AtomicU32::new(0);
+
+    /// Fresh, empty store directory unique to this process + call.
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "kahip-diskstore-{}-{}-{tag}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_output(seed: i64) -> JobOutput {
+        JobOutput::Partition {
+            edgecut: seed,
+            balance: 1.0 + seed as f64 * 0.001,
+            part: vec![0, 1, 0, 1, seed as u32],
+        }
+    }
+
+    fn rkey(gh: &str, fp: &str) -> ResultKey {
+        (gh.to_string(), fp.to_string())
+    }
+
+    #[test]
+    fn graph_round_trips_across_reopen() {
+        let dir = temp_dir("graph-rt");
+        let g = generators::grid2d(7, 5);
+        {
+            let store = DiskStore::open(&dir, 0).unwrap();
+            assert!(store.store_graph("a".repeat(32).as_str(), &g).is_empty());
+            assert!(store.has_graph(&"a".repeat(32)));
+        }
+        let store = DiskStore::open(&dir, 0).unwrap();
+        assert!(store.has_graph(&"a".repeat(32)), "index survives reopen");
+        let raw = store.load_graph(&"a".repeat(32)).expect("loads after restart");
+        let g2 = Graph::from_csr(raw.xadj, raw.adjncy, raw.vwgt, raw.adjwgt).unwrap();
+        assert_eq!(g2, g, "byte-identical CSR after a round trip");
+        assert_eq!(store.counters().hits, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn result_round_trips_with_exact_floats() {
+        let dir = temp_dir("result-rt");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        let gh = "b".repeat(32);
+        store.store_graph(&gh, &generators::grid2d(3, 3));
+        let key = rkey(&gh, "partition|k=2|seed=7");
+        let out = JobOutput::EdgePartition {
+            assignment: vec![3, 1, 4, 1, 5],
+            vertex_cut: -9,
+            replication: 1.0 / 3.0, // not representable exactly in decimal
+        };
+        store.store_result(&key, &out);
+        match store.load_result(&key).expect("hit") {
+            JobOutput::EdgePartition { assignment, vertex_cut, replication } => {
+                assert_eq!(assignment, vec![3, 1, 4, 1, 5]);
+                assert_eq!(vertex_cut, -9);
+                assert_eq!(replication.to_bits(), (1.0f64 / 3.0).to_bits(), "bit-exact");
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+        // wrong fingerprint with the same graph hash is a miss, not a hit
+        assert!(store.load_result(&rkey(&gh, "partition|k=2|seed=8")).is_none());
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn results_without_their_graph_are_not_spilled() {
+        let dir = temp_dir("no-orphan");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        let key = rkey(&"c".repeat(32), "fp");
+        store.store_result(&key, &sample_output(1));
+        assert!(store.load_result(&key).is_none(), "no graph on disk, no result");
+        assert_eq!(store.counters().results, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_and_truncated_entries_are_skipped_not_panicked() {
+        let dir = temp_dir("corrupt");
+        let gh = "d".repeat(32);
+        {
+            let store = DiskStore::open(&dir, 0).unwrap();
+            store.store_graph(&gh, &generators::grid2d(4, 4));
+            let key = rkey(&gh, "fp1");
+            store.store_result(&key, &sample_output(2));
+        }
+        // flip one payload byte in the result, truncate the graph
+        let rpath = fs::read_dir(dir.join("results")).unwrap().next().unwrap().unwrap().path();
+        let mut bytes = fs::read(&rpath).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&rpath, &bytes).unwrap();
+        let gpath = dir.join("graphs").join(format!("{gh}.g"));
+        let gbytes = fs::read(&gpath).unwrap();
+        fs::write(&gpath, &gbytes[..10]).unwrap();
+
+        let store = DiskStore::open(&dir, 0).unwrap();
+        assert!(store.load_result(&rkey(&gh, "fp1")).is_none(), "corrupt → miss");
+        assert!(store.load_graph(&gh).is_none(), "truncated → miss");
+        let c = store.counters();
+        assert_eq!(c.corrupt, 2);
+        assert!(!rpath.exists() && !gpath.exists(), "corrupt files are deleted");
+        // the store still accepts fresh writes afterwards
+        store.store_graph(&gh, &generators::grid2d(4, 4));
+        assert!(store.load_graph(&gh).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_to_the_same_hash_are_safe() {
+        let dir = temp_dir("race");
+        let store = std::sync::Arc::new(DiskStore::open(&dir, 0).unwrap());
+        let g = generators::grid2d(6, 6);
+        let gh = "e".repeat(32);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let store = std::sync::Arc::clone(&store);
+                let g = g.clone();
+                let gh = gh.clone();
+                scope.spawn(move || {
+                    store.store_graph(&gh, &g);
+                });
+            }
+        });
+        let raw = store.load_graph(&gh).expect("valid after racing writes");
+        let g2 = Graph::from_csr(raw.xadj, raw.adjncy, raw.vwgt, raw.adjwgt).unwrap();
+        assert_eq!(g2, g);
+        assert_eq!(store.counters().graphs, 1, "one entry, not eight");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_cap_evicts_fifo_and_cascades_to_results() {
+        let dir = temp_dir("evict");
+        // size the cap to hold roughly two graphs + their results
+        let g = generators::grid2d(8, 8);
+        let probe = DiskStore::open(dir.join("probe"), 0).unwrap();
+        probe.store_graph(&"0".repeat(32), &g);
+        let one_graph = probe.counters().bytes;
+        let _ = fs::remove_dir_all(dir.join("probe"));
+
+        let store = DiskStore::open(&dir, 2 * one_graph + one_graph / 2).unwrap();
+        let h1 = "1".repeat(32);
+        let h2 = "2".repeat(32);
+        let h3 = "3".repeat(32);
+        store.store_graph(&h1, &g);
+        store.store_result(&rkey(&h1, "fp"), &sample_output(1));
+        store.store_graph(&h2, &g);
+        // third graph pushes past the cap: h1 (oldest) goes, and its
+        // memoized result must go with it
+        let evicted = store.store_graph(&h3, &g);
+        assert!(evicted.contains(&h1), "oldest graph evicted, reported to caller");
+        assert!(!store.has_graph(&h1));
+        assert!(store.has_graph(&h2) && store.has_graph(&h3));
+        assert!(store.load_result(&rkey(&h1, "fp")).is_none(), "dependent result dropped");
+        assert_eq!(store.counters().results, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_output_variant_round_trips() {
+        let dir = temp_dir("variants");
+        let store = DiskStore::open(&dir, 0).unwrap();
+        let gh = "f".repeat(32);
+        store.store_graph(&gh, &generators::grid2d(2, 2));
+        let outputs = [
+            JobOutput::Partition { edgecut: 7, balance: 1.03, part: vec![0, 1, 2] },
+            JobOutput::Separator { separator: vec![9, 8], weight: 17 },
+            JobOutput::Ordering { positions: vec![2, 0, 1], fill: u64::MAX },
+            JobOutput::EdgePartition {
+                assignment: vec![1],
+                vertex_cut: i64::MIN,
+                replication: f64::MAX,
+            },
+            JobOutput::Mapping { edgecut: -1, qap: 42, part: vec![] },
+        ];
+        for (i, out) in outputs.iter().enumerate() {
+            let key = rkey(&gh, &format!("fp{i}"));
+            store.store_result(&key, out);
+            let back = store.load_result(&key).expect("round trip");
+            assert_eq!(format!("{out:?}"), format!("{back:?}"), "variant {i}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

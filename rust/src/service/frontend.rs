@@ -5,16 +5,69 @@
 //! - **stdin/stdout** (`kahip serve`): submissions block at a full queue,
 //!   so backpressure propagates up the pipe — the natural mode for batch
 //!   piping.
-//! - **TCP** (`kahip serve --listen=host:port`): one thread per
-//!   connection; a full queue is reported to the client as an explicit
-//!   `{"ok":false,"error":"queue full (backpressure)"}` response.
+//! - **TCP** (`kahip serve --listen=host:port`): a single nonblocking
+//!   poll loop multiplexes every connection — no thread per connection,
+//!   so thousands of mostly-idle clients cost a registered table entry
+//!   each, not an OS thread. A full queue is reported to the client as an
+//!   explicit `{"ok":false,"error":"queue full (backpressure)"}` response.
+//!
+//! A bad request line — invalid JSON, invalid UTF-8, or an over-long
+//! line — answers with an error response and the connection lives on;
+//! pipelined requests after it are still served.
+//!
+//! TCP connection lifecycle (one state per registered connection):
+//!
+//! ```text
+//!             accept                    table full
+//!   listener ───────▶ OPEN   listener ────────────▶ SHED (error line, close)
+//!                      │ ▲
+//!        peer half-close│ │ requests in / responses out (poll loop)
+//!                      ▼ │
+//!                   DRAINING  — no more reads; parked until every
+//!                      │       in-flight job has answered and the
+//!                      │       output buffer is flushed
+//!                      ▼
+//!                    CLOSED  — also reached from OPEN on idle timeout
+//!                              (quiet too long) or write/read error
+//! ```
 
 use super::protocol::{peek_id, JobRequest, JobResult};
+use super::stats::NetCounters;
 use super::Service;
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{self, BufRead, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs of the TCP poll loop.
+#[derive(Clone, Debug)]
+pub struct FrontendConfig {
+    /// Admission cap: connections beyond this are shed with an explicit
+    /// error line instead of being accepted.
+    pub max_conns: usize,
+    /// A connection with nothing buffered, nothing in flight, and no
+    /// bytes seen for this long is closed.
+    pub idle_timeout: Duration,
+    /// A request line longer than this answers with an error and stops
+    /// the connection's reads (protects the server from unbounded lines).
+    pub max_line_bytes: usize,
+    /// A client that stops draining responses past this much buffered
+    /// output is dropped.
+    pub max_outbuf_bytes: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> FrontendConfig {
+        FrontendConfig {
+            max_conns: 1024,
+            idle_timeout: Duration::from_secs(300),
+            max_line_bytes: 64 << 20,
+            max_outbuf_bytes: 64 << 20,
+        }
+    }
+}
 
 /// Parse a request line and hand it to the service, routing every
 /// failure mode into the result channel so the caller's writer sees a
@@ -41,7 +94,8 @@ fn dispatch(svc: &Service, line: &str, tx: &mpsc::Sender<JobResult>, block: bool
 }
 
 /// Serve JSON-lines over stdin/stdout until EOF; returns once every
-/// accepted job has been answered.
+/// accepted job has been answered. A line that is not valid UTF-8
+/// answers with an error and the stream continues.
 pub fn serve_stdin(svc: &Service) -> std::io::Result<()> {
     let (tx, rx) = mpsc::channel::<JobResult>();
     std::thread::scope(|scope| {
@@ -60,65 +114,257 @@ pub fn serve_stdin(svc: &Service) -> std::io::Result<()> {
             }
         });
         let stdin = std::io::stdin();
-        for line in stdin.lock().lines() {
-            let Ok(line) = line else { break };
-            if line.trim().is_empty() {
-                continue;
+        let mut reader = stdin.lock();
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break,
+                Ok(_) => {
+                    let Ok(line) = std::str::from_utf8(&buf) else {
+                        let _ = tx.send(JobResult::error(
+                            "?",
+                            None,
+                            "request line is not valid UTF-8",
+                        ));
+                        continue;
+                    };
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    dispatch(svc, line, &tx, true);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
             }
-            dispatch(svc, line.trim(), &tx, true);
         }
         drop(tx); // writer exits once the last in-flight job reports
     });
     Ok(())
 }
 
-/// Accept loop: one handler thread per connection, forever. Callers bind
+/// Serve TCP with the default [`FrontendConfig`], forever. Callers bind
 /// the listener themselves (port 0 for tests/examples) so they know the
 /// address before serving.
 pub fn serve_tcp(svc: Arc<Service>, listener: TcpListener) -> std::io::Result<()> {
-    for conn in listener.incoming() {
-        let Ok(sock) = conn else { continue };
-        let svc = Arc::clone(&svc);
-        std::thread::spawn(move || {
-            let _ = handle_connection(&svc, sock);
-        });
-    }
-    Ok(())
+    serve_tcp_with(svc, listener, FrontendConfig::default(), None)
 }
 
-fn handle_connection(svc: &Service, sock: TcpStream) -> std::io::Result<()> {
-    let (tx, rx) = mpsc::channel::<JobResult>();
-    let mut write_half = sock.try_clone()?;
-    let writer = std::thread::spawn(move || {
-        let mut out = BufWriter::new(&mut write_half);
-        for res in rx {
-            if writeln!(out, "{}", res.to_json_line()).is_err() {
-                break;
+/// One registered connection in the poll loop's table.
+struct Conn {
+    sock: TcpStream,
+    /// Handed to the scheduler; results come back on `rx`.
+    tx: mpsc::Sender<JobResult>,
+    rx: mpsc::Receiver<JobResult>,
+    /// Bytes read but not yet terminated by a newline.
+    rbuf: Vec<u8>,
+    /// Rendered responses not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests dispatched whose result has not yet been drained from
+    /// `rx` — a connection never closes with an unanswered request.
+    inflight: usize,
+    read_closed: bool,
+    dead: bool,
+    last_activity: Instant,
+}
+
+/// The nonblocking multiplexed TCP frontend: one thread, one poll loop
+/// over every connection. Returns when `stop` becomes true (never, if
+/// `stop` is `None`).
+pub fn serve_tcp_with(
+    svc: Arc<Service>,
+    listener: TcpListener,
+    cfg: FrontendConfig,
+    stop: Option<Arc<AtomicBool>>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let net = Arc::clone(svc.net());
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        if stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst)) {
+            for c in &conns {
+                let _ = c.sock.shutdown(Shutdown::Both);
+                net.disconnected();
             }
-            if out.flush().is_err() {
-                break;
+            return Ok(());
+        }
+        let mut activity = false;
+        loop {
+            match listener.accept() {
+                Ok((sock, _)) => {
+                    activity = true;
+                    if conns.len() >= cfg.max_conns {
+                        shed(sock, &net);
+                        continue;
+                    }
+                    if sock.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = sock.set_nodelay(true);
+                    let (tx, rx) = mpsc::channel();
+                    net.connected();
+                    conns.push(Conn {
+                        sock,
+                        tx,
+                        rx,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        wpos: 0,
+                        inflight: 0,
+                        read_closed: false,
+                        dead: false,
+                        last_activity: Instant::now(),
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
             }
         }
-    });
-    let reader = BufReader::new(sock);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
+        let now = Instant::now();
+        conns.retain_mut(|c| {
+            activity |= pump(&svc, c, &cfg, now);
+            let drained = c.inflight == 0 && c.wpos >= c.wbuf.len();
+            let finished = c.read_closed && c.rbuf.is_empty() && drained;
+            let idle = drained
+                && c.rbuf.is_empty()
+                && now.duration_since(c.last_activity) >= cfg.idle_timeout;
+            if c.dead || finished || idle {
+                let _ = c.sock.shutdown(Shutdown::Both);
+                net.disconnected();
+                false
+            } else {
+                true
+            }
+        });
+        if !activity {
+            // nothing moved anywhere: yield instead of spinning
+            std::thread::sleep(Duration::from_millis(1));
         }
-        // non-blocking: a full queue becomes an error response (explicit
-        // backpressure the client can react to)
-        dispatch(svc, line.trim(), &tx, false);
     }
-    drop(tx);
-    let _ = writer.join();
-    Ok(())
+}
+
+/// Admission control: past `max_conns` a connection gets one explicit
+/// error line (so clients can tell shedding from a crash) and is closed.
+fn shed(mut sock: TcpStream, net: &NetCounters) {
+    net.shed();
+    let line =
+        JobResult::error("?", None, "connection shed: server at max_conns").to_json_line();
+    // the line fits any socket send buffer, so the bounded blocking write
+    // effectively never stalls the poll loop
+    let _ = sock.set_write_timeout(Some(Duration::from_millis(100)));
+    let _ = sock.write_all(format!("{line}\n").as_bytes());
+    let _ = sock.shutdown(Shutdown::Both);
+}
+
+/// Move one connection forward: drain finished results into the output
+/// buffer, read + dispatch complete request lines, flush what the socket
+/// accepts. Returns whether anything moved.
+fn pump(svc: &Service, c: &mut Conn, cfg: &FrontendConfig, now: Instant) -> bool {
+    let mut activity = false;
+    while let Ok(res) = c.rx.try_recv() {
+        c.inflight -= 1;
+        c.wbuf.extend_from_slice(res.to_json_line().as_bytes());
+        c.wbuf.push(b'\n');
+        activity = true;
+    }
+    if !c.read_closed && !c.dead {
+        let mut buf = [0u8; 8192];
+        loop {
+            match c.sock.read(&mut buf) {
+                Ok(0) => {
+                    c.read_closed = true;
+                    activity = true;
+                    break;
+                }
+                Ok(n) => {
+                    activity = true;
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                    drain_lines(svc, c);
+                    if c.rbuf.len() > cfg.max_line_bytes {
+                        let _ = c.tx.send(JobResult::error(
+                            "?",
+                            None,
+                            format!("request line exceeds {} bytes", cfg.max_line_bytes),
+                        ));
+                        c.inflight += 1;
+                        c.rbuf.clear();
+                        c.read_closed = true;
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.dead = true;
+                    break;
+                }
+            }
+        }
+        if c.read_closed && !c.rbuf.is_empty() {
+            // final line arrived without a trailing newline
+            let line = std::mem::take(&mut c.rbuf);
+            dispatch_bytes(svc, &line, c);
+        }
+    }
+    while c.wpos < c.wbuf.len() && !c.dead {
+        match c.sock.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => c.dead = true,
+            Ok(n) => {
+                c.wpos += n;
+                activity = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => c.dead = true,
+        }
+    }
+    if c.wpos >= c.wbuf.len() && !c.wbuf.is_empty() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    }
+    if c.wbuf.len() - c.wpos > cfg.max_outbuf_bytes {
+        c.dead = true; // client stopped draining responses
+    }
+    if activity {
+        c.last_activity = now;
+    }
+    activity
+}
+
+/// Dispatch every complete (newline-terminated) line buffered so far.
+fn drain_lines(svc: &Service, c: &mut Conn) {
+    while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = c.rbuf.drain(..=pos).collect();
+        dispatch_bytes(svc, &line[..line.len() - 1], c);
+    }
+}
+
+/// One request line, raw. A line that is not UTF-8 answers with an error
+/// response — the connection (and the pipelined requests behind the bad
+/// line) must survive. `dispatch` sends exactly one result per call, so
+/// `inflight` stays reconciled with the results arriving on `rx`.
+fn dispatch_bytes(svc: &Service, raw: &[u8], c: &mut Conn) {
+    let Ok(text) = std::str::from_utf8(raw) else {
+        let _ = c.tx.send(JobResult::error("?", None, "request line is not valid UTF-8"));
+        c.inflight += 1;
+        return;
+    };
+    let text = text.trim();
+    if text.is_empty() {
+        return;
+    }
+    dispatch(svc, text, &c.tx, false);
+    c.inflight += 1;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::service::{json, ServiceConfig};
+    use std::io::{BufRead, BufReader};
 
     fn fig4_line(id: &str, seed: u64) -> String {
         format!(
@@ -220,5 +466,85 @@ mod tests {
         assert_eq!(second.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(second.get("graph").unwrap().as_str(), Some(hash.as_str()));
         assert_eq!(svc.stats().graphs_parsed, 1, "hash reference must not re-parse");
+    }
+
+    /// Regression for the connection-killing bad-line bug: garbage bytes
+    /// between two valid pipelined requests must answer with an error
+    /// line, and both valid requests must still be served.
+    #[test]
+    fn garbage_bytes_mid_stream_do_not_kill_the_connection() {
+        let svc = Arc::new(Service::new(ServiceConfig { workers: 2, ..Default::default() }));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let _ = serve_tcp(svc, listener);
+            });
+        }
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all((fig4_line("before", 0) + "\n").as_bytes()).unwrap();
+        sock.write_all(b"\xff\xfe\x80garbage\xc0\n").unwrap(); // not UTF-8
+        sock.write_all((fig4_line("after", 1) + "\n").as_bytes()).unwrap();
+        sock.shutdown(std::net::Shutdown::Write).unwrap();
+
+        let reader = BufReader::new(sock);
+        let mut responses: Vec<json::Json> = Vec::new();
+        for line in reader.lines() {
+            responses.push(json::parse(&line.unwrap()).unwrap());
+        }
+        assert_eq!(responses.len(), 3, "one response per line, bad line included");
+        let by_id = |id: &str| {
+            responses
+                .iter()
+                .find(|r| r.get("id").and_then(json::Json::as_str) == Some(id))
+                .unwrap_or_else(|| panic!("no response for id {id}"))
+        };
+        assert_eq!(by_id("before").get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            by_id("after").get("ok").unwrap().as_bool(),
+            Some(true),
+            "requests pipelined after the bad line must still be served"
+        );
+        let bad = by_id("?");
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("UTF-8"));
+    }
+
+    #[test]
+    fn admission_control_sheds_past_max_conns() {
+        let svc = Arc::new(Service::new(ServiceConfig { workers: 1, ..Default::default() }));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            let cfg = FrontendConfig { max_conns: 1, ..Default::default() };
+            std::thread::spawn(move || {
+                let _ = serve_tcp_with(svc, listener, cfg, Some(stop));
+            });
+        }
+        let mut first = TcpStream::connect(addr).unwrap();
+        // wait until the poll loop has registered the first connection
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while svc.stats().open_connections < 1 {
+            assert!(Instant::now() < deadline, "first connection never registered");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let second = TcpStream::connect(addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(&second).read_line(&mut line).unwrap();
+        let shed = json::parse(line.trim()).unwrap();
+        assert_eq!(shed.get("ok").unwrap().as_bool(), Some(false));
+        assert!(shed.get("error").unwrap().as_str().unwrap().contains("shed"));
+        assert_eq!(svc.stats().connections_shed, 1);
+        // the admitted connection is unaffected by the shed one
+        first.write_all((fig4_line("ok", 0) + "\n").as_bytes()).unwrap();
+        line.clear();
+        BufReader::new(&first).read_line(&mut line).unwrap();
+        let res = json::parse(line.trim()).unwrap();
+        assert_eq!(res.get("ok").unwrap().as_bool(), Some(true));
+        stop.store(true, Ordering::SeqCst);
     }
 }

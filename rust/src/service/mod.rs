@@ -26,7 +26,14 @@
 //! Determinism is the load-bearing property: a job executes exactly the
 //! code path of the corresponding direct library call with the same seed,
 //! so serving from the memo is indistinguishable from recomputing.
+//!
+//! With `--store_dir` the store gains a persistent tier
+//! ([`diskstore::DiskStore`]): interned graphs and memo entries are
+//! spilled to disk as checksummed, atomically-renamed records, indexed
+//! on startup and promoted back into memory on a miss — the memo
+//! survives restarts and keeps serving byte-identical responses.
 
+pub mod diskstore;
 pub mod frontend;
 pub mod json;
 pub mod protocol;
@@ -34,6 +41,8 @@ pub mod scheduler;
 pub mod stats;
 pub mod store;
 
+pub use diskstore::DiskStore;
+pub use frontend::FrontendConfig;
 pub use protocol::{GraphPayload, JobKind, JobOutput, JobRequest, JobResult, JobSpec};
 pub use scheduler::{CancelHandle, SubmitError};
 pub use stats::ServiceStats;
@@ -62,6 +71,12 @@ pub struct ServiceConfig {
     /// `--trace-json` sink: when set, every executed job's V-cycle report
     /// is appended to this file as one JSON line (`{"id","job","trace"}`).
     pub trace_log: Option<String>,
+    /// `--store_dir`: directory of the persistent content-addressed
+    /// store. `None` = in-memory only (the memo dies with the process).
+    pub store_dir: Option<String>,
+    /// Byte cap of the persistent store (0 = unbounded). FIFO eviction;
+    /// evicting a graph drops its dependent results.
+    pub disk_cap_bytes: u64,
 }
 
 impl Default for ServiceConfig {
@@ -73,6 +88,8 @@ impl Default for ServiceConfig {
             max_results: 4096,
             threads_per_job: 0,
             trace_log: None,
+            store_dir: None,
+            disk_cap_bytes: 1 << 30,
         }
     }
 }
@@ -83,11 +100,27 @@ impl Default for ServiceConfig {
 pub struct Service {
     store: Arc<GraphStore>,
     scheduler: scheduler::Scheduler,
+    net: Arc<stats::NetCounters>,
 }
 
 impl Service {
     pub fn new(cfg: ServiceConfig) -> Service {
-        let store = Arc::new(GraphStore::new(cfg.max_graphs, cfg.max_results));
+        // a broken store directory degrades to the in-memory store: the
+        // service must come up and serve, just without persistence
+        let disk = cfg.store_dir.as_deref().and_then(|dir| {
+            match DiskStore::open(dir, cfg.disk_cap_bytes) {
+                Ok(d) => Some(d),
+                Err(e) => {
+                    eprintln!(
+                        "kahip serve: cannot open store dir {dir}: {e}; \
+                         continuing without persistence"
+                    );
+                    None
+                }
+            }
+        });
+        let store = Arc::new(GraphStore::with_disk(cfg.max_graphs, cfg.max_results, disk));
+        let net = Arc::new(stats::NetCounters::new());
         let threads_per_job = if cfg.threads_per_job > 0 {
             cfg.threads_per_job
         } else {
@@ -100,8 +133,9 @@ impl Service {
             Arc::clone(&store),
             threads_per_job,
             cfg.trace_log.as_deref(),
+            Arc::clone(&net),
         );
-        Service { store, scheduler }
+        Service { store, scheduler, net }
     }
 
     /// Submit a job; its [`JobResult`] arrives on `tx` exactly once. At a
@@ -147,6 +181,12 @@ impl Service {
     /// The content-addressed store (shared with the scheduler).
     pub fn store(&self) -> &Arc<GraphStore> {
         &self.store
+    }
+
+    /// Connection counters (bumped by the TCP frontend's poll loop,
+    /// folded into every [`Service::stats`] snapshot).
+    pub(crate) fn net(&self) -> &Arc<stats::NetCounters> {
+        &self.net
     }
 }
 

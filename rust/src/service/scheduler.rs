@@ -19,7 +19,7 @@
 //!   every accepted job gets exactly one result.
 
 use super::protocol::{self, JobKind, JobRequest, JobResult};
-use super::stats::{ServiceStats, StatsCollector};
+use super::stats::{NetCounters, ServiceStats, StatsCollector};
 use super::store::GraphStore;
 use crate::graph::Graph;
 use std::collections::{HashMap, VecDeque};
@@ -118,6 +118,9 @@ struct Shared {
     capacity: usize,
     store: Arc<GraphStore>,
     stats: StatsCollector,
+    /// Connection counters owned by the service, bumped by the TCP
+    /// frontend; folded into every stats snapshot.
+    net: Arc<NetCounters>,
     /// Engine threads each worker hands to `execute_with_threads` so the
     /// pool shares the machine instead of oversubscribing it (0 = auto).
     threads_per_job: usize,
@@ -141,6 +144,7 @@ impl Scheduler {
         store: Arc<GraphStore>,
         threads_per_job: usize,
         trace_log: Option<&str>,
+        net: Arc<NetCounters>,
     ) -> Scheduler {
         let trace_sink = trace_log.and_then(|path| {
             match std::fs::OpenOptions::new().create(true).append(true).open(path) {
@@ -162,6 +166,7 @@ impl Scheduler {
             capacity: capacity.max(1),
             store,
             stats: StatsCollector::new(),
+            net,
             threads_per_job,
             trace_sink,
         });
@@ -241,6 +246,12 @@ impl Scheduler {
         // jobs with a wall-clock time limit are nondeterministic: never
         // serve them from the memo or coalesce them onto each other
         let cacheable = req.spec.cacheable();
+        // promote a persisted memo entry into memory *before* taking the
+        // state lock: the memo checks below stay memory-only, so disk IO
+        // can never stall the queue or the workers
+        if cacheable {
+            shared.store.stage_from_disk(&key);
+        }
 
         let mut st = shared.state.lock().unwrap();
         // count the memo miss only once per submission: blocking
@@ -340,6 +351,7 @@ impl Scheduler {
             depth,
             self.shared.capacity,
             self.shared.store.counters(),
+            self.shared.net.snapshot(),
         )
     }
 

@@ -14,8 +14,54 @@ use super::protocol::JobKind;
 use super::store::StoreCounters;
 use crate::obs::prometheus::PromWriter;
 use crate::util::stat::LogHistogram;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Connection-lifecycle counters maintained by the TCP frontend's poll
+/// loop. Lock-free (relaxed atomics): the poll loop bumps these on its
+/// hot path and exact cross-counter consistency is not required.
+#[derive(Default)]
+pub struct NetCounters {
+    open: AtomicUsize,
+    accepted: AtomicU64,
+    sheds: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn new() -> NetCounters {
+        NetCounters::default()
+    }
+
+    pub fn connected(&self) {
+        self.open.fetch_add(1, Ordering::Relaxed);
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn disconnected(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            open: self.open.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`NetCounters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetSnapshot {
+    pub open: usize,
+    pub accepted: u64,
+    pub sheds: u64,
+}
 
 /// A point-in-time snapshot of the service.
 #[derive(Clone, Debug, Default)]
@@ -45,6 +91,26 @@ pub struct ServiceStats {
     pub graphs_parsed: u64,
     pub graphs_reused: u64,
     pub results_stored: usize,
+    /// Persistent-tier (disk) entries loaded.
+    pub disk_hits: u64,
+    /// Persistent-tier lookups that found nothing usable.
+    pub disk_misses: u64,
+    /// Persistent-tier entries evicted by the byte cap.
+    pub disk_evictions: u64,
+    /// Persistent-tier entries skipped + deleted as corrupt.
+    pub disk_corrupt: u64,
+    /// Graphs currently in the persistent tier.
+    pub disk_graphs: usize,
+    /// Results currently in the persistent tier.
+    pub disk_results: usize,
+    /// Bytes currently in the persistent tier.
+    pub disk_bytes: u64,
+    /// TCP connections currently registered in the poll loop.
+    pub open_connections: usize,
+    /// TCP connections accepted over the service lifetime.
+    pub connections_accepted: u64,
+    /// TCP connections shed by admission control (`max_conns`).
+    pub connections_shed: u64,
     /// Median end-to-end job latency (submit → result), seconds.
     /// Bucket-resolution estimate from the merged histograms.
     pub p50_latency: f64,
@@ -76,6 +142,9 @@ impl ServiceStats {
              \x20 submitted {}  completed {}  failed {}  cancelled {}  rejected {}\n\
              \x20 cache: hits {}  coalesced {}  misses {}  hit-rate {:.3}\n\
              \x20 store: graphs {} (parsed {}, reused {})  results {}\n\
+             \x20 disk: hits {}  misses {}  evictions {}  corrupt {}  \
+             graphs {}  results {}  bytes {}\n\
+             \x20 net: open {}  accepted {}  shed {}\n\
              \x20 latency: p50 {:.6}s  p99 {:.6}s\n",
             self.workers,
             self.queue_depth,
@@ -93,6 +162,16 @@ impl ServiceStats {
             self.graphs_parsed,
             self.graphs_reused,
             self.results_stored,
+            self.disk_hits,
+            self.disk_misses,
+            self.disk_evictions,
+            self.disk_corrupt,
+            self.disk_graphs,
+            self.disk_results,
+            self.disk_bytes,
+            self.open_connections,
+            self.connections_accepted,
+            self.connections_shed,
             self.p50_latency,
             self.p99_latency,
         )
@@ -117,6 +196,19 @@ impl ServiceStats {
             ("graphs_parsed".into(), Json::Int(self.graphs_parsed as i64)),
             ("graphs_reused".into(), Json::Int(self.graphs_reused as i64)),
             ("results_stored".into(), Json::Int(self.results_stored as i64)),
+            ("disk_hits".into(), Json::Int(self.disk_hits as i64)),
+            ("disk_misses".into(), Json::Int(self.disk_misses as i64)),
+            ("disk_evictions".into(), Json::Int(self.disk_evictions as i64)),
+            ("disk_corrupt".into(), Json::Int(self.disk_corrupt as i64)),
+            ("disk_graphs".into(), Json::Int(self.disk_graphs as i64)),
+            ("disk_results".into(), Json::Int(self.disk_results as i64)),
+            ("disk_bytes".into(), Json::Int(self.disk_bytes as i64)),
+            ("open_connections".into(), Json::Int(self.open_connections as i64)),
+            (
+                "connections_accepted".into(),
+                Json::Int(self.connections_accepted as i64),
+            ),
+            ("connections_shed".into(), Json::Int(self.connections_shed as i64)),
             ("p50_latency".into(), Json::Float(self.p50_latency)),
             ("p99_latency".into(), Json::Float(self.p99_latency)),
         ])
@@ -168,6 +260,54 @@ impl ServiceStats {
             self.graphs_reused,
         );
         w.gauge("kahip_results_stored", "Memoized results held.", self.results_stored as f64);
+        w.counter(
+            "kahip_disk_hits_total",
+            "Persistent-store entries loaded from disk.",
+            self.disk_hits,
+        );
+        w.counter(
+            "kahip_disk_misses_total",
+            "Persistent-store lookups that found nothing usable.",
+            self.disk_misses,
+        );
+        w.counter(
+            "kahip_disk_evictions_total",
+            "Persistent-store entries evicted by the byte cap.",
+            self.disk_evictions,
+        );
+        w.counter(
+            "kahip_disk_corrupt_total",
+            "Persistent-store entries skipped and deleted as corrupt.",
+            self.disk_corrupt,
+        );
+        w.gauge_labeled(
+            "kahip_disk_entries",
+            "Entries in the persistent store by kind.",
+            &[("kind", "graphs")],
+            self.disk_graphs as f64,
+        );
+        w.gauge_labeled(
+            "kahip_disk_entries",
+            "Entries in the persistent store by kind.",
+            &[("kind", "results")],
+            self.disk_results as f64,
+        );
+        w.gauge("kahip_disk_bytes", "Bytes in the persistent store.", self.disk_bytes as f64);
+        w.gauge(
+            "kahip_open_connections",
+            "TCP connections registered in the poll loop.",
+            self.open_connections as f64,
+        );
+        w.counter(
+            "kahip_connections_accepted_total",
+            "TCP connections accepted.",
+            self.connections_accepted,
+        );
+        w.counter(
+            "kahip_connections_shed_total",
+            "TCP connections shed by admission control.",
+            self.connections_shed,
+        );
         for (kind, h) in &self.latency {
             w.histogram(
                 "kahip_job_latency_seconds",
@@ -242,16 +382,17 @@ impl StatsCollector {
         c.latency[slot].record(latency.as_secs_f64());
     }
 
-    /// Snapshot, merging in the queue view and the store counters. The
-    /// histograms are copied out under the lock (a few hundred bytes) and
-    /// merged for the global percentiles outside it — a stats poll must
-    /// not stall workers.
+    /// Snapshot, merging in the queue view, the store counters, and the
+    /// frontend's connection counters. The histograms are copied out
+    /// under the lock (a few hundred bytes) and merged for the global
+    /// percentiles outside it — a stats poll must not stall workers.
     pub fn snapshot(
         &self,
         workers: usize,
         queue_depth: usize,
         queue_capacity: usize,
         store: StoreCounters,
+        net: NetSnapshot,
     ) -> ServiceStats {
         let mut snap = {
             let c = self.inner.lock().unwrap();
@@ -271,6 +412,16 @@ impl StatsCollector {
                 graphs_parsed: store.graphs_parsed,
                 graphs_reused: store.graphs_reused,
                 results_stored: store.results_stored,
+                disk_hits: store.disk_hits,
+                disk_misses: store.disk_misses,
+                disk_evictions: store.disk_evictions,
+                disk_corrupt: store.disk_corrupt,
+                disk_graphs: store.disk_graphs,
+                disk_results: store.disk_results,
+                disk_bytes: store.disk_bytes,
+                open_connections: net.open,
+                connections_accepted: net.accepted,
+                connections_shed: net.sheds,
                 p50_latency: 0.0,
                 p99_latency: 0.0,
                 latency: JobKind::ALL
@@ -303,7 +454,13 @@ mod tests {
         s.finished(JobKind::Partition, true, false, Duration::from_millis(10));
         s.finished(JobKind::Ordering, false, false, Duration::from_millis(20));
         s.finished(JobKind::Partition, false, true, Duration::from_millis(1));
-        let snap = s.snapshot(4, 2, 64, StoreCounters { hits: 3, misses: 1, ..Default::default() });
+        let snap = s.snapshot(
+            4,
+            2,
+            64,
+            StoreCounters { hits: 3, misses: 1, ..Default::default() },
+            NetSnapshot::default(),
+        );
         assert_eq!(snap.workers, 4);
         assert_eq!(snap.queue_depth, 2);
         assert_eq!(snap.submitted, 2);
@@ -360,7 +517,7 @@ mod tests {
         for &x in &exact {
             s.finished(JobKind::Partition, true, false, Duration::from_secs_f64(x));
         }
-        let snap = s.snapshot(1, 0, 8, StoreCounters::default());
+        let snap = s.snapshot(1, 0, 8, StoreCounters::default(), NetSnapshot::default());
         exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
         for (p, est) in [(50.0, snap.p50_latency), (99.0, snap.p99_latency)] {
             let truth = crate::util::stat::percentile_sorted(&exact, p);
@@ -376,7 +533,13 @@ mod tests {
         let s = StatsCollector::new();
         s.submitted();
         s.finished(JobKind::Partition, true, false, Duration::from_millis(5));
-        let snap = s.snapshot(2, 0, 8, StoreCounters { hits: 1, ..Default::default() });
+        let snap = s.snapshot(
+            2,
+            0,
+            8,
+            StoreCounters { hits: 1, ..Default::default() },
+            NetSnapshot { open: 3, accepted: 5, sheds: 2 },
+        );
         let text = snap.to_prometheus();
         assert!(text.contains("# TYPE kahip_workers gauge"));
         assert!(text.contains("kahip_workers 2"));
@@ -391,5 +554,12 @@ mod tests {
         assert!(
             text.contains("kahip_job_latency_seconds_bucket{kind=\"partition\",le=\"+Inf\"} 1")
         );
+        // disk + connection series are part of the fixed schema
+        assert!(text.contains("# TYPE kahip_disk_hits_total counter"));
+        assert!(text.contains("kahip_disk_entries{kind=\"graphs\"} 0"));
+        assert!(text.contains("kahip_disk_entries{kind=\"results\"} 0"));
+        assert!(text.contains("kahip_open_connections 3"));
+        assert!(text.contains("kahip_connections_accepted_total 5"));
+        assert!(text.contains("kahip_connections_shed_total 2"));
     }
 }

@@ -8,7 +8,21 @@
 //! are answered without touching the worker pool. Both tables evict FIFO
 //! under a configurable cap — eviction is always safe because keys are
 //! content hashes, never names.
+//!
+//! With a [`DiskStore`] attached (`kahip serve --store_dir`), the store
+//! becomes two-tiered: interned graphs and memo entries are spilled to
+//! disk on insert and read back on a memory miss, so the memo survives
+//! restarts. The coherence invariant across both tiers is: **a memo
+//! entry may only exist in a tier if its graph is resolvable from some
+//! tier.** Concretely:
+//! - evicting a graph from *disk* drops its on-disk results (inside
+//!   [`DiskStore`]) and, if the graph is not in memory either, its
+//!   in-memory memos;
+//! - evicting a graph from *memory* drops its in-memory memos only when
+//!   the graph is absent from disk too (otherwise `Stored(hash)` still
+//!   resolves, so the memos stay valid).
 
+use super::diskstore::DiskStore;
 use super::protocol::{GraphPayload, JobOutput};
 use crate::graph::Graph;
 use std::collections::{HashMap, VecDeque};
@@ -27,12 +41,27 @@ pub struct StoreCounters {
     pub misses: u64,
     /// Graphs parsed + validated from inline payloads.
     pub graphs_parsed: u64,
-    /// Inline payloads that matched an already-interned graph.
+    /// Payloads resolved without a parse: inline repeats *and*
+    /// `Stored(hash)` references served from memory or disk.
     pub graphs_reused: u64,
-    /// Graphs currently interned.
+    /// Graphs currently interned in memory.
     pub graphs_stored: usize,
-    /// Results currently memoized.
+    /// Results currently memoized in memory.
     pub results_stored: usize,
+    /// Persistent-tier entries loaded from disk.
+    pub disk_hits: u64,
+    /// Persistent-tier lookups that found nothing usable.
+    pub disk_misses: u64,
+    /// Persistent-tier entries evicted by the byte cap.
+    pub disk_evictions: u64,
+    /// Persistent-tier entries skipped + deleted as corrupt.
+    pub disk_corrupt: u64,
+    /// Graphs currently on disk.
+    pub disk_graphs: usize,
+    /// Results currently on disk.
+    pub disk_results: usize,
+    /// Bytes currently on disk.
+    pub disk_bytes: u64,
 }
 
 struct Inner {
@@ -46,16 +75,40 @@ struct Inner {
     graphs_reused: u64,
 }
 
+impl Inner {
+    /// Drop every memoized result keyed against `hash` (both tables stay
+    /// in sync: the order queue is filtered when anything was removed).
+    fn purge_results_of(&mut self, hash: &str) {
+        let before = self.results.len();
+        self.results.retain(|k, _| k.0 != hash);
+        if self.results.len() != before {
+            let results = &self.results;
+            self.result_order.retain(|k| results.contains_key(k));
+        }
+    }
+}
+
 /// Thread-safe content-addressed store shared by the scheduler and all
-/// frontends.
+/// frontends. Lock order is always memory (`inner`) before disk — the
+/// disk tier never calls back into this store.
 pub struct GraphStore {
     inner: Mutex<Inner>,
     max_graphs: usize,
     max_results: usize,
+    disk: Option<DiskStore>,
 }
 
 impl GraphStore {
     pub fn new(max_graphs: usize, max_results: usize) -> GraphStore {
+        GraphStore::with_disk(max_graphs, max_results, None)
+    }
+
+    /// A store with an optional persistent tier attached.
+    pub fn with_disk(
+        max_graphs: usize,
+        max_results: usize,
+        disk: Option<DiskStore>,
+    ) -> GraphStore {
         GraphStore {
             inner: Mutex::new(Inner {
                 graphs: HashMap::new(),
@@ -69,23 +122,18 @@ impl GraphStore {
             }),
             max_graphs: max_graphs.max(1),
             max_results: max_results.max(1),
+            disk,
         }
     }
 
     /// Resolve a request's graph payload to `(content_hash, graph)`.
-    /// Inline payloads are parsed at most once per distinct content.
+    /// Inline payloads are parsed at most once per distinct content;
+    /// `Stored(hash)` references fall back to the persistent tier on a
+    /// memory miss.
     pub fn intern(&self, payload: &GraphPayload) -> Result<(String, Arc<Graph>), String> {
         match payload {
             GraphPayload::None => Err("this job kind requires a graph".into()),
-            GraphPayload::Stored(hash) => {
-                let inner = self.inner.lock().unwrap();
-                match inner.graphs.get(hash) {
-                    Some(g) => Ok((hash.clone(), Arc::clone(g))),
-                    None => Err(format!(
-                        "unknown graph hash '{hash}' (evicted or never submitted inline)"
-                    )),
-                }
-            }
+            GraphPayload::Stored(hash) => self.intern_stored(hash),
             GraphPayload::Inline { xadj, adjncy, vwgt, adjwgt } => {
                 // canonicalize all-unit weight arrays to "absent" so the
                 // same graph hashes identically either way it is sent —
@@ -108,7 +156,8 @@ impl GraphStore {
                     }
                 }
                 // parse outside the lock; a racing duplicate parse is
-                // harmless (last insert wins, both Arcs are equivalent)
+                // harmless — whoever loses the insert race below adopts
+                // the winner's Arc, preserving the ptr_eq reuse guarantee
                 let g = Graph::from_csr(
                     xadj.clone(),
                     adjncy.clone(),
@@ -117,18 +166,108 @@ impl GraphStore {
                 )
                 .map_err(|e| e.to_string())?;
                 let g = Arc::new(g);
-                let mut inner = self.inner.lock().unwrap();
-                inner.graphs_parsed += 1;
-                if !inner.graphs.contains_key(&hash) {
-                    inner.graphs.insert(hash.clone(), Arc::clone(&g));
-                    inner.graph_order.push_back(hash.clone());
-                    while inner.graphs.len() > self.max_graphs {
-                        if let Some(old) = inner.graph_order.pop_front() {
-                            inner.graphs.remove(&old);
-                        }
+                let (stored, evicted) = {
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.graphs_parsed += 1;
+                    if let Some(existing) = inner.graphs.get(&hash).map(Arc::clone) {
+                        (existing, Vec::new())
+                    } else {
+                        let ev = self.insert_graph_locked(&mut inner, &hash, &g);
+                        (g, ev)
                     }
+                };
+                if let Some(disk) = &self.disk {
+                    let disk_evicted = disk.store_graph(&hash, &stored);
+                    self.purge_disk_evicted(&disk_evicted);
                 }
-                Ok((hash, g))
+                self.purge_orphans(&evicted);
+                Ok((hash, stored))
+            }
+        }
+    }
+
+    /// Resolve a `Stored(hash)` reference: memory first, then disk.
+    fn intern_stored(&self, hash: &str) -> Result<(String, Arc<Graph>), String> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let hit = inner.graphs.get(hash).map(Arc::clone);
+            if let Some(g) = hit {
+                inner.graphs_reused += 1;
+                return Ok((hash.to_string(), g));
+            }
+        }
+        let unknown = || {
+            format!("unknown graph hash '{hash}' (evicted or never submitted inline)")
+        };
+        let Some(raw) = self.disk.as_ref().and_then(|d| d.load_graph(hash)) else {
+            return Err(unknown());
+        };
+        // the checksum already passed; from_csr re-validates the CSR
+        // invariants so a stale or foreign store directory cannot smuggle
+        // an inconsistent graph past the API boundary
+        let g = Graph::from_csr(raw.xadj, raw.adjncy, raw.vwgt, raw.adjwgt)
+            .map_err(|e| format!("stored graph '{hash}' is invalid after reload: {e}"))?;
+        let g = Arc::new(g);
+        let (stored, evicted) = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.graphs_reused += 1;
+            if let Some(existing) = inner.graphs.get(hash).map(Arc::clone) {
+                (existing, Vec::new()) // a racing loader beat us to it
+            } else {
+                let ev = self.insert_graph_locked(&mut inner, hash, &g);
+                (g, ev)
+            }
+        };
+        self.purge_orphans(&evicted);
+        Ok((hash.to_string(), stored))
+    }
+
+    /// Insert under the lock with FIFO eviction; returns the evicted
+    /// hashes so the caller can reconcile memo coherence lock-free.
+    fn insert_graph_locked(
+        &self,
+        inner: &mut Inner,
+        hash: &str,
+        g: &Arc<Graph>,
+    ) -> Vec<String> {
+        inner.graphs.insert(hash.to_string(), Arc::clone(g));
+        inner.graph_order.push_back(hash.to_string());
+        let mut evicted = Vec::new();
+        while inner.graphs.len() > self.max_graphs {
+            let Some(old) = inner.graph_order.pop_front() else { break };
+            inner.graphs.remove(&old);
+            evicted.push(old);
+        }
+        evicted
+    }
+
+    /// Coherence after a *memory* graph eviction: memos of the evicted
+    /// graph stay valid only if the graph is still resolvable from disk.
+    fn purge_orphans(&self, evicted: &[String]) {
+        let orphaned: Vec<&String> = evicted
+            .iter()
+            .filter(|h| !self.disk.as_ref().is_some_and(|d| d.has_graph(h)))
+            .collect();
+        if orphaned.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for h in orphaned {
+            inner.purge_results_of(h);
+        }
+    }
+
+    /// Coherence after a *disk* graph eviction: the disk tier already
+    /// dropped its own dependent results; in-memory memos survive only if
+    /// the graph is still interned in memory.
+    fn purge_disk_evicted(&self, evicted: &[String]) {
+        if evicted.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for h in evicted {
+            if !inner.graphs.contains_key(h) {
+                inner.purge_results_of(h);
             }
         }
     }
@@ -163,8 +302,30 @@ impl GraphStore {
         self.inner.lock().unwrap().hits += 1;
     }
 
-    /// Memoize a finished job's output.
+    /// Promote a persisted memo entry into the memory tier, if present.
+    /// Called on the submit path *before* the scheduler's state lock is
+    /// taken, so disk IO never stalls the queue; the scheduler's own memo
+    /// lookups stay memory-only.
+    pub fn stage_from_disk(&self, key: &ResultKey) {
+        let Some(disk) = &self.disk else { return };
+        if self.lookup_quiet(key).is_some() {
+            return;
+        }
+        if let Some(out) = disk.load_result(key) {
+            self.insert_memory(key, Arc::new(out));
+        }
+    }
+
+    /// Memoize a finished job's output (memory, then spilled to disk).
     pub fn insert(&self, key: &ResultKey, out: Arc<JobOutput>) {
+        self.insert_memory(key, Arc::clone(&out));
+        if let Some(disk) = &self.disk {
+            let evicted = disk.store_result(key, &out);
+            self.purge_disk_evicted(&evicted);
+        }
+    }
+
+    fn insert_memory(&self, key: &ResultKey, out: Arc<JobOutput>) {
         let mut inner = self.inner.lock().unwrap();
         if inner.results.insert(key.clone(), out).is_none() {
             inner.result_order.push_back(key.clone());
@@ -177,6 +338,7 @@ impl GraphStore {
     }
 
     pub fn counters(&self) -> StoreCounters {
+        let disk = self.disk.as_ref().map(|d| d.counters()).unwrap_or_default();
         let inner = self.inner.lock().unwrap();
         StoreCounters {
             hits: inner.hits,
@@ -185,6 +347,13 @@ impl GraphStore {
             graphs_reused: inner.graphs_reused,
             graphs_stored: inner.graphs.len(),
             results_stored: inner.results.len(),
+            disk_hits: disk.hits,
+            disk_misses: disk.misses,
+            disk_evictions: disk.evictions,
+            disk_corrupt: disk.corrupt,
+            disk_graphs: disk.graphs,
+            disk_results: disk.results,
+            disk_bytes: disk.bytes,
         }
     }
 }
@@ -231,6 +400,33 @@ pub fn hash_csr(
                 }
             }
         }
+    }
+    format!("{:016x}{:016x}", a.finish(), b.finish())
+}
+
+/// FNV-128 (the same two-pass construction as [`hash_csr`]) over raw
+/// bytes — the disk tier's record checksum.
+pub(crate) fn fnv128_bytes(bytes: &[u8]) -> [u8; 16] {
+    let mut a = Fnv::new(0xcbf29ce484222325);
+    let mut b = Fnv::new(0x9ae16a3b2f90404f);
+    for &x in bytes {
+        a.byte(x);
+        b.byte(x);
+    }
+    let mut out = [0u8; 16];
+    out[..8].copy_from_slice(&a.finish().to_le_bytes());
+    out[8..].copy_from_slice(&b.finish().to_le_bytes());
+    out
+}
+
+/// FNV-128 of raw bytes as 32 hex chars — the disk tier's file-name form
+/// of a job fingerprint.
+pub(crate) fn fnv128_hex(bytes: &[u8]) -> String {
+    let mut a = Fnv::new(0xcbf29ce484222325);
+    let mut b = Fnv::new(0x9ae16a3b2f90404f);
+    for &x in bytes {
+        a.byte(x);
+        b.byte(x);
     }
     format!("{:016x}{:016x}", a.finish(), b.finish())
 }
@@ -303,13 +499,45 @@ mod tests {
     }
 
     #[test]
+    fn racing_inline_interns_all_return_the_stored_arc() {
+        let store = GraphStore::new(8, 8);
+        let g = generators::grid2d(12, 12);
+        let mut arcs: Vec<Arc<Graph>> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let store = &store;
+                    let p = payload(&g);
+                    scope.spawn(move || store.intern(&p).unwrap().1)
+                })
+                .collect();
+            for h in handles {
+                arcs.push(h.join().unwrap());
+            }
+        });
+        for a in &arcs {
+            assert!(
+                Arc::ptr_eq(a, &arcs[0]),
+                "every racer must adopt the one interned graph"
+            );
+        }
+        assert_eq!(store.counters().graphs_stored, 1);
+    }
+
+    #[test]
     fn stored_reference_resolves_and_unknown_fails() {
         let store = GraphStore::new(8, 8);
         let g = generators::grid2d(4, 4);
         let (h, _) = store.intern(&payload(&g)).unwrap();
+        let reused_before = store.counters().graphs_reused;
         let (h2, g2) = store.intern(&GraphPayload::Stored(h.clone())).unwrap();
         assert_eq!(h, h2);
         assert_eq!(g2.n(), 16);
+        assert_eq!(
+            store.counters().graphs_reused,
+            reused_before + 1,
+            "a Stored hit is a reuse"
+        );
         assert!(store.intern(&GraphPayload::Stored("ffff".into())).is_err());
         assert!(store.intern(&GraphPayload::None).is_err());
     }
@@ -415,5 +643,75 @@ mod tests {
         assert!(store.intern(&GraphPayload::Stored(hashes[0].clone())).is_err(), "evicted");
         assert!(store.intern(&GraphPayload::Stored(hashes[2].clone())).is_ok());
         assert_eq!(store.counters().graphs_stored, 2);
+    }
+
+    #[test]
+    fn graph_eviction_purges_dependent_memos() {
+        // diskless store: once a graph is evicted its hash is unresolvable,
+        // so serving its memos would answer for a graph the store rejects
+        let store = GraphStore::new(2, 8);
+        let out = Arc::new(JobOutput::Partition { edgecut: 0, balance: 1.0, part: vec![0] });
+        let gs: Vec<Graph> = (2..5).map(|i| generators::grid2d(i, 3)).collect();
+        let (h1, _) = store.intern(&payload(&gs[0])).unwrap();
+        let (h2, _) = store.intern(&payload(&gs[1])).unwrap();
+        store.insert(&key(&h1, "f"), Arc::clone(&out));
+        store.insert(&key(&h2, "f"), Arc::clone(&out));
+        // third graph evicts h1 (FIFO): its memo must go with it
+        store.intern(&payload(&gs[2])).unwrap();
+        assert!(store.lookup_quiet(&key(&h1, "f")).is_none(), "orphaned memo purged");
+        assert!(store.lookup_quiet(&key(&h2, "f")).is_some(), "live memo survives");
+    }
+
+    /// Fresh, empty store directory unique to this process + test.
+    #[cfg(test)]
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("kahip-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn stored_reference_falls_back_to_disk_after_memory_eviction() {
+        let dir = temp_dir("disk-fallback");
+        let disk = DiskStore::open(&dir, 0).unwrap();
+        let store = GraphStore::with_disk(1, 8, Some(disk));
+        let g1 = generators::grid2d(3, 3);
+        let g2 = generators::grid2d(4, 4);
+        let (h1, _) = store.intern(&payload(&g1)).unwrap();
+        store.intern(&payload(&g2)).unwrap(); // evicts g1 from memory only
+        let (h, g) = store.intern(&GraphPayload::Stored(h1.clone())).unwrap();
+        assert_eq!(h, h1);
+        assert_eq!(*g, g1, "reloaded graph is byte-identical");
+        let c = store.counters();
+        assert!(c.disk_hits >= 1, "resolution came from the persistent tier");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memo_stages_from_disk_across_a_restart() {
+        let dir = temp_dir("memo-restart");
+        let g = generators::grid2d(5, 5);
+        let out = Arc::new(JobOutput::Partition {
+            edgecut: 7,
+            balance: 1.01,
+            part: vec![0, 1, 0, 1],
+        });
+        let hash = {
+            let store =
+                GraphStore::with_disk(8, 8, Some(DiskStore::open(&dir, 0).unwrap()));
+            let (h, _) = store.intern(&payload(&g)).unwrap();
+            store.insert(&key(&h, "fp"), Arc::clone(&out));
+            h
+        };
+        // "restart": a fresh store over the same directory
+        let store = GraphStore::with_disk(8, 8, Some(DiskStore::open(&dir, 0).unwrap()));
+        let k = key(&hash, "fp");
+        assert!(store.lookup_quiet(&k).is_none(), "memory tier starts cold");
+        store.stage_from_disk(&k);
+        let back = store.lookup_quiet(&k).expect("promoted from disk");
+        assert_eq!(format!("{back:?}"), format!("{out:?}"), "byte-identical memo");
+        assert!(store.counters().disk_hits >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,203 @@
+//! Persistence acceptance tests for `--store_dir`: a service restarted
+//! over the same store directory must serve byte-identical results from
+//! disk (warm-restart identity), resolve `GraphPayload::Stored` hashes
+//! without an inline resend, tolerate corrupted/truncated records by
+//! recomputing (never panicking), and stay safe when two service
+//! instances share one directory (content-addressed + atomic rename).
+
+use kahip::graph::generators;
+use kahip::service::{
+    GraphPayload, JobKind, JobOutput, JobRequest, JobSpec, Service, ServiceConfig,
+};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Unique per-test store directory under the system temp dir. Removed at
+/// the end of each test; a failed assertion leaves it behind for
+/// inspection, which is fine for throwaway CI containers.
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kahip-persist-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn persistent_config(dir: &Path) -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    }
+}
+
+fn grid_request(id: &str, k: u32, seed: u64) -> JobRequest {
+    let g = generators::grid2d(10, 10);
+    JobRequest {
+        id: id.into(),
+        graph: GraphPayload::from_graph(&g),
+        spec: JobSpec { k, seed, ..JobSpec::defaults(JobKind::Partition) },
+    }
+}
+
+fn partition_of(res: &kahip::service::JobResult) -> (i64, Vec<u32>) {
+    match res.outcome.as_ref().expect("job must succeed").as_ref() {
+        JobOutput::Partition { edgecut, part, .. } => (*edgecut, part.clone()),
+        other => panic!("wrong output {other:?}"),
+    }
+}
+
+#[test]
+fn warm_restart_serves_byte_identical_results_from_disk() {
+    let dir = store_dir("warm-restart");
+
+    // Cold service: compute, which spills graph + memo entry to disk.
+    let (cold_cut, cold_part, hash) = {
+        let svc = Service::new(persistent_config(&dir));
+        let res = svc.run_sync(grid_request("cold", 4, 7));
+        assert!(!res.cached);
+        let stats = svc.stats();
+        assert_eq!(stats.disk_graphs, 1, "interned graph spilled to disk");
+        assert_eq!(stats.disk_results, 1, "memo entry spilled to disk");
+        assert!(stats.disk_bytes > 0);
+        let (cut, part) = partition_of(&res);
+        (cut, part, res.graph_hash.clone().unwrap())
+    };
+
+    // Warm restart: a brand-new service over the same directory must
+    // answer the exact repeat from the persisted memo — cached, zero
+    // compute time, byte-identical bytes.
+    let svc = Service::new(persistent_config(&dir));
+    let stats = svc.stats();
+    assert_eq!(stats.disk_graphs, 1, "startup index finds the spilled graph");
+    assert_eq!(stats.disk_results, 1, "startup index finds the spilled memo");
+
+    let res = svc.run_sync(grid_request("warm", 4, 7));
+    assert!(res.cached, "warm restart must serve the repeat from disk");
+    assert_eq!(res.seconds, 0.0);
+    assert_eq!(res.graph_hash.as_deref(), Some(hash.as_str()));
+    let (warm_cut, warm_part) = partition_of(&res);
+    assert_eq!(warm_cut, cold_cut);
+    assert_eq!(warm_part, cold_part, "restart identity: byte-identical partition");
+
+    let stats = svc.stats();
+    assert!(stats.disk_hits >= 1, "the staged memo entry counts as a disk hit");
+    assert_eq!(stats.cache_hits, 1);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stored_graph_reference_resolves_across_a_restart() {
+    let dir = store_dir("stored-ref");
+    let hash = {
+        let svc = Service::new(persistent_config(&dir));
+        svc.run_sync(grid_request("seed", 2, 1)).graph_hash.unwrap()
+    };
+
+    // After the restart the graph lives only on disk; a Stored reference
+    // with a fresh seed must load it and compute — no inline resend.
+    let svc = Service::new(persistent_config(&dir));
+    let mut req = grid_request("by-hash", 2, 2);
+    req.graph = GraphPayload::Stored(hash.clone());
+    let res = svc.run_sync(req);
+    assert!(res.outcome.is_ok(), "stored hash must resolve from disk: {:?}", res.outcome);
+    assert!(!res.cached, "different seed must compute");
+    assert_eq!(res.graph_hash.as_deref(), Some(hash.as_str()));
+    assert!(svc.stats().disk_hits >= 1);
+
+    // Unknown hashes still fail cleanly.
+    let mut req = grid_request("bogus", 2, 3);
+    req.graph = GraphPayload::Stored("ffffffffffffffffffffffffffffffff".into());
+    let res = svc.run_sync(req);
+    assert!(res.outcome.unwrap_err().contains("unknown graph hash"));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_and_truncated_records_recompute_without_panic() {
+    let dir = store_dir("corrupt");
+    let (hash, cut, part) = {
+        let svc = Service::new(persistent_config(&dir));
+        let res = svc.run_sync(grid_request("seed", 4, 9));
+        let (cut, part) = partition_of(&res);
+        (res.graph_hash.unwrap(), cut, part)
+    };
+
+    // Damage every persisted record: flip a payload byte in the graph
+    // file, truncate the result file mid-record.
+    let mut damaged = 0;
+    for (sub, truncate) in [("graphs", false), ("results", true)] {
+        for entry in fs::read_dir(dir.join(sub)).unwrap() {
+            let path = entry.unwrap().path();
+            let mut bytes = fs::read(&path).unwrap();
+            if truncate {
+                bytes.truncate(bytes.len() / 2);
+            } else {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x5a;
+            }
+            fs::write(&path, bytes).unwrap();
+            damaged += 1;
+        }
+    }
+    assert_eq!(damaged, 2, "one graph record and one result record on disk");
+
+    // A Stored reference reads the damaged graph record: the checksum
+    // mismatch is detected, the record discarded, and the job fails with
+    // a clean "unknown graph hash" — never a panic. (This must run
+    // before any inline submission, which would re-spill a clean graph.)
+    let svc = Service::new(persistent_config(&dir));
+    let mut by_hash = grid_request("by-hash", 4, 9);
+    by_hash.graph = GraphPayload::Stored(hash);
+    let res = svc.run_sync(by_hash);
+    assert!(
+        res.outcome.unwrap_err().contains("unknown graph hash"),
+        "corrupt graph record must read as a miss"
+    );
+
+    // The inline repeat re-interns the graph, hits the truncated memo
+    // record, discards it too, and recomputes — byte-identical because
+    // the engine is deterministic.
+    let res = svc.run_sync(grid_request("retry", 4, 9));
+    assert!(!res.cached, "corrupt memo must not be served");
+    assert_eq!(partition_of(&res), (cut, part));
+    let stats = svc.stats();
+    assert!(stats.disk_corrupt >= 2, "both damaged records detected: {stats:?}");
+
+    // The recompute re-spilled clean records: a further restart hits.
+    let svc = Service::new(persistent_config(&dir));
+    let res = svc.run_sync(grid_request("healed", 4, 9));
+    assert!(res.cached, "store must heal itself after discarding corruption");
+    assert_eq!(partition_of(&res), (cut, part));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_services_sharing_one_store_dir_are_safe() {
+    let dir = store_dir("shared");
+    // Two live service instances over one directory, racing the same
+    // job: content-addressed filenames + write-to-tmp-then-rename make
+    // the duplicate publishes collide harmlessly.
+    let a = Service::new(persistent_config(&dir));
+    let b = Service::new(persistent_config(&dir));
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| a.run_sync(grid_request("a", 2, 5)));
+        let hb = s.spawn(|| b.run_sync(grid_request("b", 2, 5)));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(partition_of(&ra), partition_of(&rb), "determinism across instances");
+    drop(a);
+    drop(b);
+
+    // Exactly one record of each kind survives, and it is readable.
+    assert_eq!(fs::read_dir(dir.join("graphs")).unwrap().count(), 1);
+    assert_eq!(fs::read_dir(dir.join("results")).unwrap().count(), 1);
+    let svc = Service::new(persistent_config(&dir));
+    let res = svc.run_sync(grid_request("after", 2, 5));
+    assert!(res.cached);
+    assert_eq!(partition_of(&res), partition_of(&ra));
+
+    let _ = fs::remove_dir_all(&dir);
+}
