@@ -1,0 +1,77 @@
+//! Incremental repartitioning vs cold re-partitioning.
+//!
+//! On a 60×60 grid (n = 3600), delete batches of 1, 16 and 256 edges and
+//! repair the previous Eco partition through
+//! [`kahip::coordinator::incremental::repartition`], against a cold
+//! `kaffpa` run on the mutated graph. The incremental path confines work
+//! to the dirty region (changed-edge endpoints plus a 2-hop halo), so the
+//! small deltas should beat the cold run outright; the 256-edge batch
+//! (~300 seed endpoints, still under the max(64, n/8) = 450 fallback
+//! threshold) shows how the advantage erodes as the dirty region grows.
+//!
+//! The verdict only gates the 1-edge delta — the case the dynamic service
+//! workload actually optimizes for — and is deliberately lenient (any
+//! speedup > 1×): CI machines are noisy and the cold baseline is already
+//! sub-second at this size.
+//!
+//! ```text
+//! cargo bench --bench repartition
+//! ```
+
+use kahip::bench_util::{time_median, verdict, Cell, Table};
+use kahip::coordinator::incremental;
+use kahip::graph::delta::{self, MutOp};
+use kahip::graph::generators;
+use kahip::partition::config::{Config, Mode};
+use std::hint::black_box;
+
+/// Delete the first `count` horizontal grid edges, row-major: consecutive
+/// deletions share endpoints, so the dirty region grows sublinearly.
+fn horizontal_deletions(cols: usize, count: usize) -> Vec<MutOp> {
+    (0..)
+        .filter(|v| (v % cols as u32) != cols as u32 - 1)
+        .take(count)
+        .map(|v| MutOp::DelEdge(v, v + 1))
+        .collect()
+}
+
+fn main() {
+    const COLS: usize = 60;
+    let g = generators::grid2d(COLS, COLS);
+    let cfg = Config::from_mode(Mode::Eco, 8, 0.03, 4);
+    let prev = kahip::coordinator::kaffpa(&g, &cfg, None, None).partition.into_assignment();
+
+    let mut t = Table::new(
+        "incremental repartition vs cold kaffpa on grid60x60, k=8 (median of 3)",
+        &["delta", "dirty", "incremental", "cold", "speedup", "migrated", "cut_ratio"],
+    );
+    let mut single_edge_wins = true;
+    for d in [1usize, 16, 256] {
+        let ops = horizontal_deletions(COLS, d);
+        let h = delta::apply(&g, &ops).expect("grid deletions are always valid");
+        let seeds = incremental::dirty_seeds(&ops);
+        let res = incremental::repartition(&h, &prev, &seeds, &cfg, 0).unwrap();
+        assert!(!res.fallback, "delta {d} must stay on the incremental path");
+        let (warm, _, _) = time_median(1, 3, || {
+            black_box(incremental::repartition(&h, &prev, &seeds, &cfg, 0).unwrap());
+        });
+        let (cold_secs, _, _) = time_median(1, 3, || {
+            black_box(kahip::coordinator::kaffpa(&h, &cfg, None, None));
+        });
+        let cold = kahip::coordinator::kaffpa(&h, &cfg, None, None);
+        if d == 1 {
+            single_edge_wins = cold_secs / warm > 1.0;
+        }
+        t.row(vec![
+            format!("{d} edges").into(),
+            seeds.len().into(),
+            Cell::Secs(warm),
+            Cell::Secs(cold_secs),
+            (cold_secs / warm).into(),
+            (res.migrated as i64).into(),
+            (res.edge_cut as f64 / cold.edge_cut.max(1) as f64).into(),
+        ]);
+    }
+    t.print();
+    verdict("1-edge delta repartitions faster than a cold run", single_edge_wins);
+}

@@ -141,6 +141,7 @@ pub const PROGRAMS: &[&str] = &[
     "ilp_exact",
     "ilp_improve",
     "label_propagation",
+    "repartition",
     "graphchecker",
     "serve",
 ];
@@ -173,6 +174,7 @@ pub fn run(args: &[String]) -> Result<(), String> {
         "ilp_exact" => cmd_ilp_exact(&a),
         "ilp_improve" => cmd_ilp_improve(&a),
         "label_propagation" => cmd_label_propagation(&a),
+        "repartition" => cmd_repartition(&a),
         "graphchecker" => cmd_graphchecker(&a),
         "serve" => cmd_serve(&a),
         other => Err(format!("unknown program '{other}'\n{}", usage())),
@@ -610,6 +612,47 @@ fn cmd_label_propagation(a: &ArgSet) -> Result<(), String> {
     Ok(())
 }
 
+/// `kahip repartition`: incremental repartitioning of a mutated graph
+/// (see [`crate::coordinator::incremental`]). Takes the partition of the
+/// *pre-mutation* graph (`--input_partition`) and a mutation file
+/// (`--mutations`, one op per line: `add u v [w]`, `del u v`,
+/// `weight v w`; blank lines and `#` comments skipped), applies the
+/// delta, and repairs the partition around the dirty region instead of
+/// partitioning from scratch. `--migration_budget=<n>` bounds how many
+/// nodes may end up in a different block than before (0 = unbounded).
+fn cmd_repartition(a: &ArgSet) -> Result<(), String> {
+    use crate::graph::delta::{self, MutOp};
+    let g = load_graph(a.file()?, false)?;
+    let k = a.k()?;
+    let part_path = a.str_opt("input_partition").ok_or("--input_partition=<file> required")?;
+    let part = pio::read_partition_file(part_path).map_err(|e| format!("{part_path}: {e}"))?;
+    let ops_path = a.str_opt("mutations").ok_or("--mutations=<file> required")?;
+    let text = std::fs::read_to_string(ops_path).map_err(|e| format!("{ops_path}: {e}"))?;
+    let mut ops = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let parsed =
+            MutOp::parse_line(line).map_err(|e| format!("{ops_path}:{}: {e}", lineno + 1))?;
+        if let Some(op) = parsed {
+            ops.push(op);
+        }
+    }
+    let mut cfg =
+        Config::from_mode(a.mode(Mode::Eco)?, k, a.epsilon(3.0)?, a.u64_or("seed", 0)?);
+    cfg.threads = a.usize_or("threads", 0)?;
+    let budget = a.u64_or("migration_budget", 0)?;
+    let new_g = delta::apply(&g, &ops)?;
+    let seeds = crate::coordinator::incremental::dirty_seeds(&ops);
+    let r = crate::coordinator::incremental::repartition(&new_g, &part, &seeds, &cfg, budget)?;
+    println!(
+        "cut {} balance {:.5} migrated {} fallback {} dirty {} time {:.3}s",
+        r.edge_cut, r.balance, r.migrated, r.fallback, r.dirty_nodes, r.seconds
+    );
+    let out = a.str_opt("output_filename").map(str::to_string).unwrap_or_else(|| pio::default_partition_name(k));
+    pio::write_partition_file(r.partition.assignment(), &out).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// `kahip serve`: the persistent partitioning service (see
 /// [`crate::service`]). Default is JSON-lines over stdin/stdout until
 /// EOF (`--stdin` makes that explicit); `--listen=host:port` serves TCP
@@ -724,6 +767,45 @@ mod tests {
     fn missing_file_is_an_error() {
         let err = run(&args(&["kaffpa", "--k=2"])).unwrap_err();
         assert!(err.contains("missing graph file"));
+    }
+
+    #[test]
+    fn repartition_requires_its_inputs() {
+        let err = run(&args(&["repartition", "--k=2"])).unwrap_err();
+        assert!(err.contains("missing graph file"));
+        // end-to-end through temp files: mutate a path graph and repartition
+        let dir = std::env::temp_dir()
+            .join(format!("kahip-cli-repart-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let gpath = dir.join("g.metis");
+        // 4-node path 1-2-3-4 (metis is 1-indexed)
+        std::fs::write(&gpath, "4 3\n2\n1 3\n2 4\n3\n").unwrap();
+        let ppath = dir.join("g.part");
+        std::fs::write(&ppath, "0\n0\n1\n1\n").unwrap();
+        let mpath = dir.join("ops.txt");
+        std::fs::write(&mpath, "# grow one edge\nadd 0 3 2\n").unwrap();
+        let opath = dir.join("out.part");
+        let err = run(&args(&[
+            "repartition",
+            gpath.to_str().unwrap(),
+            "--k=2",
+            &format!("--input_partition={}", ppath.display()),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("--mutations"));
+        run(&args(&[
+            "repartition",
+            gpath.to_str().unwrap(),
+            "--k=2",
+            &format!("--input_partition={}", ppath.display()),
+            &format!("--mutations={}", mpath.display()),
+            "--migration_budget=1",
+            &format!("--output_filename={}", opath.display()),
+        ]))
+        .unwrap();
+        let out = pio::read_partition_file(opath.to_str().unwrap()).unwrap();
+        assert_eq!(out.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! Incremental repartitioning for the dynamic-graph workload.
+//!
+//! A mutation batch ([`MutOp`]) touches a handful of edges; re-running the
+//! full multilevel pipeline would recompute a partition that is already
+//! near-optimal everywhere except around the changed edges. [`repartition`]
+//! instead seeds from the previous assignment, marks the **dirty region**
+//! (endpoints of changed edges + a [`HALO_HOPS`]-hop halo), extracts it as
+//! an induced subgraph (`graph/subgraph.rs` — the optimized binary-search
+//! path), runs the standard refinement stack (parallel label propagation +
+//! kway-FM) restricted to that region under per-block residual weight
+//! bounds, and restores balance with `kaba/` negative-cycle balancing
+//! instead of a full V-cycle.
+//!
+//! Two escape hatches keep quality and cost bounded:
+//! - **Fallback**: when the dirty seed set exceeds
+//!   [`fallback_threshold`]`(n) = max(64, n/8)`, localized refinement can
+//!   no longer be expected to recover global quality (the delta *is* a new
+//!   graph), so a full [`kaffpa`](super::kaffpa) run executes instead, with
+//!   its block labels greedily aligned to the previous assignment to avoid
+//!   gratuitous migration. The migration budget is advisory on this path.
+//! - **Migration budget**: with `migration_budget > 0` the number of nodes
+//!   whose block differs from `prev` is trimmed back by greedily reverting
+//!   the least-damaging moves that keep the partition feasible; if no
+//!   feasible revert remains while still over budget and the seed partition
+//!   itself was feasible, everything reverts to the seed (migration 0).
+//!
+//! Everything is seeded from `cfg.seed` — the path inherits the engine's
+//! byte-identical-at-any-thread-count determinism contract
+//! (`tests/determinism.rs` pins the new job kinds).
+
+use crate::graph::delta::MutOp;
+use crate::graph::{subgraph, Graph};
+use crate::kaba;
+use crate::partition::config::Config;
+use crate::partition::{metrics, Partition};
+use crate::refinement::{kway_fm, label_prop_refine};
+use crate::rng::Rng;
+use crate::util::timer::Timer;
+use crate::NodeId;
+
+/// Halo radius around changed-edge endpoints: refinement may move any node
+/// within this many hops of a mutation. 2 hops covers every node whose
+/// gain values a mutation can change, plus one ring of slack.
+pub const HALO_HOPS: usize = 2;
+
+/// Seed-set size above which [`repartition`] falls back to full multilevel.
+pub fn fallback_threshold(n: usize) -> usize {
+    64.max(n / 8)
+}
+
+/// Outcome of an incremental repartition.
+#[derive(Clone, Debug)]
+pub struct RepartitionResult {
+    pub partition: Partition,
+    pub edge_cut: i64,
+    pub balance: f64,
+    /// Nodes whose block differs from the previous assignment.
+    pub migrated: u64,
+    /// True when the delta was too large and full multilevel ran instead.
+    pub fallback: bool,
+    /// Size of the extracted dirty region (0 on the fallback path).
+    pub dirty_nodes: usize,
+    pub seconds: f64,
+}
+
+/// The dirty-region seeds of a mutation batch: endpoints of inserted and
+/// deleted edges plus weight-updated nodes, sorted and deduplicated.
+pub fn dirty_seeds(ops: &[MutOp]) -> Vec<NodeId> {
+    let mut seeds: Vec<NodeId> = Vec::with_capacity(ops.len() * 2);
+    for op in ops {
+        match *op {
+            MutOp::AddEdge(u, v, _) | MutOp::DelEdge(u, v) => {
+                seeds.push(u);
+                seeds.push(v);
+            }
+            MutOp::SetWeight(v, _) => seeds.push(v),
+        }
+    }
+    seeds.sort_unstable();
+    seeds.dedup();
+    seeds
+}
+
+/// Repartition the (already mutated) graph `g` starting from the previous
+/// assignment `prev`, localizing work to `seeds` + halo. See module docs.
+pub fn repartition(
+    g: &Graph,
+    prev: &[u32],
+    seeds: &[NodeId],
+    cfg: &Config,
+    migration_budget: u64,
+) -> Result<RepartitionResult, String> {
+    let timer = Timer::start();
+    if prev.len() != g.n() {
+        return Err(format!(
+            "previous partition has {} entries for a graph with {} nodes",
+            prev.len(),
+            g.n()
+        ));
+    }
+    if let Some(v) = prev.iter().position(|&b| b >= cfg.k) {
+        return Err(format!(
+            "previous partition assigns node {v} to block {} (k = {})",
+            prev[v], cfg.k
+        ));
+    }
+    if let Some(&s) = seeds.iter().find(|&&s| (s as usize) >= g.n()) {
+        return Err(format!("dirty seed {s} out of range (n = {})", g.n()));
+    }
+    if cfg.k == 1 || g.n() == 0 {
+        let partition = Partition::trivial(g, cfg.k.max(1));
+        return Ok(finishing(g, partition, prev, false, 0, timer));
+    }
+
+    if seeds.len() > fallback_threshold(g.n()) {
+        crate::obs::count("repartition_fallback", 1);
+        let res = crate::obs::phase("fallback_multilevel", || {
+            super::kaffpa(g, cfg, None, None)
+        });
+        let aligned = align_to_prev(g, cfg.k, res.partition, prev);
+        return Ok(finishing(g, aligned, prev, true, 0, timer));
+    }
+
+    let bound = cfg.bound(g.total_node_weight());
+    let threads = cfg.num_threads();
+    let mut rng = Rng::new(cfg.seed);
+    let mut p = Partition::from_assignment(g, cfg.k, prev.to_vec());
+    let seed_feasible = p.is_feasible(g, cfg.epsilon);
+
+    // Dirty region: seeds + HALO_HOPS-hop BFS halo, ascending node order.
+    let dirty = crate::obs::phase("dirty_region", || {
+        let mut visited = vec![false; g.n()];
+        let mut frontier: Vec<NodeId> = seeds.to_vec();
+        for &s in &frontier {
+            visited[s as usize] = true;
+        }
+        for _ in 0..HALO_HOPS {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                for &u in g.neighbors(v) {
+                    if !visited[u as usize] {
+                        visited[u as usize] = true;
+                        next.push(u);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        let mut dirty: Vec<NodeId> =
+            (0..g.n() as NodeId).filter(|&v| visited[v as usize]).collect();
+        dirty.sort_unstable();
+        dirty
+    });
+    crate::obs::count("dirty_nodes", dirty.len() as u64);
+
+    if !dirty.is_empty() {
+        // Restricted refinement: the dirty region as an induced subgraph,
+        // seeded from `prev`, under residual bounds that account for the
+        // untouched ("clean") weight each block keeps outside the region.
+        let sub = crate::obs::phase("dirty_region", || subgraph::induced(g, &dirty));
+        let sub_prev: Vec<u32> = dirty.iter().map(|&v| prev[v as usize]).collect();
+        let mut sub_p = Partition::from_assignment(&sub.graph, cfg.k, sub_prev);
+        let bounds: Vec<i64> = (0..cfg.k)
+            .map(|b| {
+                let clean = p.block_weight(b) - sub_p.block_weight(b);
+                (bound - clean).max(sub_p.block_weight(b))
+            })
+            .collect();
+        crate::obs::phase("refine_dirty", || {
+            if cfg.use_lp_refinement {
+                label_prop_refine::refine_par(
+                    &sub.graph,
+                    &mut sub_p,
+                    &bounds,
+                    cfg.lp_iterations.min(5),
+                    &mut rng,
+                    threads,
+                );
+            }
+            for _ in 0..3 {
+                let gained = kway_fm::refine_par(
+                    &sub.graph,
+                    &mut sub_p,
+                    &bounds,
+                    cfg.fm_unsuccessful_limit,
+                    &mut rng,
+                    threads,
+                );
+                if gained == 0 {
+                    break;
+                }
+            }
+        });
+        for (i, &v) in dirty.iter().enumerate() {
+            let b = sub_p.block_of(i as u32);
+            if b != p.block_of(v) {
+                p.move_node(g, v, b);
+            }
+        }
+    }
+
+    if !p.is_feasible(g, cfg.epsilon) {
+        crate::obs::phase("rebalance", || {
+            kaba::balancing::balance(g, &mut p, bound, &mut rng);
+        });
+    }
+
+    if migration_budget > 0 {
+        crate::obs::phase("migration_trim", || {
+            trim_migration(g, &mut p, prev, cfg, bound, migration_budget, seed_feasible);
+        });
+    }
+
+    Ok(finishing(g, p, prev, false, dirty.len(), timer))
+}
+
+/// Greedily revert migrated nodes until at most `budget` remain, preferring
+/// reverts that damage the cut least while keeping the partition feasible.
+/// When stuck over budget with no feasible revert, fall back to the seed
+/// assignment wholesale — but only if the seed itself was feasible.
+fn trim_migration(
+    g: &Graph,
+    p: &mut Partition,
+    prev: &[u32],
+    cfg: &Config,
+    bound: i64,
+    budget: u64,
+    seed_feasible: bool,
+) {
+    let mut moved: Vec<NodeId> =
+        g.nodes().filter(|&v| p.block_of(v) != prev[v as usize]).collect();
+    if moved.len() as u64 <= budget {
+        return;
+    }
+    let mut scratch = crate::refinement::gain::GainScratch::new(cfg.k);
+    while moved.len() as u64 > budget {
+        // best feasible revert: max gain, ties broken by smallest node id
+        // (moved is kept ascending, so first-strict-improvement wins ties)
+        let mut best: Option<(usize, i64)> = None;
+        for (i, &v) in moved.iter().enumerate() {
+            let home = prev[v as usize];
+            if p.block_weight(home) + g.node_weight(v) > bound {
+                continue;
+            }
+            let gain = scratch.gain_to(g, p, v, home);
+            if best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                best = Some((i, gain));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let v = moved.remove(i);
+                p.move_node(g, v, prev[v as usize]);
+            }
+            None => {
+                // no revert fits under the bound; the only way to honour
+                // the budget is to give the seed assignment back verbatim
+                if seed_feasible {
+                    for &v in &moved {
+                        p.move_node(g, v, prev[v as usize]);
+                    }
+                    moved.clear();
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Relabel the blocks of a fresh full-run partition to maximize overlap
+/// with the previous assignment (greedy max-overlap matching, deterministic
+/// tie-breaks), so fallback runs don't migrate nodes over a mere renaming.
+fn align_to_prev(g: &Graph, k: u32, p: Partition, prev: &[u32]) -> Partition {
+    let k = k as usize;
+    let mut overlap = vec![0u64; k * k];
+    let assignment = p.into_assignment();
+    for (v, &b) in assignment.iter().enumerate() {
+        overlap[b as usize * k + prev[v] as usize] += 1;
+    }
+    let mut map = vec![u32::MAX; k];
+    let mut old_taken = vec![false; k];
+    for _ in 0..k {
+        let mut best: Option<(u64, usize, usize)> = None;
+        for nb in 0..k {
+            if map[nb] != u32::MAX {
+                continue;
+            }
+            for ob in 0..k {
+                if old_taken[ob] {
+                    continue;
+                }
+                let o = overlap[nb * k + ob];
+                if best.map(|(bo, _, _)| o > bo).unwrap_or(true) {
+                    best = Some((o, nb, ob));
+                }
+            }
+        }
+        let (_, nb, ob) = best.expect("k unmatched pairs remain");
+        map[nb] = ob as u32;
+        old_taken[ob] = true;
+    }
+    let relabeled: Vec<u32> = assignment.iter().map(|&b| map[b as usize]).collect();
+    Partition::from_assignment(g, k as u32, relabeled)
+}
+
+/// Common tail: recount, record trace metrics, assemble the result.
+fn finishing(
+    g: &Graph,
+    partition: Partition,
+    prev: &[u32],
+    fallback: bool,
+    dirty_nodes: usize,
+    timer: Timer,
+) -> RepartitionResult {
+    let migrated =
+        g.nodes().filter(|&v| partition.block_of(v) != prev[v as usize]).count() as u64;
+    let edge_cut = metrics::edge_cut(g, &partition);
+    let balance = metrics::balance(g, &partition);
+    crate::obs::count("migrated", migrated);
+    if crate::obs::capturing() {
+        crate::obs::metric("repartition_cut", edge_cut as f64);
+        crate::obs::metric("repartition_balance", balance);
+    }
+    RepartitionResult {
+        partition,
+        edge_cut,
+        balance,
+        migrated,
+        fallback,
+        dirty_nodes,
+        seconds: timer.elapsed_secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{delta, generators};
+    use crate::partition::config::Mode;
+
+    fn grid_prev(g: &Graph, k: u32, seed: u64) -> Vec<u32> {
+        let cfg = Config::from_mode(Mode::Eco, k, 0.03, seed);
+        super::super::kaffpa(g, &cfg, None, None).partition.into_assignment()
+    }
+
+    #[test]
+    fn small_delta_stays_incremental_and_feasible() {
+        let g = generators::grid2d(12, 12);
+        let prev = grid_prev(&g, 4, 3);
+        let ops = [MutOp::DelEdge(0, 1), MutOp::AddEdge(0, 13, 1)];
+        let h = delta::apply(&g, &ops).unwrap();
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 3);
+        let res = repartition(&h, &prev, &dirty_seeds(&ops), &cfg, 0).unwrap();
+        assert!(!res.fallback);
+        assert!(res.dirty_nodes > 0 && res.dirty_nodes < g.n());
+        assert!(res.partition.validate(&h).is_ok());
+        assert!(res.partition.is_feasible(&h, cfg.epsilon));
+        assert_eq!(res.edge_cut, metrics::edge_cut(&h, &res.partition));
+    }
+
+    #[test]
+    fn migration_budget_is_respected() {
+        let g = generators::grid2d(8, 8);
+        let prev = grid_prev(&g, 4, 1);
+        let ops = [MutOp::DelEdge(0, 1)];
+        let h = delta::apply(&g, &ops).unwrap();
+        let cfg = Config::from_mode(Mode::Eco, 4, 0.03, 1);
+        let res = repartition(&h, &prev, &dirty_seeds(&ops), &cfg, 1).unwrap();
+        assert!(res.migrated <= 1, "budget 1, migrated {}", res.migrated);
+        assert!(res.partition.is_feasible(&h, cfg.epsilon));
+    }
+
+    #[test]
+    fn huge_delta_falls_back_to_full_multilevel() {
+        let g = generators::grid2d(10, 10);
+        let prev = grid_prev(&g, 2, 7);
+        // delete every horizontal edge in the first 9 rows (skipping the
+        // row-wrap pairs, which are not edges) -> 90 seed endpoints
+        let ops: Vec<MutOp> =
+            (0..90).filter(|v| v % 10 != 9).map(|v| MutOp::DelEdge(v, v + 1)).collect();
+        let h = delta::apply(&g, &ops).unwrap();
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 7);
+        let seeds = dirty_seeds(&ops);
+        assert!(seeds.len() > fallback_threshold(h.n()));
+        let res = repartition(&h, &prev, &seeds, &cfg, 8).unwrap();
+        assert!(res.fallback);
+        assert!(res.partition.validate(&h).is_ok());
+        assert!(res.partition.is_feasible(&h, cfg.epsilon));
+    }
+
+    #[test]
+    fn bad_inputs_error_cleanly() {
+        let g = generators::grid2d(4, 4);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 0);
+        let short = vec![0u32; 3];
+        assert!(repartition(&g, &short, &[], &cfg, 0).unwrap_err().contains("entries"));
+        let bad_block = vec![5u32; g.n()];
+        assert!(repartition(&g, &bad_block, &[], &cfg, 0).unwrap_err().contains("block"));
+        let prev = vec![0u32; g.n()];
+        assert!(repartition(&g, &prev, &[99], &cfg, 0).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn empty_delta_migrates_nothing() {
+        let g = generators::grid2d(6, 6);
+        let prev = grid_prev(&g, 2, 2);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 2);
+        let res = repartition(&g, &prev, &[], &cfg, 0).unwrap();
+        assert_eq!(res.migrated, 0);
+        assert_eq!(res.partition.assignment(), &prev[..]);
+    }
+}

@@ -7,6 +7,7 @@
 //! improvement mode, and optional global V/F-cycles.
 
 pub mod cycles;
+pub mod incremental;
 
 use crate::coarsening::build_hierarchy;
 use crate::graph::Graph;

@@ -1,0 +1,269 @@
+//! Graph deltas: edge inserts/deletes and node-weight updates applied to a
+//! frozen CSR without a full rebuild.
+//!
+//! The dynamic-graph workload (service `mutate`/`repartition` jobs, the
+//! `repartition` CLI program) represents a mutation batch as a list of
+//! [`MutOp`]s. [`apply`] validates the batch **sequentially** against the
+//! base graph — adding a present edge or deleting an absent one is an
+//! error, and a delete followed by an add re-weights the edge — then
+//! materializes a fresh [`Graph`] in one pass. Adjacency runs of untouched
+//! nodes are copied verbatim (`extend_from_slice`), so the cost is
+//! O(n + m + |ops| log |ops|) with no per-node hashing.
+//!
+//! Because [`GraphBuilder`](super::GraphBuilder) emits sorted adjacency
+//! runs, the materialized CSR is **byte-identical** to rebuilding the
+//! mutated graph from scratch — the invariant `tests/dynamic.rs` pins for
+//! every generated family. Touched runs are merged in sorted order, so the
+//! base graph's runs must themselves be sorted (the canonical form every
+//! in-tree producer — builder, generators, file readers — emits; this is
+//! debug-asserted).
+
+use super::csr::Graph;
+use crate::NodeId;
+use std::collections::BTreeMap;
+
+/// One graph mutation. Deltas never change the node count: edges come and
+/// go and node weights move, but vertex ids stay stable so a previous
+/// partition remains addressable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutOp {
+    /// Insert undirected edge `{u, v}` with weight `w > 0`. Errors if the
+    /// edge is already present.
+    AddEdge(NodeId, NodeId, i64),
+    /// Remove undirected edge `{u, v}`. Errors if the edge is absent.
+    DelEdge(NodeId, NodeId),
+    /// Set the node weight of `v` to `w >= 0`.
+    SetWeight(NodeId, i64),
+}
+
+impl MutOp {
+    /// Parse one text line of a mutations file: `add u v [w]` (weight
+    /// defaults to 1), `del u v`, or `weight v w`. Blank lines and `#`
+    /// comments parse to `None`.
+    pub fn parse_line(line: &str) -> Result<Option<MutOp>, String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        let id = |s: &str| s.parse::<NodeId>().map_err(|e| format!("bad node id '{s}': {e}"));
+        let w = |s: &str| s.parse::<i64>().map_err(|e| format!("bad weight '{s}': {e}"));
+        match (tok[0], tok.len()) {
+            ("add", 3) => Ok(Some(MutOp::AddEdge(id(tok[1])?, id(tok[2])?, 1))),
+            ("add", 4) => Ok(Some(MutOp::AddEdge(id(tok[1])?, id(tok[2])?, w(tok[3])?))),
+            ("del", 3) => Ok(Some(MutOp::DelEdge(id(tok[1])?, id(tok[2])?))),
+            ("weight", 3) => Ok(Some(MutOp::SetWeight(id(tok[1])?, w(tok[2])?))),
+            _ => Err(format!(
+                "bad mutation line '{line}' (expected 'add u v [w]', 'del u v' or 'weight v w')"
+            )),
+        }
+    }
+
+    /// Canonical compact rendering, used in memo fingerprints.
+    pub fn render(&self) -> String {
+        match *self {
+            MutOp::AddEdge(u, v, w) => format!("add:{u}:{v}:{w}"),
+            MutOp::DelEdge(u, v) => format!("del:{u}:{v}"),
+            MutOp::SetWeight(v, w) => format!("weight:{v}:{w}"),
+        }
+    }
+
+    /// Canonical rendering of a whole batch (order-sensitive, as batches
+    /// validate sequentially).
+    pub fn render_ops(ops: &[MutOp]) -> String {
+        ops.iter().map(MutOp::render).collect::<Vec<_>>().join(";")
+    }
+}
+
+/// Apply a mutation batch to `g`, returning the mutated graph. See the
+/// module docs for validation semantics and the byte-identity guarantee.
+pub fn apply(g: &Graph, ops: &[MutOp]) -> Result<Graph, String> {
+    let n = g.n();
+    let check = |v: NodeId, op: &str| -> Result<(), String> {
+        if (v as usize) < n {
+            Ok(())
+        } else {
+            Err(format!("{op}: node {v} out of range (n = {n})"))
+        }
+    };
+    // Final state of every touched pair, keyed by normalized (min, max):
+    // `Some(w)` = present with weight `w` in the result, `None` = absent.
+    let mut changes: BTreeMap<(NodeId, NodeId), Option<i64>> = BTreeMap::new();
+    let mut vwgt = g.raw().2.to_vec();
+    for op in ops {
+        match *op {
+            MutOp::AddEdge(u, v, w) => {
+                check(u, "add")?;
+                check(v, "add")?;
+                if u == v {
+                    return Err(format!("add {u} {v}: self-loops are forbidden"));
+                }
+                if w <= 0 {
+                    return Err(format!("add {u} {v}: edge weight must be positive, got {w}"));
+                }
+                let key = (u.min(v), u.max(v));
+                let present = match changes.get(&key) {
+                    Some(state) => state.is_some(),
+                    None => g.neighbors(u).contains(&v),
+                };
+                if present {
+                    return Err(format!("add {u} {v}: edge already present"));
+                }
+                changes.insert(key, Some(w));
+            }
+            MutOp::DelEdge(u, v) => {
+                check(u, "del")?;
+                check(v, "del")?;
+                let key = (u.min(v), u.max(v));
+                let present = match changes.get(&key) {
+                    Some(state) => state.is_some(),
+                    None => u != v && g.neighbors(u).contains(&v),
+                };
+                if !present {
+                    return Err(format!("del {u} {v}: edge not present"));
+                }
+                changes.insert(key, None);
+            }
+            MutOp::SetWeight(v, w) => {
+                check(v, "weight")?;
+                if w < 0 {
+                    return Err(format!("weight {v}: node weight must be non-negative, got {w}"));
+                }
+                vwgt[v as usize] = w;
+            }
+        }
+    }
+
+    // Both half-edges of every changed pair, sorted by (node, neighbour) so
+    // one forward scan assigns each node its change slice.
+    let mut touched: Vec<(NodeId, NodeId, Option<i64>)> = Vec::with_capacity(changes.len() * 2);
+    for (&(a, b), &state) in &changes {
+        touched.push((a, b, state));
+        touched.push((b, a, state));
+    }
+    touched.sort_unstable();
+
+    let (oxadj, oadjncy, _, oadjwgt) = g.raw();
+    let mut xadj = Vec::with_capacity(n + 1);
+    xadj.push(0u32);
+    let mut adjncy = Vec::with_capacity(oadjncy.len() + touched.len());
+    let mut adjwgt = Vec::with_capacity(oadjncy.len() + touched.len());
+    let mut ti = 0usize;
+    for v in 0..n as NodeId {
+        let run = oxadj[v as usize] as usize..oxadj[v as usize + 1] as usize;
+        let t0 = ti;
+        while ti < touched.len() && touched[ti].0 == v {
+            ti += 1;
+        }
+        let ch = &touched[t0..ti];
+        if ch.is_empty() {
+            adjncy.extend_from_slice(&oadjncy[run.clone()]);
+            adjwgt.extend_from_slice(&oadjwgt[run]);
+        } else {
+            debug_assert!(
+                oadjncy[run.clone()].windows(2).all(|w| w[0] < w[1]),
+                "delta::apply requires sorted adjacency runs (node {v})"
+            );
+            let (mut oi, mut ci) = (run.start, 0usize);
+            while oi < run.end || ci < ch.len() {
+                if ci == ch.len() || (oi < run.end && oadjncy[oi] < ch[ci].1) {
+                    adjncy.push(oadjncy[oi]);
+                    adjwgt.push(oadjwgt[oi]);
+                    oi += 1;
+                } else {
+                    // the change wins: emit (add/re-weight) or skip (delete)
+                    if let Some(w) = ch[ci].2 {
+                        adjncy.push(ch[ci].1);
+                        adjwgt.push(w);
+                    }
+                    if oi < run.end && oadjncy[oi] == ch[ci].1 {
+                        oi += 1;
+                    }
+                    ci += 1;
+                }
+            }
+        }
+        xadj.push(adjncy.len() as u32);
+    }
+    Ok(Graph::from_parts_unchecked(xadj, adjncy, vwgt, adjwgt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn add_del_weight_round_trip_on_a_grid() {
+        let g = generators::grid2d(3, 3);
+        // 0-1-2 / 3-4-5 / 6-7-8: add a diagonal, delete a side, bump a weight
+        let ops = [MutOp::AddEdge(0, 4, 3), MutOp::DelEdge(1, 2), MutOp::SetWeight(8, 5)];
+        let h = apply(&g, &ops).unwrap();
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m()); // one added, one removed
+        assert!(h.validate().is_ok());
+        assert!(h.neighbors(0).contains(&4));
+        assert_eq!(h.neighbors_w(4).find(|&(u, _)| u == 0).unwrap().1, 3);
+        assert!(!h.neighbors(1).contains(&2));
+        assert_eq!(h.node_weight(8), 5);
+        assert_eq!(h.total_node_weight(), g.total_node_weight() + 4);
+    }
+
+    #[test]
+    fn delete_then_re_add_changes_the_weight() {
+        let g = generators::grid2d(2, 2);
+        let h = apply(&g, &[MutOp::DelEdge(0, 1), MutOp::AddEdge(0, 1, 7)]).unwrap();
+        assert_eq!(h.m(), g.m());
+        assert_eq!(h.neighbors_w(0).find(|&(u, _)| u == 1).unwrap().1, 7);
+    }
+
+    #[test]
+    fn empty_batch_is_byte_identical() {
+        let mut rng = crate::rng::Rng::new(5);
+        let g = generators::random_geometric(50, 0.3, &mut rng);
+        let h = apply(&g, &[]).unwrap();
+        assert_eq!(g.raw(), h.raw());
+    }
+
+    #[test]
+    fn invalid_ops_are_rejected_with_clear_errors() {
+        let g = generators::grid2d(2, 2); // edges: 0-1, 0-2, 1-3, 2-3
+        for (ops, needle) in [
+            (vec![MutOp::AddEdge(0, 1, 1)], "already present"),
+            (vec![MutOp::AddEdge(0, 3, 1), MutOp::AddEdge(3, 0, 2)], "already present"),
+            (vec![MutOp::DelEdge(0, 3)], "not present"),
+            (vec![MutOp::DelEdge(0, 1), MutOp::DelEdge(1, 0)], "not present"),
+            (vec![MutOp::AddEdge(1, 1, 1)], "self-loops"),
+            (vec![MutOp::AddEdge(0, 9, 1)], "out of range"),
+            (vec![MutOp::DelEdge(9, 0)], "out of range"),
+            (vec![MutOp::AddEdge(0, 3, 0)], "must be positive"),
+            (vec![MutOp::SetWeight(4, 1)], "out of range"),
+            (vec![MutOp::SetWeight(0, -1)], "non-negative"),
+        ] {
+            let err = apply(&g, &ops).unwrap_err();
+            assert!(err.contains(needle), "ops {ops:?}: '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn parse_and_render_round_trip() {
+        let text = "# comment\n\nadd 0 4 3\nadd 1 2\ndel 2 3\nweight 5 9\n";
+        let ops: Vec<MutOp> = text
+            .lines()
+            .filter_map(|l| MutOp::parse_line(l).unwrap())
+            .collect();
+        assert_eq!(
+            ops,
+            vec![
+                MutOp::AddEdge(0, 4, 3),
+                MutOp::AddEdge(1, 2, 1),
+                MutOp::DelEdge(2, 3),
+                MutOp::SetWeight(5, 9),
+            ]
+        );
+        assert_eq!(MutOp::render_ops(&ops), "add:0:4:3;add:1:2:1;del:2:3;weight:5:9");
+        assert!(MutOp::parse_line("frobnicate 1 2").is_err());
+        assert!(MutOp::parse_line("add 1").is_err());
+        assert!(MutOp::parse_line("add one two").is_err());
+    }
+}

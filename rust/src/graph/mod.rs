@@ -9,6 +9,7 @@
 pub mod builder;
 pub mod checker;
 pub mod csr;
+pub mod delta;
 pub mod generators;
 pub mod io_binary;
 pub mod io_metis;

@@ -1,6 +1,7 @@
 //! Induced subgraph extraction with node mappings — used by recursive
-//! bisection, the flow-region builder, nested dissection and the SPAC
-//! edge-partitioning construction.
+//! bisection, the flow-region builder, nested dissection, the SPAC
+//! edge-partitioning construction, and the dirty-region extraction of
+//! incremental repartitioning.
 
 use super::csr::Graph;
 use crate::NodeId;
@@ -15,35 +16,39 @@ pub struct SubGraph {
 
 /// Extract the subgraph induced by `nodes` (need not be sorted; duplicates
 /// forbidden). Edges with both endpoints inside are kept with their weights.
+///
+/// Membership and renumbering go through a sorted `(parent id, sub index)`
+/// array + binary search, so the cost is O(|nodes| log |nodes| +
+/// Σ degree · log |nodes|) with O(|nodes|) scratch — no O(parent n) marker
+/// array. That matters for the hot paths that extract many small regions
+/// from one big graph (per-level dissection, dirty-region repartitioning).
 pub fn induced(g: &Graph, nodes: &[NodeId]) -> SubGraph {
-    let mut to_sub = vec![u32::MAX; g.n()];
-    for (i, &v) in nodes.iter().enumerate() {
-        debug_assert!(to_sub[v as usize] == u32::MAX, "duplicate node in induced()");
-        to_sub[v as usize] = i as u32;
-    }
+    let mut sorted: Vec<(NodeId, u32)> =
+        nodes.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+    sorted.sort_unstable();
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0].0 != w[1].0),
+        "duplicate node in induced()"
+    );
+    let to_sub = |u: NodeId| -> Option<u32> {
+        sorted.binary_search_by_key(&u, |&(p, _)| p).ok().map(|i| sorted[i].1)
+    };
     let n = nodes.len();
-    let mut xadj = vec![0u32; n + 1];
-    // first pass: degrees
-    for (i, &v) in nodes.iter().enumerate() {
-        let d = g.neighbors(v).iter().filter(|&&u| to_sub[u as usize] != u32::MAX).count();
-        xadj[i + 1] = xadj[i] + d as u32;
-    }
-    let total = xadj[n] as usize;
-    let mut adjncy = vec![0u32; total];
-    let mut adjwgt = vec![0i64; total];
-    let mut vwgt = vec![0i64; n];
-    let mut cursor: Vec<u32> = xadj[..n].to_vec();
-    for (i, &v) in nodes.iter().enumerate() {
-        vwgt[i] = g.node_weight(v);
+    let cap: usize = nodes.iter().map(|&v| g.degree(v)).sum();
+    let mut xadj = Vec::with_capacity(n + 1);
+    xadj.push(0u32);
+    let mut adjncy = Vec::with_capacity(cap);
+    let mut adjwgt = Vec::with_capacity(cap);
+    let mut vwgt = Vec::with_capacity(n);
+    for &v in nodes {
+        vwgt.push(g.node_weight(v));
         for (u, w) in g.neighbors_w(v) {
-            let su = to_sub[u as usize];
-            if su != u32::MAX {
-                let c = cursor[i] as usize;
-                adjncy[c] = su;
-                adjwgt[c] = w;
-                cursor[i] += 1;
+            if let Some(su) = to_sub(u) {
+                adjncy.push(su);
+                adjwgt.push(w);
             }
         }
+        xadj.push(adjncy.len() as u32);
     }
     SubGraph {
         graph: Graph::from_parts_unchecked(xadj, adjncy, vwgt, adjwgt),
@@ -62,6 +67,65 @@ pub fn extract_block(g: &Graph, part: &[u32], block: u32) -> SubGraph {
 mod tests {
     use super::*;
     use crate::graph::generators;
+
+    /// The pre-optimization implementation (full-size marker array, two
+    /// passes), kept as the oracle for the equivalence test below.
+    fn induced_reference(g: &Graph, nodes: &[NodeId]) -> SubGraph {
+        let mut to_sub = vec![u32::MAX; g.n()];
+        for (i, &v) in nodes.iter().enumerate() {
+            to_sub[v as usize] = i as u32;
+        }
+        let n = nodes.len();
+        let mut xadj = vec![0u32; n + 1];
+        for (i, &v) in nodes.iter().enumerate() {
+            let d = g.neighbors(v).iter().filter(|&&u| to_sub[u as usize] != u32::MAX).count();
+            xadj[i + 1] = xadj[i] + d as u32;
+        }
+        let total = xadj[n] as usize;
+        let mut adjncy = vec![0u32; total];
+        let mut adjwgt = vec![0i64; total];
+        let mut vwgt = vec![0i64; n];
+        let mut cursor: Vec<u32> = xadj[..n].to_vec();
+        for (i, &v) in nodes.iter().enumerate() {
+            vwgt[i] = g.node_weight(v);
+            for (u, w) in g.neighbors_w(v) {
+                let su = to_sub[u as usize];
+                if su != u32::MAX {
+                    let c = cursor[i] as usize;
+                    adjncy[c] = su;
+                    adjwgt[c] = w;
+                    cursor[i] += 1;
+                }
+            }
+        }
+        SubGraph {
+            graph: Graph::from_parts_unchecked(xadj, adjncy, vwgt, adjwgt),
+            to_parent: nodes.to_vec(),
+        }
+    }
+
+    /// The optimized extraction must be byte-identical to the marker-array
+    /// oracle, including for unsorted caller orders (which both preserve).
+    #[test]
+    fn binary_search_extraction_matches_marker_array_oracle() {
+        use crate::util::quickcheck::{forall, graphs, Config};
+        forall(&Config { cases: 21, seed: 0x5AB6 }, |case, rng| {
+            let g = graphs::any(case, rng);
+            // random subset in a shuffled (non-sorted) caller order
+            let perm = rng.permutation(g.n());
+            let take = 1 + rng.below(g.n() as u64) as usize;
+            let nodes: Vec<u32> = perm[..take].to_vec();
+            let fast = induced(&g, &nodes);
+            let slow = induced_reference(&g, &nodes);
+            crate::prop_assert!(
+                fast.graph.raw() == slow.graph.raw() && fast.to_parent == slow.to_parent,
+                "case {case}: extraction diverged on {} of {} nodes",
+                take,
+                g.n()
+            );
+            Ok(())
+        });
+    }
 
     #[test]
     fn induced_square_from_grid() {

@@ -15,6 +15,15 @@
 //! | `process_mapping`        | `process_mapping`  |
 //! | — (introspection)        | `stats`            |
 //! | — (introspection)        | `metrics`          |
+//! | — (dynamic graphs)       | `mutate`           |
+//! | — (dynamic graphs)       | `repartition`      |
+//!
+//! The dynamic-graph kinds carry a mutation batch (`"ops"`, see
+//! [`MutOp`]): `mutate` applies it to the referenced graph and interns the
+//! result under a fresh content hash (returned as `"new_graph"`);
+//! `repartition` additionally takes the previous assignment (`"prev"`) and
+//! an optional `"migration_budget"` and runs
+//! [`crate::coordinator::incremental::repartition`] on the mutated graph.
 //!
 //! Any graph job may set `"trace": true` to receive the engine's V-cycle
 //! report ([`crate::obs::Trace`]) in the response; `metrics` returns the
@@ -22,6 +31,7 @@
 
 use super::json::{self, Json};
 use super::stats::ServiceStats;
+use crate::graph::delta::MutOp;
 use crate::graph::Graph;
 use crate::mapping::HierarchySpec;
 use crate::partition::config::{Config, Mode};
@@ -40,12 +50,17 @@ pub enum JobKind {
     /// Prometheus text exposition of the service counters; answered
     /// synchronously like `stats`.
     Metrics,
+    /// Apply a mutation batch to a graph, intern the result.
+    Mutate,
+    /// Mutation batch + previous partition → incremental repartition.
+    Repartition,
 }
 
 impl JobKind {
     /// Every kind in protocol order — the slot layout of the per-kind
-    /// latency histograms in [`super::stats`].
-    pub const ALL: [JobKind; 7] = [
+    /// latency histograms in [`super::stats`]. New kinds append; existing
+    /// slots never renumber.
+    pub const ALL: [JobKind; 9] = [
         JobKind::Partition,
         JobKind::Separator,
         JobKind::Ordering,
@@ -53,6 +68,8 @@ impl JobKind {
         JobKind::ProcessMapping,
         JobKind::Stats,
         JobKind::Metrics,
+        JobKind::Mutate,
+        JobKind::Repartition,
     ];
 
     pub fn parse(s: &str) -> Option<JobKind> {
@@ -64,6 +81,8 @@ impl JobKind {
             "process_mapping" => Some(JobKind::ProcessMapping),
             "stats" => Some(JobKind::Stats),
             "metrics" => Some(JobKind::Metrics),
+            "mutate" => Some(JobKind::Mutate),
+            "repartition" => Some(JobKind::Repartition),
             _ => None,
         }
     }
@@ -77,6 +96,8 @@ impl JobKind {
             JobKind::ProcessMapping => "process_mapping",
             JobKind::Stats => "stats",
             JobKind::Metrics => "metrics",
+            JobKind::Mutate => "mutate",
+            JobKind::Repartition => "repartition",
         }
     }
 
@@ -122,6 +143,14 @@ pub struct JobSpec {
     /// the output — but traced jobs bypass the cache so the report always
     /// describes a real execution.
     pub trace: bool,
+    /// Mutation batch (mutate / repartition jobs), applied to the
+    /// referenced graph in order.
+    pub ops: Vec<MutOp>,
+    /// Previous assignment (repartition jobs), one block id per node of
+    /// the *pre-mutation* graph.
+    pub prev: Vec<u32>,
+    /// Max nodes a repartition may move from `prev` (0 = unlimited).
+    pub migration_budget: u64,
 }
 
 impl JobSpec {
@@ -143,6 +172,9 @@ impl JobSpec {
             distances: Vec::new(),
             map_bisection: false,
             trace: false,
+            ops: Vec::new(),
+            prev: Vec::new(),
+            migration_budget: 0,
         }
     }
 
@@ -162,10 +194,18 @@ impl JobSpec {
     /// for. Traced jobs also bypass the cache: the client asked to watch
     /// an execution, and a memoized result has none to report (the
     /// *output* is still identical, which is why `trace` stays out of
-    /// [`JobSpec::fingerprint`]). Everything else is deterministic given
-    /// the seed.
+    /// [`JobSpec::fingerprint`]). Mutate jobs never memoize either: their
+    /// value is the *interning side effect* (the mutated graph entering
+    /// the store under its fresh hash), and a memo hit keyed by the base
+    /// graph would skip it — after an eviction, the returned `new_graph`
+    /// hash would dangle forever. Re-applying a delta is a cheap linear
+    /// pass, so mutate always recomputes (to the identical hash — apply
+    /// is deterministic). Everything else is deterministic given the seed.
     pub fn cacheable(&self) -> bool {
-        self.kind.needs_graph() && self.time_limit == 0.0 && !self.trace
+        self.kind != JobKind::Mutate
+            && self.kind.needs_graph()
+            && self.time_limit == 0.0
+            && !self.trace
     }
 
     /// Memo key part: every knob that can influence the job's output. Two
@@ -204,6 +244,21 @@ impl JobSpec {
             }
             JobKind::Stats => "stats".into(),
             JobKind::Metrics => "metrics".into(),
+            JobKind::Mutate => format!("mutate|ops={}", MutOp::render_ops(&self.ops)),
+            JobKind::Repartition => {
+                // `prev` is n entries — hash it so the memo key stays small
+                let mut prev_bytes = Vec::with_capacity(self.prev.len() * 4);
+                for &b in &self.prev {
+                    prev_bytes.extend_from_slice(&b.to_le_bytes());
+                }
+                format!(
+                    "repartition|{}|budget={}|prev={}|ops={}",
+                    self.config().fingerprint(),
+                    self.migration_budget,
+                    super::store::fnv128_hex(&prev_bytes),
+                    MutOp::render_ops(&self.ops)
+                )
+            }
         }
     }
 }
@@ -312,6 +367,21 @@ impl JobRequest {
                 spec.map_bisection = flag(&v, "bisection")?;
                 spec.k = spec.hierarchy.iter().product::<usize>() as u32;
             }
+            JobKind::Mutate => {
+                spec.ops = ops_field(&v, true)?;
+            }
+            JobKind::Repartition => {
+                spec.k = require_k(&v)?;
+                spec.ops = ops_field(&v, false)?;
+                let prev = v
+                    .get("prev")
+                    .ok_or("repartition needs 'prev' (the previous assignment)")?;
+                spec.prev = prev.to_u32_vec("prev")?;
+                if let Some(x) = v.get("migration_budget") {
+                    spec.migration_budget =
+                        x.as_u64().ok_or("'migration_budget' must be a non-negative integer")?;
+                }
+            }
             JobKind::Stats | JobKind::Metrics => {}
         }
 
@@ -378,6 +448,20 @@ impl JobRequest {
                     fields.push(("bisection".into(), Json::Bool(true)));
                 }
             }
+            JobKind::Mutate => {
+                fields.push(("ops".into(), ops_json(&self.spec.ops)));
+            }
+            JobKind::Repartition => {
+                fields.push(("k".into(), Json::Int(self.spec.k as i64)));
+                fields.push(("ops".into(), ops_json(&self.spec.ops)));
+                fields.push(("prev".into(), Json::from_u32s(&self.spec.prev)));
+                if self.spec.migration_budget > 0 {
+                    fields.push((
+                        "migration_budget".into(),
+                        Json::Int(self.spec.migration_budget as i64),
+                    ));
+                }
+            }
             JobKind::Stats | JobKind::Metrics => {}
         }
         if self.spec.kind.needs_graph() {
@@ -433,6 +517,19 @@ pub enum JobOutput {
     Stats(ServiceStats),
     /// Prometheus text exposition of the service counters.
     Metrics(String),
+    /// A mutated graph, interned under a fresh content hash.
+    Mutated { hash: String, n: usize, m: usize },
+    /// Incremental repartition of a mutated graph.
+    Repartitioned {
+        hash: String,
+        edgecut: i64,
+        balance: f64,
+        part: Vec<u32>,
+        /// Nodes whose block differs from the submitted `prev`.
+        migrated: u64,
+        /// The delta exceeded the size threshold: full multilevel ran.
+        fallback: bool,
+    },
 }
 
 /// Outcome of one request, tagged with its id.
@@ -523,6 +620,26 @@ impl JobResult {
                     JobOutput::Metrics(text) => {
                         fields.push(("metrics".into(), Json::Str(text.clone())));
                     }
+                    JobOutput::Mutated { hash, n, m } => {
+                        fields.push(("new_graph".into(), Json::Str(hash.clone())));
+                        fields.push(("n".into(), Json::Int(*n as i64)));
+                        fields.push(("m".into(), Json::Int(*m as i64)));
+                    }
+                    JobOutput::Repartitioned {
+                        hash,
+                        edgecut,
+                        balance,
+                        part,
+                        migrated,
+                        fallback,
+                    } => {
+                        fields.push(("new_graph".into(), Json::Str(hash.clone())));
+                        fields.push(("edgecut".into(), Json::Int(*edgecut)));
+                        fields.push(("balance".into(), Json::Float(*balance)));
+                        fields.push(("migrated".into(), Json::Int(*migrated as i64)));
+                        fields.push(("fallback".into(), Json::Bool(*fallback)));
+                        fields.push(("part".into(), Json::from_u32s(part)));
+                    }
                 }
                 if let Some(t) = &self.trace {
                     fields.push(("trace".into(), t.to_json()));
@@ -539,6 +656,79 @@ fn flag(v: &Json, name: &str) -> Result<bool, String> {
         Some(Json::Bool(b)) => Ok(*b),
         Some(_) => Err(format!("'{name}' must be a boolean")),
     }
+}
+
+/// Parse the `"ops"` mutation batch: an array of `["add", u, v, w?]`,
+/// `["del", u, v]` and `["weight", v, w]` entries.
+fn ops_field(v: &Json, required: bool) -> Result<Vec<MutOp>, String> {
+    let arr = match v.get("ops") {
+        None | Some(Json::Null) => {
+            return if required {
+                Err("'mutate' needs 'ops' (the mutation batch)".into())
+            } else {
+                Ok(Vec::new())
+            };
+        }
+        Some(x) => x.as_arr().ok_or("'ops' must be an array of [op, ...] entries")?,
+    };
+    let mut ops = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let entry = e.as_arr().ok_or_else(|| format!("ops[{i}] must be an array"))?;
+        let tag = entry
+            .first()
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("ops[{i}] must start with 'add', 'del' or 'weight'"))?;
+        let num = |j: usize| -> Result<i64, String> {
+            entry
+                .get(j)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("ops[{i}]: '{tag}' argument {j} must be an integer"))
+        };
+        let id = |j: usize| -> Result<u32, String> {
+            let x = num(j)?;
+            u32::try_from(x).map_err(|_| format!("ops[{i}]: bad node id {x}"))
+        };
+        let op = match (tag, entry.len()) {
+            ("add", 3) => MutOp::AddEdge(id(1)?, id(2)?, 1),
+            ("add", 4) => MutOp::AddEdge(id(1)?, id(2)?, num(3)?),
+            ("del", 3) => MutOp::DelEdge(id(1)?, id(2)?),
+            ("weight", 3) => MutOp::SetWeight(id(1)?, num(2)?),
+            _ => {
+                return Err(format!(
+                    "ops[{i}]: bad entry (expected [\"add\",u,v,w?], [\"del\",u,v] or \
+                     [\"weight\",v,w])"
+                ))
+            }
+        };
+        ops.push(op);
+    }
+    Ok(ops)
+}
+
+/// Render a mutation batch as the wire `"ops"` array.
+fn ops_json(ops: &[MutOp]) -> Json {
+    Json::Arr(
+        ops.iter()
+            .map(|op| match *op {
+                MutOp::AddEdge(u, v, w) => Json::Arr(vec![
+                    Json::Str("add".into()),
+                    Json::Int(u as i64),
+                    Json::Int(v as i64),
+                    Json::Int(w),
+                ]),
+                MutOp::DelEdge(u, v) => Json::Arr(vec![
+                    Json::Str("del".into()),
+                    Json::Int(u as i64),
+                    Json::Int(v as i64),
+                ]),
+                MutOp::SetWeight(v, w) => Json::Arr(vec![
+                    Json::Str("weight".into()),
+                    Json::Int(v as i64),
+                    Json::Int(w),
+                ]),
+            })
+            .collect(),
+    )
 }
 
 fn require_k(v: &Json) -> Result<u32, String> {
@@ -630,6 +820,32 @@ pub fn execute_with_threads(
                 mode_mapping,
             );
             Ok(JobOutput::Mapping { edgecut: out.edgecut, qap: out.qap, part: out.part })
+        }
+        JobKind::Mutate => {
+            let new_g = crate::graph::delta::apply(g, &spec.ops)?;
+            let hash = super::store::hash_graph(&new_g);
+            Ok(JobOutput::Mutated { hash, n: new_g.n(), m: new_g.m() })
+        }
+        JobKind::Repartition => {
+            let new_g = crate::graph::delta::apply(g, &spec.ops)?;
+            let mut cfg = spec.config();
+            cfg.threads = threads;
+            let seeds = crate::coordinator::incremental::dirty_seeds(&spec.ops);
+            let res = crate::coordinator::incremental::repartition(
+                &new_g,
+                &spec.prev,
+                &seeds,
+                &cfg,
+                spec.migration_budget,
+            )?;
+            Ok(JobOutput::Repartitioned {
+                hash: super::store::hash_graph(&new_g),
+                edgecut: res.edge_cut,
+                balance: res.balance,
+                part: res.partition.into_assignment(),
+                migrated: res.migrated,
+                fallback: res.fallback,
+            })
         }
         JobKind::Stats | JobKind::Metrics => {
             Err("introspection jobs are answered by the service, not the pool".into())
@@ -847,6 +1063,103 @@ mod tests {
         spec.k = 4;
         let out = execute(&g, &spec).unwrap();
         assert!(matches!(out, JobOutput::Mapping { qap, .. } if qap > 0));
+    }
+
+    #[test]
+    fn parses_mutate_and_repartition_requests() {
+        let r = JobRequest::from_json(
+            r#"{"id":"m","job":"mutate","graph":"cafe","ops":[["add",0,4,3],["del",1,2],["weight",5,9],["add",2,6]]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.spec.kind, JobKind::Mutate);
+        assert!(matches!(&r.graph, GraphPayload::Stored(h) if h == "cafe"));
+        assert_eq!(
+            r.spec.ops,
+            vec![
+                MutOp::AddEdge(0, 4, 3),
+                MutOp::DelEdge(1, 2),
+                MutOp::SetWeight(5, 9),
+                MutOp::AddEdge(2, 6, 1),
+            ]
+        );
+        assert!(!r.spec.cacheable(), "mutate must never memoize");
+        let r2 = JobRequest::from_json(&r.to_json_line()).unwrap();
+        assert_eq!(r2.spec.ops, r.spec.ops);
+
+        let r = JobRequest::from_json(
+            r#"{"id":"r","job":"repartition","k":2,"graph":"cafe","prev":[0,0,1,1,1],"ops":[["del",1,2]],"migration_budget":2}"#,
+        )
+        .unwrap();
+        assert_eq!(r.spec.kind, JobKind::Repartition);
+        assert_eq!(r.spec.prev, vec![0, 0, 1, 1, 1]);
+        assert_eq!(r.spec.migration_budget, 2);
+        assert!(r.spec.cacheable(), "repartition results are memoizable");
+        let r2 = JobRequest::from_json(&r.to_json_line()).unwrap();
+        assert_eq!(r2.spec.fingerprint(), r.spec.fingerprint());
+
+        assert!(
+            JobRequest::from_json(r#"{"id":"m","job":"mutate","graph":"cafe"}"#).is_err(),
+            "mutate without ops"
+        );
+        assert!(
+            JobRequest::from_json(r#"{"id":"r","job":"repartition","k":2,"graph":"cafe"}"#)
+                .is_err(),
+            "repartition without prev"
+        );
+        assert!(JobRequest::from_json(
+            r#"{"id":"m","job":"mutate","graph":"cafe","ops":[["frob",1]]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn repartition_fingerprint_tracks_dynamic_fields() {
+        let base = JobSpec {
+            k: 2,
+            prev: vec![0, 1],
+            ops: vec![MutOp::DelEdge(0, 1)],
+            ..JobSpec::defaults(JobKind::Repartition)
+        };
+        let mut other = base.clone();
+        other.migration_budget = 5;
+        assert_ne!(base.fingerprint(), other.fingerprint(), "budget in the memo key");
+        let mut other = base.clone();
+        other.prev = vec![1, 0];
+        assert_ne!(base.fingerprint(), other.fingerprint(), "prev in the memo key");
+        let mut other = base.clone();
+        other.ops = vec![MutOp::AddEdge(0, 1, 2)];
+        assert_ne!(base.fingerprint(), other.fingerprint(), "ops in the memo key");
+    }
+
+    #[test]
+    fn execute_runs_the_dynamic_kinds() {
+        let g = generators::grid2d(8, 8);
+        let cfg = Config::from_mode(Mode::Eco, 2, 0.03, 1);
+        let prev = crate::coordinator::kaffpa(&g, &cfg, None, None).partition.into_assignment();
+        let ops = vec![MutOp::DelEdge(0, 1), MutOp::AddEdge(0, 9, 1)];
+
+        let mut spec = JobSpec::defaults(JobKind::Mutate);
+        spec.ops = ops.clone();
+        let JobOutput::Mutated { hash, n, m } = execute(&g, &spec).unwrap() else {
+            panic!("mutate must produce Mutated");
+        };
+        assert_eq!(n, 64);
+        assert_eq!(m, g.m());
+        assert_eq!(hash.len(), 32, "content hash format");
+
+        let mut spec = JobSpec { k: 2, seed: 1, ..JobSpec::defaults(JobKind::Repartition) };
+        spec.ops = ops;
+        spec.prev = prev;
+        spec.migration_budget = 8;
+        let JobOutput::Repartitioned { hash: h2, part, migrated, fallback, .. } =
+            execute(&g, &spec).unwrap()
+        else {
+            panic!("repartition must produce Repartitioned");
+        };
+        assert_eq!(h2, hash, "both kinds hash the same mutated graph");
+        assert_eq!(part.len(), 64);
+        assert!(migrated <= 8, "budget respected, migrated {migrated}");
+        assert!(!fallback, "2-edge delta stays incremental");
     }
 
     #[test]

@@ -460,6 +460,28 @@ fn worker_loop(shared: &Shared) {
                 match run {
                     Ok(out) => {
                         let out = Arc::new(out);
+                        // dynamic-graph jobs return the *hash* of the graph
+                        // they produced; the worker interns the graph itself
+                        // so Stored(new_hash) resolves from now on (and from
+                        // disk after a restart). Re-applying the delta here
+                        // is cheap, deterministic, and keeps execute() pure.
+                        if matches!(
+                            &*out,
+                            protocol::JobOutput::Mutated { .. }
+                                | protocol::JobOutput::Repartitioned { .. }
+                        ) {
+                            if let Ok(new_g) =
+                                crate::graph::delta::apply(&task.graph, &task.spec.ops)
+                            {
+                                shared.store.intern_graph(new_g);
+                            }
+                            if let protocol::JobOutput::Repartitioned {
+                                migrated, fallback, ..
+                            } = &*out
+                            {
+                                shared.stats.repartition(*migrated, *fallback);
+                            }
+                        }
                         if task.spec.cacheable() {
                             shared.store.insert(&key, Arc::clone(&out));
                         }

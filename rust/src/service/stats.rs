@@ -105,6 +105,12 @@ pub struct ServiceStats {
     pub disk_results: usize,
     /// Bytes currently in the persistent tier.
     pub disk_bytes: u64,
+    /// Repartition jobs executed (incremental or fallback).
+    pub repartitions: u64,
+    /// Total nodes migrated across all repartition jobs.
+    pub repartition_migrated: u64,
+    /// Repartition jobs that fell back to a full multilevel run.
+    pub repartition_fallbacks: u64,
     /// TCP connections currently registered in the poll loop.
     pub open_connections: usize,
     /// TCP connections accepted over the service lifetime.
@@ -145,6 +151,7 @@ impl ServiceStats {
              \x20 disk: hits {}  misses {}  evictions {}  corrupt {}  \
              graphs {}  results {}  bytes {}\n\
              \x20 net: open {}  accepted {}  shed {}\n\
+             \x20 repartition: runs {}  migrated {}  fallbacks {}\n\
              \x20 latency: p50 {:.6}s  p99 {:.6}s\n",
             self.workers,
             self.queue_depth,
@@ -172,6 +179,9 @@ impl ServiceStats {
             self.open_connections,
             self.connections_accepted,
             self.connections_shed,
+            self.repartitions,
+            self.repartition_migrated,
+            self.repartition_fallbacks,
             self.p50_latency,
             self.p99_latency,
         )
@@ -209,6 +219,15 @@ impl ServiceStats {
                 Json::Int(self.connections_accepted as i64),
             ),
             ("connections_shed".into(), Json::Int(self.connections_shed as i64)),
+            ("repartitions".into(), Json::Int(self.repartitions as i64)),
+            (
+                "repartition_migrated".into(),
+                Json::Int(self.repartition_migrated as i64),
+            ),
+            (
+                "repartition_fallbacks".into(),
+                Json::Int(self.repartition_fallbacks as i64),
+            ),
             ("p50_latency".into(), Json::Float(self.p50_latency)),
             ("p99_latency".into(), Json::Float(self.p99_latency)),
         ])
@@ -308,6 +327,21 @@ impl ServiceStats {
             "TCP connections shed by admission control.",
             self.connections_shed,
         );
+        w.counter(
+            "kahip_repartitions_total",
+            "Repartition jobs executed.",
+            self.repartitions,
+        );
+        w.counter(
+            "kahip_repartition_migrated_total",
+            "Nodes migrated by repartition jobs.",
+            self.repartition_migrated,
+        );
+        w.counter(
+            "kahip_repartition_fallbacks_total",
+            "Repartition jobs that fell back to full multilevel.",
+            self.repartition_fallbacks,
+        );
         for (kind, h) in &self.latency {
             w.histogram(
                 "kahip_job_latency_seconds",
@@ -327,6 +361,9 @@ struct Counters {
     cancelled: u64,
     rejected: u64,
     coalesced: u64,
+    repartitions: u64,
+    repartition_migrated: u64,
+    repartition_fallbacks: u64,
     /// Per-kind latency histograms, indexed by [`JobKind::slot`].
     latency: Vec<LogHistogram>,
 }
@@ -340,6 +377,9 @@ impl Default for Counters {
             cancelled: 0,
             rejected: 0,
             coalesced: 0,
+            repartitions: 0,
+            repartition_migrated: 0,
+            repartition_fallbacks: 0,
             latency: vec![LogHistogram::new(); JobKind::ALL.len()],
         }
     }
@@ -366,6 +406,17 @@ impl StatsCollector {
 
     pub fn coalesced(&self) {
         self.inner.lock().unwrap().coalesced += 1;
+    }
+
+    /// Record an executed repartition job's migration volume and whether
+    /// it fell back to a full multilevel run.
+    pub fn repartition(&self, migrated: u64, fallback: bool) {
+        let mut c = self.inner.lock().unwrap();
+        c.repartitions += 1;
+        c.repartition_migrated += migrated;
+        if fallback {
+            c.repartition_fallbacks += 1;
+        }
     }
 
     /// Record a finished job: kind, outcome class, end-to-end latency.
@@ -422,6 +473,9 @@ impl StatsCollector {
                 open_connections: net.open,
                 connections_accepted: net.accepted,
                 connections_shed: net.sheds,
+                repartitions: c.repartitions,
+                repartition_migrated: c.repartition_migrated,
+                repartition_fallbacks: c.repartition_fallbacks,
                 p50_latency: 0.0,
                 p99_latency: 0.0,
                 latency: JobKind::ALL
@@ -480,6 +534,27 @@ mod tests {
         assert_eq!(by_kind("partition"), 2);
         assert_eq!(by_kind("ordering"), 1);
         assert_eq!(by_kind("separator"), 0);
+    }
+
+    #[test]
+    fn repartition_counters_flow_into_every_surface() {
+        let s = StatsCollector::new();
+        s.repartition(5, false);
+        s.repartition(0, true);
+        s.repartition(12, false);
+        let snap = s.snapshot(1, 0, 8, StoreCounters::default(), NetSnapshot::default());
+        assert_eq!(snap.repartitions, 3);
+        assert_eq!(snap.repartition_migrated, 17);
+        assert_eq!(snap.repartition_fallbacks, 1);
+        assert!(snap.render().contains("repartition: runs 3  migrated 17  fallbacks 1"));
+        let j = snap.to_json().render();
+        assert!(j.contains("\"repartitions\":3"));
+        assert!(j.contains("\"repartition_migrated\":17"));
+        assert!(j.contains("\"repartition_fallbacks\":1"));
+        let text = snap.to_prometheus();
+        assert!(text.contains("kahip_repartitions_total 3"));
+        assert!(text.contains("kahip_repartition_migrated_total 17"));
+        assert!(text.contains("kahip_repartition_fallbacks_total 1"));
     }
 
     #[test]
@@ -561,5 +636,9 @@ mod tests {
         assert!(text.contains("kahip_open_connections 3"));
         assert!(text.contains("kahip_connections_accepted_total 5"));
         assert!(text.contains("kahip_connections_shed_total 2"));
+        // repartition counters are present even before any dynamic job ran
+        assert!(text.contains("kahip_repartitions_total 0"));
+        assert!(text.contains("kahip_repartition_migrated_total 0"));
+        assert!(text.contains("kahip_repartition_fallbacks_total 0"));
     }
 }

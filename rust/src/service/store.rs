@@ -186,6 +186,31 @@ impl GraphStore {
         }
     }
 
+    /// Intern an already-built [`Graph`] (the output of a `mutate` job)
+    /// under its content hash, spilling to disk exactly like an inline
+    /// payload so the new graph survives restarts. Returns the hash and
+    /// the canonical stored `Arc` (a racing duplicate adopts the winner).
+    pub fn intern_graph(&self, g: Graph) -> (String, Arc<Graph>) {
+        let hash = hash_graph(&g);
+        let g = Arc::new(g);
+        let (stored, evicted) = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(existing) = inner.graphs.get(&hash).map(Arc::clone) {
+                inner.graphs_reused += 1;
+                (existing, Vec::new())
+            } else {
+                let ev = self.insert_graph_locked(&mut inner, &hash, &g);
+                (g, ev)
+            }
+        };
+        if let Some(disk) = &self.disk {
+            let disk_evicted = disk.store_graph(&hash, &stored);
+            self.purge_disk_evicted(&disk_evicted);
+        }
+        self.purge_orphans(&evicted);
+        (hash, stored)
+    }
+
     /// Resolve a `Stored(hash)` reference: memory first, then disk.
     fn intern_stored(&self, hash: &str) -> Result<(String, Arc<Graph>), String> {
         {
@@ -404,6 +429,20 @@ pub fn hash_csr(
     format!("{:016x}{:016x}", a.finish(), b.finish())
 }
 
+/// Content hash of a built [`Graph`], identical to what [`hash_csr`]
+/// produces for the equivalent inline payload: all-unit weight arrays
+/// canonicalize to "absent" so a graph hashes the same whether its
+/// weights were sent explicitly, omitted, or materialized by
+/// `delta::apply`.
+pub fn hash_graph(g: &Graph) -> String {
+    let (xadj, adjncy, vwgt, adjwgt) = g.raw();
+    let n = xadj.len().saturating_sub(1);
+    let vw = Some(vwgt).filter(|w| w.len() != n || w.iter().any(|&x| x != 1));
+    let aw =
+        Some(adjwgt).filter(|w| w.len() != adjncy.len() || w.iter().any(|&x| x != 1));
+    hash_csr(xadj, adjncy, vw, aw)
+}
+
 /// FNV-128 (the same two-pass construction as [`hash_csr`]) over raw
 /// bytes — the disk tier's record checksum.
 pub(crate) fn fnv128_bytes(bytes: &[u8]) -> [u8; 16] {
@@ -562,6 +601,44 @@ mod tests {
         let (h1, _) = store.intern(&explicit).unwrap();
         let (h2, _) = store.intern(&absent).unwrap();
         assert_eq!(h1, h2, "unit weights must hash like absent weights");
+    }
+
+    #[test]
+    fn hash_graph_matches_inline_intern_hash() {
+        // mutate results are interned via hash_graph; clients later
+        // reference them as Stored(hash) or resend the CSR inline — both
+        // must land on the same key
+        let store = GraphStore::new(8, 8);
+        let g = generators::grid2d(7, 5);
+        let (inline_hash, _) = store.intern(&payload(&g)).unwrap();
+        assert_eq!(hash_graph(&g), inline_hash);
+        // weighted graphs too
+        let mut rng = crate::rng::Rng::new(9);
+        let w = generators::random_weighted(40, 80, 1, 9, &mut rng);
+        let (wh, _) = store.intern(&payload(&w)).unwrap();
+        assert_eq!(hash_graph(&w), wh);
+    }
+
+    #[test]
+    fn intern_graph_stores_reuses_and_spills_to_disk() {
+        let dir = temp_dir("intern-graph");
+        let g = generators::grid2d(6, 4);
+        let hash = {
+            let store =
+                GraphStore::with_disk(8, 8, Some(DiskStore::open(&dir, 0).unwrap()));
+            let (h1, a1) = store.intern_graph(g.clone());
+            let (h2, a2) = store.intern_graph(g.clone());
+            assert_eq!(h1, h2);
+            assert!(Arc::ptr_eq(&a1, &a2), "duplicate intern adopts the stored Arc");
+            assert_eq!(store.counters().graphs_stored, 1);
+            h1
+        };
+        // restart: the mutated graph must resolve from the persistent tier
+        let store = GraphStore::with_disk(8, 8, Some(DiskStore::open(&dir, 0).unwrap()));
+        let (h, back) = store.intern(&GraphPayload::Stored(hash.clone())).unwrap();
+        assert_eq!(h, hash);
+        assert_eq!(*back, g, "reloaded mutated graph is byte-identical");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! balance constraint on well-behaved inputs.
 
 use kahip::coarsening::hierarchy::{build_hierarchy, check_invariants};
+use kahip::coordinator::incremental;
+use kahip::graph::delta::{self, MutOp};
 use kahip::partition::config::{Config, Mode};
 use kahip::partition::{metrics, Partition};
 use kahip::rng::Rng;
@@ -164,6 +166,102 @@ fn one_thread_service_jobs_match_direct_library_calls() {
                 other => panic!("partition job returned {other:?}"),
             }
         }
+    }
+}
+
+/// A deterministic mutation batch derived from the graph's own structure
+/// (no rng): delete the lexicographically first edge, insert the first
+/// absent pair, bump one node weight. Valid for every headline graph.
+fn headline_ops(g: &kahip::graph::Graph) -> Vec<MutOp> {
+    let u = (0..g.n() as u32).find(|&v| g.degree(v) > 0).expect("headline graphs have edges");
+    let v = g.neighbors(u)[0];
+    let mut ops = vec![MutOp::DelEdge(u, v)];
+    'outer: for a in 0..g.n() as u32 {
+        for b in (a + 1)..g.n() as u32 {
+            if !g.neighbors(a).contains(&b) {
+                ops.push(MutOp::AddEdge(a, b, 2));
+                break 'outer;
+            }
+        }
+    }
+    ops.push(MutOp::SetWeight(0, 3));
+    ops
+}
+
+fn dynamic_spec(kind: JobKind, g: &kahip::graph::Graph, seed: u64, mode: Mode) -> JobSpec {
+    let mut spec = JobSpec { k: 4, seed, mode, ..JobSpec::defaults(kind) };
+    spec.ops = headline_ops(g);
+    if kind == JobKind::Repartition {
+        // a deterministic (round-robin) previous assignment: coarse but
+        // valid, and independent of any partitioner run
+        spec.prev = (0..g.n() as u32).map(|v| v % 4).collect();
+        spec.migration_budget = 6;
+    }
+    spec
+}
+
+/// The dynamic job kinds obey the same contract as the static ones:
+/// byte-identical responses at every thread count, for both coarsening
+/// regimes. Repartition exercises the whole incremental stack (delta
+/// apply, dirty-region BFS, restricted LP + FM, kaba rebalance, budget
+/// trim) — any thread-dependent ordering inside it shows up here.
+#[test]
+fn dynamic_job_kinds_are_byte_identical_across_thread_counts() {
+    for (gname, g) in headline_graphs() {
+        for kind in [JobKind::Mutate, JobKind::Repartition] {
+            for (seed, mode) in [(3u64, Mode::Eco), (77, Mode::EcoSocial)] {
+                let spec = dynamic_spec(kind, &g, seed, mode);
+                let baseline = execute_with_threads(&g, &spec, THREADS[0])
+                    .unwrap_or_else(|e| panic!("{gname}/{kind:?} seed {seed} failed: {e}"));
+                let want = canonical_line(kind, baseline);
+                for &t in &THREADS[1..] {
+                    let out = execute_with_threads(&g, &spec, t)
+                        .unwrap_or_else(|e| panic!("{gname}/{kind:?} t={t} failed: {e}"));
+                    assert_eq!(
+                        canonical_line(kind, out),
+                        want,
+                        "{gname}/{kind:?} seed {seed} {mode:?}: {t} threads diverged from 1"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The 1-thread repartition job must equal the direct library pipeline:
+/// same delta apply, same dirty seeds, same incremental repartition — and
+/// the reported hash is the content address of the mutated graph.
+#[test]
+fn one_thread_dynamic_jobs_match_direct_library_calls() {
+    for (gname, g) in headline_graphs() {
+        let spec = dynamic_spec(JobKind::Repartition, &g, 9, Mode::Eco);
+        let out = execute_with_threads(&g, &spec, 1).unwrap();
+        let h = delta::apply(&g, &spec.ops).unwrap();
+        let mut cfg = spec.config();
+        cfg.threads = 1;
+        let seeds = incremental::dirty_seeds(&spec.ops);
+        let res =
+            incremental::repartition(&h, &spec.prev, &seeds, &cfg, spec.migration_budget)
+                .unwrap();
+        let JobOutput::Repartitioned { hash, edgecut, balance, part, migrated, fallback } =
+            out
+        else {
+            panic!("repartition job must return Repartitioned");
+        };
+        assert_eq!(
+            hash,
+            kahip::service::store::hash_graph(&h),
+            "{gname}: reported hash is the mutated graph's content address"
+        );
+        assert_eq!(edgecut, res.edge_cut, "{gname}: edge cut");
+        assert_eq!(balance, res.balance, "{gname}: balance");
+        assert_eq!(migrated, res.migrated, "{gname}: migrated");
+        assert_eq!(fallback, res.fallback, "{gname}: fallback");
+        assert_eq!(
+            part,
+            res.partition.into_assignment(),
+            "{gname}: assignment must be byte-identical"
+        );
     }
 }
 

@@ -1,0 +1,267 @@
+//! Dynamic-graph mutation-fuzz tier.
+//!
+//! Pins the two contracts the dynamic workload rests on, across every
+//! generated graph family in `util::quickcheck::graphs`:
+//!
+//! 1. **Byte identity**: applying a random mutation sequence through
+//!    `graph::delta::apply` produces a CSR byte-identical to rebuilding
+//!    the mutated graph from scratch with `GraphBuilder` (which emits the
+//!    canonical sorted-adjacency form). This is what lets a mutated graph
+//!    hash to the same content address however it was produced.
+//! 2. **Bounded repair**: `coordinator::incremental::repartition` on a
+//!    small (≤ 16 edge) delta returns a valid partition that respects the
+//!    balance constraint, migrates no more nodes than the budget allows,
+//!    and lands within a fixed factor of a cold full re-partition's cut.
+//!
+//! A model (edge map + weight vector) evolves alongside the ops so every
+//! generated op is valid by construction: inserts pick non-edges, deletes
+//! pick existing edges, weights pick any node.
+
+use kahip::coordinator::incremental::{self, fallback_threshold};
+use kahip::graph::delta::{self, MutOp};
+use kahip::graph::{generators, Graph, GraphBuilder};
+use kahip::partition::config::{Config as PConfig, Mode};
+use kahip::partition::{metrics, Partition};
+use kahip::prop_assert;
+use kahip::rng::Rng;
+use kahip::util::quickcheck::{forall, graphs, Config};
+use std::collections::BTreeMap;
+
+/// Reference model of a mutable graph: normalized edge map + node weights.
+struct Model {
+    vwgt: Vec<i64>,
+    edges: BTreeMap<(u32, u32), i64>,
+}
+
+impl Model {
+    fn of(g: &Graph) -> Model {
+        let mut edges = BTreeMap::new();
+        for v in g.nodes() {
+            for (u, w) in g.neighbors_w(v) {
+                if v < u {
+                    edges.insert((v, u), w);
+                }
+            }
+        }
+        Model { vwgt: g.nodes().map(|v| g.node_weight(v)).collect(), edges }
+    }
+
+    /// Rebuild from scratch through the canonical builder path.
+    fn rebuild(&self) -> Graph {
+        let mut b = GraphBuilder::new(self.vwgt.len());
+        b.set_node_weights(self.vwgt.clone());
+        for (&(u, v), &w) in &self.edges {
+            b.add_edge(u, v, w);
+        }
+        b.build().expect("model graphs are always valid")
+    }
+}
+
+/// One random valid op, applied to the model. `weights` enables
+/// `SetWeight` ops (the repartition property keeps node weights at 1 so
+/// feasibility of the seed partition is preserved).
+fn random_op(model: &mut Model, weights: bool, rng: &mut Rng) -> Option<MutOp> {
+    let n = model.vwgt.len();
+    let kinds = if weights { 3 } else { 2 };
+    match rng.below(kinds) {
+        0 if n >= 2 => {
+            // insert: a few attempts to hit a non-edge, then give up
+            for _ in 0..8 {
+                let u = rng.index(n) as u32;
+                let v = rng.index(n) as u32;
+                if u == v {
+                    continue;
+                }
+                let key = (u.min(v), u.max(v));
+                if model.edges.contains_key(&key) {
+                    continue;
+                }
+                let w = 1 + rng.below(8) as i64;
+                model.edges.insert(key, w);
+                return Some(MutOp::AddEdge(u, v, w));
+            }
+            None
+        }
+        1 if !model.edges.is_empty() => {
+            let i = rng.index(model.edges.len());
+            let (&(u, v), _) = model.edges.iter().nth(i).unwrap();
+            model.edges.remove(&(u, v));
+            Some(MutOp::DelEdge(u, v))
+        }
+        2 => {
+            let v = rng.index(n) as u32;
+            let w = 1 + rng.below(8) as i64;
+            model.vwgt[v as usize] = w;
+            Some(MutOp::SetWeight(v, w))
+        }
+        _ => None,
+    }
+}
+
+fn random_ops(model: &mut Model, count: usize, weights: bool, rng: &mut Rng) -> Vec<MutOp> {
+    (0..count).filter_map(|_| random_op(model, weights, rng)).collect()
+}
+
+/// Contract 1: delta-apply == rebuild, byte for byte, for every family,
+/// across several sequential mutation rounds on the same evolving graph.
+#[test]
+fn delta_apply_is_byte_identical_to_rebuild_for_every_family() {
+    forall(&Config { cases: 28, seed: 0xD1A7 }, |case, rng| {
+        let g = graphs::any(case, rng);
+        let mut model = Model::of(&g);
+        let mut cur = g;
+        for round in 0..3 {
+            let count = 1 + rng.below(12) as usize;
+            let ops = random_ops(&mut model, count, true, rng);
+            let next = delta::apply(&cur, &ops)
+                .map_err(|e| format!("round {round} ops {ops:?}: {e}"))?;
+            prop_assert!(
+                next.validate().is_ok(),
+                "round {round}: delta-applied graph fails CSR validation"
+            );
+            let rebuilt = model.rebuild();
+            prop_assert!(
+                next.raw() == rebuilt.raw(),
+                "round {round} ({} ops): delta-applied CSR diverged from rebuild",
+                ops.len()
+            );
+            cur = next;
+        }
+        Ok(())
+    });
+}
+
+/// Contract 2: a ≤ 16-edge delta repartitions incrementally (no fallback),
+/// yielding a valid partition that stays feasible, honours the migration
+/// budget, and whose cut is within a fixed factor of a cold full run.
+#[test]
+fn small_delta_repartition_is_valid_bounded_and_near_cold_quality() {
+    forall(&Config { cases: 14, seed: 0x0DD5 }, |case, rng| {
+        let g = graphs::any(case, rng);
+        let k = 2 + (case % 3) as u32;
+        let cfg = PConfig::from_mode(Mode::Eco, k, 0.03, case as u64);
+        let prev =
+            kahip::coordinator::kaffpa(&g, &cfg, None, None).partition.into_assignment();
+        let seed_feasible =
+            Partition::from_assignment(&g, k, prev.clone()).is_feasible(&g, cfg.epsilon);
+
+        let mut model = Model::of(&g);
+        let count = 1 + rng.below(16) as usize;
+        let ops = random_ops(&mut model, count, false, rng); // edge-only
+        let h = delta::apply(&g, &ops).map_err(|e| format!("ops {ops:?}: {e}"))?;
+        let seeds = incremental::dirty_seeds(&ops);
+        prop_assert!(
+            seeds.len() <= fallback_threshold(h.n()),
+            "a ≤16-edge delta must stay under the fallback threshold"
+        );
+        // unbounded run: pure refinement from the seed — may never worsen
+        let res = incremental::repartition(&h, &prev, &seeds, &cfg, 0)
+            .map_err(|e| format!("repartition: {e}"))?;
+        prop_assert!(!res.fallback, "small delta took the fallback path");
+        prop_assert!(
+            res.partition.validate(&h).is_ok(),
+            "repartition returned an invalid partition"
+        );
+        let seed_cut = metrics::edge_cut(&h, &Partition::from_assignment(&h, k, prev.clone()));
+        if seed_feasible {
+            prop_assert!(
+                res.partition.is_feasible(&h, cfg.epsilon),
+                "feasible seed, infeasible result (weights {:?})",
+                res.partition.block_weights()
+            );
+            prop_assert!(
+                res.edge_cut <= seed_cut,
+                "refinement worsened the cut: {} > seed {seed_cut}",
+                res.edge_cut
+            );
+        }
+        // quality vs a cold full run on the mutated graph: generous fixed
+        // factor plus the total weight the delta itself shifted (new edges
+        // the seed never saw can land on the seed's block boundary)
+        let delta_weight: i64 = ops
+            .iter()
+            .map(|op| match *op {
+                MutOp::AddEdge(_, _, w) => w,
+                MutOp::DelEdge(..) => 8, // generator's max edge weight
+                MutOp::SetWeight(..) => 0,
+            })
+            .sum();
+        let cold = kahip::coordinator::kaffpa(&h, &cfg, None, None);
+        prop_assert!(
+            res.edge_cut <= 2 * cold.edge_cut + delta_weight + 32,
+            "incremental cut {} vs cold cut {} (delta weight {delta_weight})",
+            res.edge_cut,
+            cold.edge_cut
+        );
+        // bounded run: the budget is a hard cap on migrated nodes
+        let budget = (h.n() as u64 / 8).max(4);
+        let bounded = incremental::repartition(&h, &prev, &seeds, &cfg, budget)
+            .map_err(|e| format!("bounded repartition: {e}"))?;
+        prop_assert!(
+            bounded.migrated <= budget,
+            "migrated {} > budget {budget}",
+            bounded.migrated
+        );
+        prop_assert!(bounded.partition.validate(&h).is_ok(), "bounded partition invalid");
+        if seed_feasible {
+            prop_assert!(
+                bounded.partition.is_feasible(&h, cfg.epsilon),
+                "feasible seed, infeasible bounded result"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The budget boundary: 0 means unbounded, 1 pulls migration down to at
+/// most one node, and an empty delta never migrates anything at all.
+#[test]
+fn migration_budget_boundaries() {
+    let g = generators::grid2d(8, 8);
+    let k = 4;
+    let cfg = PConfig::from_mode(Mode::Eco, k, 0.03, 5);
+    let prev = kahip::coordinator::kaffpa(&g, &cfg, None, None).partition.into_assignment();
+    let ops =
+        [MutOp::DelEdge(0, 1), MutOp::DelEdge(8, 9), MutOp::AddEdge(0, 9, 2)];
+    let h = delta::apply(&g, &ops).unwrap();
+    let seeds = incremental::dirty_seeds(&ops);
+    for budget in [0u64, 1, 4] {
+        let res = incremental::repartition(&h, &prev, &seeds, &cfg, budget).unwrap();
+        assert!(res.partition.validate(&h).is_ok());
+        assert!(res.partition.is_feasible(&h, cfg.epsilon), "budget {budget}");
+        if budget > 0 {
+            assert!(res.migrated <= budget, "budget {budget}, migrated {}", res.migrated);
+        }
+    }
+    let empty = incremental::repartition(&h, &prev, &[], &cfg, 0).unwrap();
+    assert_eq!(empty.migrated, 0);
+    assert_eq!(empty.partition.assignment(), &prev[..]);
+}
+
+/// Past the size threshold the incremental path must hand over to full
+/// multilevel — and align the fresh labels to the old ones, so a fallback
+/// is not a wholesale reshuffle when the structure barely moved.
+#[test]
+fn oversized_delta_falls_back_and_aligns_to_previous_labels() {
+    let g = generators::grid2d(20, 20); // n = 400, threshold = max(64, 50)
+    let cfg = PConfig::from_mode(Mode::Eco, 4, 0.03, 11);
+    let prev = kahip::coordinator::kaffpa(&g, &cfg, None, None).partition.into_assignment();
+    // delete 95 horizontal edges: ~100 distinct endpoints > threshold
+    let ops: Vec<MutOp> =
+        (0..100).filter(|v| v % 20 != 19).map(|v| MutOp::DelEdge(v, v + 1)).collect();
+    let h = delta::apply(&g, &ops).unwrap();
+    let seeds = incremental::dirty_seeds(&ops);
+    assert!(seeds.len() > fallback_threshold(h.n()));
+    let res = incremental::repartition(&h, &prev, &seeds, &cfg, 0).unwrap();
+    assert!(res.fallback);
+    assert!(res.partition.validate(&h).is_ok());
+    assert!(res.partition.is_feasible(&h, cfg.epsilon));
+    // label alignment: strictly fewer migrations than a worst-case
+    // relabeling (n - n/k is what a random permutation of labels costs)
+    let n = h.n() as u64;
+    assert!(
+        res.migrated < n - n / 4,
+        "fallback migrated {} of {n} nodes — labels were not aligned",
+        res.migrated
+    );
+}

@@ -175,6 +175,68 @@ fn corrupted_and_truncated_records_recompute_without_panic() {
 }
 
 #[test]
+fn mutate_interns_descendants_that_survive_a_restart() {
+    use kahip::graph::delta::MutOp;
+
+    let dir = store_dir("mutate");
+    let ops = vec![MutOp::DelEdge(0, 1), MutOp::AddEdge(0, 11, 2)];
+
+    // Cold service: intern the base graph, then mutate it by hash.
+    let (base, new_hash) = {
+        let svc = Service::new(persistent_config(&dir));
+        let base = svc.run_sync(grid_request("seed", 4, 7)).graph_hash.unwrap();
+        let res = svc.run_sync(JobRequest {
+            id: "mut".into(),
+            graph: GraphPayload::Stored(base.clone()),
+            spec: JobSpec { ops: ops.clone(), ..JobSpec::defaults(JobKind::Mutate) },
+        });
+        assert!(!res.cached, "mutate is never served from the memo");
+        let new_hash = match res.outcome.expect("mutate must succeed").as_ref() {
+            JobOutput::Mutated { hash, n, m } => {
+                assert_eq!(*n, 100);
+                assert_eq!(*m, 180, "one edge deleted, one added: count unchanged");
+                hash.clone()
+            }
+            other => panic!("wrong output {other:?}"),
+        };
+        assert_ne!(new_hash, base, "mutation must change the content address");
+        // the descendant is immediately addressable without a resend
+        let mut req = grid_request("child", 4, 7);
+        req.graph = GraphPayload::Stored(new_hash.clone());
+        assert!(svc.run_sync(req).outcome.is_ok());
+        assert_eq!(svc.stats().disk_graphs, 2, "parent and child both spilled");
+        (base, new_hash)
+    };
+
+    // Warm restart: both the parent and the mutated descendant resolve
+    // from disk by hash alone.
+    let svc = Service::new(persistent_config(&dir));
+    assert_eq!(svc.stats().disk_graphs, 2);
+    for (id, hash) in [("old", &base), ("new", &new_hash)] {
+        let mut req = grid_request(id, 2, 3);
+        req.graph = GraphPayload::Stored(hash.clone());
+        let res = svc.run_sync(req);
+        assert!(res.outcome.is_ok(), "{id} hash must resolve after restart");
+        assert_eq!(res.graph_hash.as_deref(), Some(hash.as_str()));
+    }
+
+    // Replaying the same mutation is a recompute (no stale memo) that
+    // lands on the same content address — mutation is deterministic.
+    let res = svc.run_sync(JobRequest {
+        id: "replay".into(),
+        graph: GraphPayload::Stored(base),
+        spec: JobSpec { ops, ..JobSpec::defaults(JobKind::Mutate) },
+    });
+    assert!(!res.cached);
+    match res.outcome.unwrap().as_ref() {
+        JobOutput::Mutated { hash, .. } => assert_eq!(*hash, new_hash),
+        other => panic!("wrong output {other:?}"),
+    }
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn two_services_sharing_one_store_dir_are_safe() {
     let dir = store_dir("shared");
     // Two live service instances over one directory, racing the same

@@ -167,6 +167,100 @@ fn metrics_job_emits_valid_prometheus_exposition() {
     assert!(text.contains("kahip_cache_hits_total 1"));
 }
 
+/// A dynamic-graph session over live TCP: partition a graph, mutate it by
+/// hash, repartition against the previous assignment, address the mutated
+/// descendant by its returned content hash — and confirm the pre-mutation
+/// memo entry still serves, because content addressing makes mutation
+/// invalidation-free (the old hash simply keeps naming the old graph).
+#[test]
+fn dynamic_session_mutates_and_repartitions_over_live_tcp() {
+    let svc = Arc::new(Service::new(ServiceConfig { workers: 2, ..Default::default() }));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let _ = frontend::serve_tcp(svc, listener);
+        });
+    }
+    let g = generators::grid2d(12, 12);
+    let base = kahip::service::store::hash_graph(&g);
+    let (xadj, adjncy, _, _) = g.raw();
+    let arr = |v: &[u32]| v.iter().map(u32::to_string).collect::<Vec<_>>().join(",");
+
+    let mut sock = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    // one request/response round-trip at a time, so each line may address
+    // graphs the service only interned while handling an earlier line
+    let mut roundtrip = |line: String| {
+        sock.write_all(line.as_bytes()).unwrap();
+        sock.write_all(b"\n").unwrap();
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        let v = json::parse(&buf).unwrap();
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(true), "failed: {buf}");
+        v
+    };
+
+    let cold = roundtrip(format!(
+        r#"{{"id":"base","job":"partition","k":2,"seed":11,"xadj":[{}],"adjncy":[{}]}}"#,
+        arr(xadj),
+        arr(adjncy)
+    ));
+    assert_eq!(cold.get("graph").unwrap().as_str(), Some(base.as_str()));
+    let prev: Vec<i64> = cold
+        .get("part")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap())
+        .collect();
+
+    const OPS: &str = r#"[["del",0,1],["add",0,13,2]]"#;
+    let mutated =
+        roundtrip(format!(r#"{{"id":"mut","job":"mutate","graph":"{base}","ops":{OPS}}}"#));
+    let new_hash = mutated.get("new_graph").unwrap().as_str().unwrap().to_string();
+    assert_ne!(new_hash, base, "mutation must mint a fresh content address");
+    assert_eq!(mutated.get("n").unwrap().as_i64(), Some(144));
+    assert_eq!(mutated.get("m").unwrap().as_i64(), Some(264), "del one, add one");
+    assert_eq!(mutated.get("cached").and_then(|c| c.as_bool()), Some(false));
+
+    let prev_s = prev.iter().map(i64::to_string).collect::<Vec<_>>().join(",");
+    let rep = roundtrip(format!(
+        r#"{{"id":"rep","job":"repartition","k":2,"seed":11,"graph":"{base}","prev":[{prev_s}],"ops":{OPS},"migration_budget":6}}"#
+    ));
+    assert_eq!(
+        rep.get("new_graph").unwrap().as_str(),
+        Some(new_hash.as_str()),
+        "repartition names the same descendant the mutate job minted"
+    );
+    assert_eq!(rep.get("fallback").unwrap().as_bool(), Some(false));
+    let migrated = rep.get("migrated").unwrap().as_i64().unwrap();
+    assert!((0..=6).contains(&migrated), "budget 6, migrated {migrated}");
+    let part = rep.get("part").unwrap().as_arr().unwrap();
+    assert_eq!(part.len(), 144);
+    assert!(part.iter().all(|x| (0..2).contains(&x.as_i64().unwrap())));
+
+    // the descendant is addressable by hash alone — no resend of the CSR
+    let child = roundtrip(format!(
+        r#"{{"id":"child","job":"partition","k":2,"seed":11,"graph":"{new_hash}"}}"#
+    ));
+    assert_eq!(child.get("cached").and_then(|c| c.as_bool()), Some(false));
+    assert_eq!(child.get("part").unwrap().as_arr().unwrap().len(), 144);
+
+    // and the pre-mutation result is still served, from the memo, intact
+    let old = roundtrip(format!(
+        r#"{{"id":"old","job":"partition","k":2,"seed":11,"graph":"{base}"}}"#
+    ));
+    assert_eq!(old.get("cached").and_then(|c| c.as_bool()), Some(true));
+    assert_eq!(
+        old.get("part").unwrap().as_arr().unwrap(),
+        cold.get("part").unwrap().as_arr().unwrap(),
+        "mutation must not disturb results memoized for the old hash"
+    );
+}
+
 #[test]
 fn trace_round_trips_through_a_live_tcp_session() {
     // threads_per_job=2 exercises the parallel engine, so the trace's
