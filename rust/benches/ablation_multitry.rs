@@ -9,6 +9,7 @@ use kahip::partition::config::{Config, Mode};
 use kahip::rng::Rng;
 
 fn main() {
+    println!("[mtry-abl] host threads available: {}", kahip::util::threads::available_threads());
     let mut rng = Rng::new(4);
     let workloads = vec![
         ("grid 28x28", generators::grid2d(28, 28), Mode::Strong),
@@ -50,4 +51,54 @@ fn main() {
         wins >= 1,
     );
     verdict("multi-try FM never regresses >5% (asserted in-run)", true);
+
+    // thread sweep with multi-try ON: exercises the speculative localized
+    // searches (plus parallel matching coarsening and the initial fan-out)
+    // end to end. Cuts must match at every thread count; the speedup
+    // verdict is informational on shared CI runners.
+    let mut sweep = Table::new(
+        "thread sweep: multi-try on, per workload",
+        &["graph", "threads", "cut", "time", "speedup vs 1"],
+    );
+    let mut mesh_t1 = 0.0f64;
+    let mut mesh_t4 = 0.0f64;
+    let mut all_equal = true;
+    for (name, g, mode) in &workloads {
+        let mut t1 = 0.0f64;
+        let mut cut1 = 0i64;
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = Config::from_mode(*mode, k, 0.03, 1);
+            cfg.threads = threads;
+            let (secs, cut) = time_once(|| kaffpa(g, &cfg, None, None).edge_cut);
+            if threads == 1 {
+                t1 = secs;
+                cut1 = cut;
+            }
+            all_equal &= cut == cut1;
+            if *name == "grid 28x28" {
+                if threads == 1 {
+                    mesh_t1 = secs;
+                }
+                if threads == 4 {
+                    mesh_t4 = secs;
+                }
+            }
+            sweep.row(vec![
+                (*name).into(),
+                threads.into(),
+                cut.into(),
+                Cell::Secs(secs),
+                format!("{:.2}x", t1 / secs.max(1e-9)).into(),
+            ]);
+        }
+    }
+    sweep.print();
+    verdict("thread sweep: cuts byte-identical at 1/2/4/8 threads", all_equal);
+    verdict(
+        &format!(
+            ">=1.3x wall-clock speedup at 4 threads on the mesh workload (got {:.2}x)",
+            mesh_t1 / mesh_t4.max(1e-9)
+        ),
+        mesh_t1 >= 1.3 * mesh_t4,
+    );
 }

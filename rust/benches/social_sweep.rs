@@ -18,6 +18,10 @@ fn coarse_n(g: &Graph, mode: Mode) -> usize {
 }
 
 fn main() {
+    println!(
+        "[tab-social] host threads available: {}",
+        kahip::util::threads::available_threads()
+    );
     let mut rng = Rng::new(2);
     let workloads: Vec<(&str, Graph)> = vec![
         ("ba n=8000", generators::barabasi_albert(8000, 5, &mut rng)),

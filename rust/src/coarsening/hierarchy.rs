@@ -4,7 +4,7 @@
 
 use super::contraction::{contract_par, CoarseLevel};
 use super::lp_clustering::label_propagation_par;
-use super::matching::heavy_edge_matching;
+use super::matching::heavy_edge_matching_par;
 use crate::graph::Graph;
 use crate::partition::config::{Coarsening, Config};
 use crate::rng::Rng;
@@ -43,7 +43,7 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
             Coarsening::Matching => {
                 // pairs must respect the block bound; a safe per-node cap
                 // is bound/2 so even at the coarsest level nodes fit.
-                heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng)
+                heavy_edge_matching_par(&current, cfg.edge_rating, bound / 2, rng, threads)
             }
             Coarsening::ClusterLp => {
                 // size-constrained clustering: cap clusters well below the
@@ -63,7 +63,7 @@ pub fn build_hierarchy(input: &Graph, cfg: &Config, rng: &mut Rng) -> Hierarchy 
             // hybrid the social configurations of KaHIP use.
             crate::obs::count("lp_stall_retries", 1);
             let matched = crate::obs::phase("clustering", || {
-                heavy_edge_matching(&current, cfg.edge_rating, bound / 2, rng)
+                heavy_edge_matching_par(&current, cfg.edge_rating, bound / 2, rng, threads)
             });
             let m_lvl =
                 crate::obs::phase("contraction", || contract_par(&current, &matched, threads));

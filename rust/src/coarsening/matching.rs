@@ -23,6 +23,11 @@ pub fn rate_edge(g: &Graph, v: NodeId, u: NodeId, w: i64, rating: EdgeRating) ->
     }
 }
 
+/// Vertex-block size for the parallel rating pass. Fixed (never derived
+/// from the thread count) so the chunk boundaries — and therefore the
+/// chunk-ordered concatenation — are identical at every worker count.
+const RATE_CHUNK: usize = 512;
+
 /// Sorted heavy-edge matching. `max_cluster_weight` bounds the combined
 /// weight of a matched pair so coarse nodes cannot outgrow the balance
 /// bound of the partition to come. Returns a cluster id per node.
@@ -32,22 +37,68 @@ pub fn heavy_edge_matching(
     max_cluster_weight: i64,
     rng: &mut Rng,
 ) -> Vec<NodeId> {
+    heavy_edge_matching_par(g, rating, max_cluster_weight, rng, 1)
+}
+
+/// [`heavy_edge_matching`] with a parallel O(m) rating pass. Edge ratings
+/// are pure functions of the graph, so they are computed over
+/// `chunk_ranges` vertex blocks and concatenated in block order — exactly
+/// the serial edge enumeration order. The RNG tie-break keys are then
+/// drawn serially, one per edge in that same order, so the RNG stream,
+/// the sort and the greedy resolve are all byte-identical to the serial
+/// path at any `threads` value. `threads <= 1` takes the original
+/// single-loop path untouched.
+pub fn heavy_edge_matching_par(
+    g: &Graph,
+    rating: EdgeRating,
+    max_cluster_weight: i64,
+    rng: &mut Rng,
+    threads: usize,
+) -> Vec<NodeId> {
     let n = g.n();
-    // collect one record per undirected edge
+    // collect one record per undirected edge, in vertex order
     let mut edges: Vec<(f64, u32, u32, u64)> = Vec::with_capacity(g.m());
-    for v in g.nodes() {
-        for (u, w) in g.neighbors_w(v) {
-            if v < u {
-                // random tiebreak key decorrelates equal-rating edges
-                edges.push((rate_edge(g, v, u, w, rating), v, u, rng.next_u64()));
+    if threads <= 1 {
+        for v in g.nodes() {
+            for (u, w) in g.neighbors_w(v) {
+                if v < u {
+                    // random tiebreak key decorrelates equal-rating edges
+                    edges.push((rate_edge(g, v, u, w, rating), v, u, rng.next_u64()));
+                }
             }
         }
+    } else {
+        let ranges = crate::util::threads::chunk_ranges(n, RATE_CHUNK);
+        let rated: Vec<Vec<(f64, u32, u32)>> =
+            crate::util::threads::scoped_map(ranges.len(), threads, |i| {
+                let mut out = Vec::new();
+                for v in ranges[i].clone() {
+                    let v = v as u32;
+                    for (u, w) in g.neighbors_w(v) {
+                        if v < u {
+                            out.push((rate_edge(g, v, u, w, rating), v, u));
+                        }
+                    }
+                }
+                out
+            });
+        // serial decision point: one tie-break draw per edge, in the
+        // fixed chunk-ordered (== vertex-ordered) enumeration
+        for chunk in rated {
+            for (r, v, u) in chunk {
+                edges.push((r, v, u, rng.next_u64()));
+            }
+        }
+    }
+    if crate::obs::capturing() {
+        crate::obs::count("match_edges_rated", edges.len() as u64);
     }
     edges.sort_unstable_by(|a, b| {
         b.0.partial_cmp(&a.0).unwrap().then_with(|| a.3.cmp(&b.3))
     });
     let mut cluster: Vec<u32> = (0..n as u32).collect();
     let mut matched = vec![false; n];
+    let mut pairs = 0u64;
     for &(_, v, u, _) in &edges {
         if !matched[v as usize]
             && !matched[u as usize]
@@ -56,7 +107,11 @@ pub fn heavy_edge_matching(
             matched[v as usize] = true;
             matched[u as usize] = true;
             cluster[u as usize] = v;
+            pairs += 1;
         }
+    }
+    if crate::obs::capturing() {
+        crate::obs::count("match_pairs", pairs);
     }
     cluster
 }
@@ -193,5 +248,102 @@ mod tests {
         let a = heavy_edge_matching(&g, EdgeRating::ExpansionSquared, i64::MAX, &mut Rng::new(7));
         let b = heavy_edge_matching(&g, EdgeRating::ExpansionSquared, i64::MAX, &mut Rng::new(7));
         assert_eq!(a, b);
+    }
+
+    /// The tentpole contract for the parallel rating pass: byte-identical
+    /// cluster vectors (and identical post-call RNG state) at every
+    /// thread count, across the full family mix including multi-chunk
+    /// graphs.
+    #[test]
+    fn prop_parallel_matches_serial_exactly() {
+        let cfg = crate::util::quickcheck::Config { cases: 28, seed: 0x1b9_000A };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let g = crate::util::quickcheck::graphs::any(case, rng);
+            let rating = match case % 3 {
+                0 => EdgeRating::Weight,
+                1 => EdgeRating::ExpansionSquared,
+                _ => EdgeRating::WeightOverSize,
+            };
+            let bound = (g.total_node_weight() / 2).max(2);
+            let seed = 900 + case as u64;
+            let mut srng = Rng::new(seed);
+            let serial = heavy_edge_matching_par(&g, rating, bound, &mut srng, 1);
+            for t in [2usize, 4, 8] {
+                let mut prng = Rng::new(seed);
+                let par = heavy_edge_matching_par(&g, rating, bound, &mut prng, t);
+                crate::prop_assert!(par == serial, "cluster diverged at threads={t}");
+                crate::prop_assert!(
+                    prng.next_u64() == srng.clone().next_u64(),
+                    "rng stream diverged at threads={t}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// A graph large enough to span several RATE_CHUNK vertex blocks, so
+    /// the chunked rating pass genuinely fans out (the family samples are
+    /// mostly single-chunk).
+    #[test]
+    fn parallel_matches_serial_on_multichunk_grid() {
+        let g = generators::grid2d(48, 40); // 1920 nodes -> 4 chunks
+        assert!(g.n() > 3 * RATE_CHUNK);
+        let serial = heavy_edge_matching_par(
+            &g,
+            EdgeRating::ExpansionSquared,
+            i64::MAX,
+            &mut Rng::new(11),
+            1,
+        );
+        for t in [2usize, 4, 8] {
+            let par = heavy_edge_matching_par(
+                &g,
+                EdgeRating::ExpansionSquared,
+                i64::MAX,
+                &mut Rng::new(11),
+                t,
+            );
+            assert_eq!(par, serial, "threads={t}");
+        }
+        check_is_matching(&g, &serial);
+    }
+
+    /// Matching invariants over every quickcheck family: pairs are real
+    /// edges, no node is matched twice, the weight bound holds.
+    #[test]
+    fn prop_matching_invariants_all_families() {
+        let cfg = crate::util::quickcheck::Config { cases: 35, seed: 0x1b9_000B };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let g = crate::util::quickcheck::graphs::any(case, rng);
+            let bound = (g.total_node_weight() / 2).max(2);
+            let threads = 1 + case % 4;
+            let cl = heavy_edge_matching_par(
+                &g,
+                EdgeRating::ExpansionSquared,
+                bound,
+                rng,
+                threads,
+            );
+            let mut members: std::collections::HashMap<u32, Vec<u32>> = Default::default();
+            for (v, &c) in cl.iter().enumerate() {
+                members.entry(c).or_default().push(v as u32);
+            }
+            for (c, mem) in members {
+                crate::prop_assert!(mem.len() <= 2, "cluster {c} too big: {mem:?}");
+                crate::prop_assert!(
+                    mem.contains(&c),
+                    "cluster id {c} not among members {mem:?}"
+                );
+                if mem.len() == 2 {
+                    crate::prop_assert!(
+                        g.neighbors(mem[0]).contains(&mem[1]),
+                        "matched pair {mem:?} not adjacent"
+                    );
+                    let w = g.node_weight(mem[0]) + g.node_weight(mem[1]);
+                    crate::prop_assert!(w <= bound, "pair weight {w} exceeds bound {bound}");
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -7,7 +7,7 @@
 
 use crate::coarsening::{contract, CoarseLevel};
 use crate::coarsening::lp_clustering::label_propagation;
-use crate::coarsening::matching::heavy_edge_matching;
+use crate::coarsening::matching::heavy_edge_matching_par;
 use crate::graph::Graph;
 use crate::partition::config::{Coarsening, Config};
 use crate::partition::Partition;
@@ -28,7 +28,9 @@ fn partition_respecting_level(
     // cluster ids by block membership.
     let bound = cfg.bound(g.total_node_weight()).max(1);
     let raw = match cfg.coarsening {
-        Coarsening::Matching => heavy_edge_matching(g, cfg.edge_rating, bound / 2, rng),
+        Coarsening::Matching => {
+            heavy_edge_matching_par(g, cfg.edge_rating, bound / 2, rng, cfg.num_threads())
+        }
         Coarsening::ClusterLp => {
             label_propagation(g, Some((bound / 4).max(1)), cfg.lp_iterations, rng)
         }

@@ -12,7 +12,7 @@
 
 use crate::coarsening::contract;
 use crate::coarsening::lp_clustering::label_propagation;
-use crate::coarsening::matching::heavy_edge_matching;
+use crate::coarsening::matching::heavy_edge_matching_par;
 use crate::graph::Graph;
 use crate::partition::config::{Coarsening, Config};
 use crate::partition::Partition;
@@ -50,7 +50,7 @@ pub fn combine_with_clustering(
         let bound = cfg.bound(cur_g.total_node_weight()).max(1);
         let raw = match cfg.coarsening {
             Coarsening::Matching => {
-                heavy_edge_matching(&cur_g, cfg.edge_rating, bound / 2, rng)
+                heavy_edge_matching_par(&cur_g, cfg.edge_rating, bound / 2, rng, cfg.num_threads())
             }
             Coarsening::ClusterLp => {
                 label_propagation(&cur_g, Some((bound / 4).max(1)), cfg.lp_iterations, rng)

@@ -2,6 +2,12 @@
 //! proportional target weights, recurse on the two induced subgraphs.
 //! Each bisection is the best of BFS-grown candidates (plus the spectral
 //! sweep when a backend is supplied), polished by 2-way FM.
+//!
+//! [`partition`] is the unit of work of the parallel initial-partitioning
+//! fan-out in [`super::initial_partition`]: each repetition runs it on a
+//! private RNG stream derived from the caller's master stream, so the
+//! whole function is single-threaded by design and must stay a pure
+//! function of `(g, k, epsilon, rng state, backend)`.
 
 use super::bfs_growing::best_grown_bisection;
 use super::spectral::{fiedler_bisection, FiedlerBackend};

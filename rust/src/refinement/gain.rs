@@ -10,6 +10,27 @@ use crate::graph::Graph;
 use crate::partition::Partition;
 use crate::{BlockId, NodeId};
 
+/// Read-only view of a partition assignment — the two queries every
+/// gain computation needs. `Partition` implements it directly; the
+/// speculative multi-try path implements it on an epoch-stamped overlay
+/// so localized searches can run against a snapshot plus their own
+/// private moves while funnelling through the same [`select_best`] rule.
+pub trait PartitionView {
+    fn block_of(&self, v: NodeId) -> BlockId;
+    fn block_weight(&self, b: BlockId) -> i64;
+}
+
+impl PartitionView for Partition {
+    #[inline]
+    fn block_of(&self, v: NodeId) -> BlockId {
+        Partition::block_of(self, v)
+    }
+    #[inline]
+    fn block_weight(&self, b: BlockId) -> i64 {
+        Partition::block_weight(self, b)
+    }
+}
+
 /// Sparse per-call scratch for connectivity queries. Reused across calls
 /// to avoid O(k) clearing (only touched entries are reset).
 #[derive(Clone, Debug)]
@@ -26,10 +47,10 @@ impl GainScratch {
     /// Compute connectivities of `v` into all adjacent blocks. Returns
     /// `(conn_to_own, [(block, conn)] for other touched blocks)` through
     /// the provided closure to avoid allocation.
-    pub fn with_conns<R>(
+    pub fn with_conns<V: PartitionView + ?Sized, R>(
         &mut self,
         g: &Graph,
-        p: &Partition,
+        p: &V,
         v: NodeId,
         f: impl FnOnce(i64, &[u32], &[i64]) -> R,
     ) -> R {
@@ -56,10 +77,10 @@ impl GainScratch {
     /// subject to `weight[target] + c(v) <= bounds[target]`. Returns None
     /// if `v` has no neighbor outside its block or no feasible target.
     /// Ties prefer the lighter target block (helps balance drift).
-    pub fn best_move(
+    pub fn best_move<V: PartitionView + ?Sized>(
         &mut self,
         g: &Graph,
-        p: &Partition,
+        p: &V,
         v: NodeId,
         bounds: &[i64],
     ) -> Option<(BlockId, i64)> {
@@ -72,7 +93,13 @@ impl GainScratch {
     }
 
     /// Gain of moving `v` to a specific block `to`.
-    pub fn gain_to(&mut self, g: &Graph, p: &Partition, v: NodeId, to: BlockId) -> i64 {
+    pub fn gain_to<V: PartitionView + ?Sized>(
+        &mut self,
+        g: &Graph,
+        p: &V,
+        v: NodeId,
+        to: BlockId,
+    ) -> i64 {
         self.with_conns(g, p, v, |own_conn, _, conn| conn[to as usize] - own_conn)
     }
 }
@@ -84,8 +111,8 @@ impl GainScratch {
 /// depends on that). `cands` yields `(block, connectivity)` pairs in
 /// first-touch order; feasibility and the lighter-block tie-break read
 /// **live** block weights from `p`.
-pub fn select_best(
-    p: &Partition,
+pub fn select_best<V: PartitionView + ?Sized>(
+    p: &V,
     own: BlockId,
     vw: i64,
     own_conn: i64,
@@ -114,7 +141,7 @@ pub fn select_best(
 }
 
 /// Is `v` a boundary node (has a neighbor in another block)?
-pub fn is_boundary(g: &Graph, p: &Partition, v: NodeId) -> bool {
+pub fn is_boundary<V: PartitionView + ?Sized>(g: &Graph, p: &V, v: NodeId) -> bool {
     let b = p.block_of(v);
     g.neighbors(v).iter().any(|&u| p.block_of(u) != b)
 }

@@ -46,7 +46,7 @@ pub fn refine(g: &Graph, p: &mut Partition, cfg: &Config, rng: &mut Rng) -> i64 
         // keeps each try small — see EXPERIMENTS.md §Perf L3.
         let local_limit = (cfg.fm_unsuccessful_limit / 4).max(15);
         total += crate::obs::phase("refine_multitry", || {
-            multitry_fm::refine(g, p, &bounds, cfg.multitry_rounds, local_limit, rng)
+            multitry_fm::refine_par(g, p, &bounds, cfg.multitry_rounds, local_limit, rng, threads)
         });
     }
     if cfg.use_pairwise_fm {

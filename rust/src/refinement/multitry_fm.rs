@@ -2,16 +2,45 @@
 //! single boundary node* instead of the whole boundary, repeated from many
 //! random seeds. The localized start gives the search a higher chance to
 //! escape local optima that whole-boundary FM is stuck in.
+//!
+//! # Parallel localized searches (Mt-KaHyPar style)
+//!
+//! [`refine_par`] speculatively runs a batch of localized searches in
+//! parallel, each against the partition state *frozen at batch start*
+//! (read-only base + a private epoch-stamped overlay for the search's own
+//! moves), then applies the move sequences serially in batch order. A
+//! localized search is a pure function of `(g, partition state, bounds,
+//! seed, limit)` — it draws no randomness and reads no cross-search state
+//! — so a speculative result is **exactly** the serial result as long as
+//! the partition has not changed since the snapshot. The serial apply
+//! therefore re-checks each seed's eligibility against the live partition
+//! and uses the speculative result only while the batch is *clean*; the
+//! first applied search that actually moves nodes marks the batch dirty
+//! and every later seed in it is recomputed serially. Fully-rolled-back
+//! searches leave the partition untouched (they only consume their seeds
+//! for the round), so they keep the batch clean — on the mostly-converged
+//! rounds where multi-try spends its time, nearly all speculation lands.
+//! The batch size adapts to the observed clean run-length; since the
+//! stale path is exact, no batch size can change the output, and
+//! `threads == 1` takes the untouched serial loop.
 
-use super::gain::{is_boundary, GainScratch};
+use super::gain::{is_boundary, GainScratch, PartitionView};
 use super::pq::AddressablePQ;
 use crate::graph::Graph;
 use crate::partition::Partition;
 use crate::rng::Rng;
 
+/// Adaptive speculation batch bounds. Purely a performance knob: the
+/// stale-recompute path is byte-exact, so none of these can affect the
+/// output at any thread count.
+const MIN_BATCH: usize = 16;
+const MAX_BATCH: usize = 256;
+const START_BATCH: usize = 64;
+
 /// Run `rounds` passes; in each pass every boundary node (in random order)
 /// seeds one localized search. Returns total gain (>= 0 per search by
-/// rollback).
+/// rollback). Serial reference semantics — [`refine_par`] with any thread
+/// count produces byte-identical results.
 pub fn refine(
     g: &Graph,
     p: &mut Partition,
@@ -20,77 +49,354 @@ pub fn refine(
     unsuccessful_limit: usize,
     rng: &mut Rng,
 ) -> i64 {
-    // §Perf: one search context for ALL localized searches — the PQ, gain
-    // scratch, epoch-stamped moved-marker and journal are reused, so a
-    // search costs O(moves·deg·log) instead of O(n) allocation each.
-    let mut ctx = Ctx {
-        scratch: GainScratch::new(p.k()),
-        pq: AddressablePQ::new(g.n()),
-        moved_epoch: vec![0u32; g.n()],
-        epoch: 0,
-        consumed_round: vec![0u32; g.n()],
-        round: 0,
-        journal: Vec::new(),
-    };
+    refine_par(g, p, bounds, rounds, unsuccessful_limit, rng, 1)
+}
+
+/// [`refine`] with speculative parallel localized searches on up to
+/// `threads` workers (see the module docs for the determinism argument).
+pub fn refine_par(
+    g: &Graph,
+    p: &mut Partition,
+    bounds: &[i64],
+    rounds: usize,
+    unsuccessful_limit: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> i64 {
+    let n = g.n();
+    // §Perf: one search context for ALL serial localized searches — the
+    // PQ, gain scratch, epoch-stamped moved-marker and journal are
+    // reused, so a search costs O(moves·deg·log) instead of O(n)
+    // allocation each.
+    let mut bufs = SearchBufs::new(n, p.k());
+    let mut consumed_round = vec![0u32; n];
+    let mut round_no = 0u32;
+    // speculation worker contexts, pooled across batches and rounds
+    let spec_pool: std::sync::Mutex<Vec<WorkerBufs>> = std::sync::Mutex::new(Vec::new());
+    let mut obs_launched = 0u64;
+    let mut obs_applied = 0u64;
+    let mut obs_reverted = 0u64;
+    let mut obs_fresh = 0u64;
+    let mut obs_recomputed = 0u64;
+
     let mut total = 0i64;
     for _ in 0..rounds {
-        let mut boundary: Vec<u32> =
-            g.nodes().filter(|&v| is_boundary(g, p, v)).collect();
+        let mut boundary: Vec<u32> = g.nodes().filter(|&v| is_boundary(g, p, v)).collect();
         rng.shuffle(&mut boundary);
         let mut round_gain = 0i64;
         // §2.1: "in each round a node is moved at most once" — nodes a
         // search touched are not eligible as SEEDS again this round (the
         // consumed marker), which bounds a round's searches; movement
         // eligibility stays per-search so searches remain thorough.
-        ctx.round += 1;
-        for &seed in &boundary {
-            // skip seeds consumed by an earlier search of this round, and
-            // nodes that stopped being boundary due to earlier moves
-            if ctx.consumed_round[seed as usize] == ctx.round || !is_boundary(g, p, seed) {
-                continue;
+        round_no += 1;
+        if threads <= 1 {
+            for &seed in &boundary {
+                // skip seeds consumed by an earlier search of this round,
+                // and nodes that stopped being boundary due to earlier moves
+                if consumed_round[seed as usize] == round_no || !is_boundary(g, p, seed) {
+                    continue;
+                }
+                obs_launched += 1;
+                let (gain, best_len) =
+                    localized_search(g, p, bounds, seed, unsuccessful_limit, &mut bufs);
+                if best_len > 0 {
+                    obs_applied += 1;
+                } else {
+                    obs_reverted += 1;
+                }
+                for &(v, _) in &bufs.journal {
+                    consumed_round[v as usize] = round_no;
+                }
+                round_gain += gain;
             }
-            round_gain += localized_search(g, p, bounds, seed, unsuccessful_limit, &mut ctx);
+        } else {
+            let mut cur = 0usize;
+            let mut bsize = START_BATCH;
+            while cur < boundary.len() {
+                let end = (cur + bsize).min(boundary.len());
+                let batch = &boundary[cur..end];
+                cur = end;
+                // Phase A (parallel): speculative searches against the
+                // frozen partition; `p` and `consumed_round` are shared
+                // read-only for the whole phase.
+                let frozen: &Partition = p;
+                let consumed: &[u32] = &consumed_round;
+                let results: Vec<Option<SearchResult>> = crate::util::threads::scoped_map_with(
+                    batch.len(),
+                    threads,
+                    || PooledBufs::acquire(&spec_pool, n, frozen.k()),
+                    |pb, i| {
+                        let seed = batch[i];
+                        if consumed[seed as usize] == round_no
+                            || !is_boundary(g, frozen, seed)
+                        {
+                            return None;
+                        }
+                        Some(pb.get().speculate(g, frozen, bounds, seed, unsuccessful_limit))
+                    },
+                );
+                // Phase B (serial, batch order): live eligibility check,
+                // then either replay the speculative moves (clean) or
+                // recompute exactly (dirty).
+                let mut dirty = false;
+                let mut first_dirty: Option<usize> = None;
+                for (i, &seed) in batch.iter().enumerate() {
+                    if consumed_round[seed as usize] == round_no || !is_boundary(g, p, seed) {
+                        continue;
+                    }
+                    obs_launched += 1;
+                    if !dirty {
+                        // clean batch + live-eligible seed: the snapshot
+                        // equals the live partition, so the speculative
+                        // search exists and is exact.
+                        let r = results[i]
+                            .as_ref()
+                            .expect("clean-batch eligible seed was speculated");
+                        for &(v, to) in &r.applied {
+                            p.move_node(g, v, to);
+                        }
+                        for &v in &r.touched {
+                            consumed_round[v as usize] = round_no;
+                        }
+                        round_gain += r.gain;
+                        obs_fresh += 1;
+                        if r.applied.is_empty() {
+                            obs_reverted += 1;
+                        } else {
+                            obs_applied += 1;
+                            dirty = true;
+                            first_dirty = Some(i);
+                        }
+                    } else {
+                        let (gain, best_len) =
+                            localized_search(g, p, bounds, seed, unsuccessful_limit, &mut bufs);
+                        if best_len > 0 {
+                            obs_applied += 1;
+                        } else {
+                            obs_reverted += 1;
+                        }
+                        for &(v, _) in &bufs.journal {
+                            consumed_round[v as usize] = round_no;
+                        }
+                        round_gain += gain;
+                        obs_recomputed += 1;
+                    }
+                }
+                // adapt the batch to the observed clean run-length (a
+                // deterministic function of the algorithm state)
+                bsize = match first_dirty {
+                    None => (bsize * 2).min(MAX_BATCH),
+                    Some(j) => (2 * (j + 1)).clamp(MIN_BATCH, MAX_BATCH),
+                };
+            }
         }
         total += round_gain;
         if round_gain == 0 {
             break;
         }
     }
+    if crate::obs::capturing() {
+        crate::obs::count("mt_searches_launched", obs_launched);
+        crate::obs::count("mt_searches_applied", obs_applied);
+        crate::obs::count("mt_searches_reverted", obs_reverted);
+        // speculation accounting: snapshot results applied as-is vs.
+        // detected stale and recomputed serially (the recompute rate)
+        crate::obs::count("mt_spec_fresh", obs_fresh);
+        crate::obs::count("mt_spec_recomputed", obs_recomputed);
+    }
     total
 }
 
-/// Reusable buffers of the localized searches.
-struct Ctx {
+/// Partition state a localized search can read *and* move nodes in —
+/// the live [`Partition`] for the serial path, a [`SpecView`] overlay
+/// for the speculative path.
+trait SearchState: PartitionView {
+    fn apply_move(&mut self, g: &Graph, v: u32, to: u32) -> u32;
+}
+
+impl SearchState for Partition {
+    #[inline]
+    fn apply_move(&mut self, g: &Graph, v: u32, to: u32) -> u32 {
+        self.move_node(g, v, to)
+    }
+}
+
+/// A frozen base partition plus one search's private moves: node
+/// assignments are overlaid via epoch-stamped arrays (O(1) reset per
+/// search), block weights are a dense O(k) copy taken per search.
+struct SpecView<'a> {
+    base: &'a Partition,
+    epoch: u32,
+    over_epoch: &'a mut [u32],
+    over_block: &'a mut [u32],
+    weights: &'a mut [i64],
+}
+
+impl PartitionView for SpecView<'_> {
+    #[inline]
+    fn block_of(&self, v: u32) -> u32 {
+        if self.over_epoch[v as usize] == self.epoch {
+            self.over_block[v as usize]
+        } else {
+            self.base.block_of(v)
+        }
+    }
+    #[inline]
+    fn block_weight(&self, b: u32) -> i64 {
+        self.weights[b as usize]
+    }
+}
+
+impl SearchState for SpecView<'_> {
+    fn apply_move(&mut self, g: &Graph, v: u32, to: u32) -> u32 {
+        let from = self.block_of(v);
+        let w = g.node_weight(v);
+        self.weights[from as usize] -= w;
+        self.weights[to as usize] += w;
+        self.over_epoch[v as usize] = self.epoch;
+        self.over_block[v as usize] = to;
+        from
+    }
+}
+
+/// Reusable buffers of the localized searches (serial or speculative).
+struct SearchBufs {
     scratch: GainScratch,
     pq: AddressablePQ,
     moved_epoch: Vec<u32>,
     epoch: u32,
-    /// round-stamp of nodes already claimed by some search this round
-    consumed_round: Vec<u32>,
-    round: u32,
     journal: Vec<(u32, u32)>,
+}
+
+impl SearchBufs {
+    fn new(n: usize, k: u32) -> Self {
+        Self {
+            scratch: GainScratch::new(k),
+            pq: AddressablePQ::new(n),
+            moved_epoch: vec![0u32; n],
+            epoch: 0,
+            journal: Vec::new(),
+        }
+    }
+}
+
+/// One speculation worker's full context: search buffers plus the
+/// overlay arrays backing a [`SpecView`].
+struct WorkerBufs {
+    search: SearchBufs,
+    over_epoch: Vec<u32>,
+    over_block: Vec<u32>,
+    weights: Vec<i64>,
+    view_epoch: u32,
+}
+
+impl WorkerBufs {
+    fn new(n: usize, k: u32) -> Self {
+        Self {
+            search: SearchBufs::new(n, k),
+            over_epoch: vec![0u32; n],
+            over_block: vec![0u32; n],
+            weights: vec![0i64; k as usize],
+            view_epoch: 0,
+        }
+    }
+
+    /// Run one speculative localized search against `frozen` and package
+    /// the outcome for serial replay.
+    fn speculate(
+        &mut self,
+        g: &Graph,
+        frozen: &Partition,
+        bounds: &[i64],
+        seed: u32,
+        unsuccessful_limit: usize,
+    ) -> SearchResult {
+        self.view_epoch += 1;
+        self.weights.copy_from_slice(frozen.block_weights());
+        let mut view = SpecView {
+            base: frozen,
+            epoch: self.view_epoch,
+            over_epoch: &mut self.over_epoch,
+            over_block: &mut self.over_block,
+            weights: &mut self.weights,
+        };
+        let (gain, best_len) =
+            localized_search(g, &mut view, bounds, seed, unsuccessful_limit, &mut self.search);
+        // after rollback past `best_len`, the overlay holds exactly the
+        // kept prefix; each node moves at most once per search, so its
+        // overlay block IS the replay target
+        let applied: Vec<(u32, u32)> = self.search.journal[..best_len]
+            .iter()
+            .map(|&(v, _)| (v, view.block_of(v)))
+            .collect();
+        let touched: Vec<u32> = self.search.journal.iter().map(|&(v, _)| v).collect();
+        SearchResult { gain, applied, touched }
+    }
+}
+
+/// Outcome of one speculative localized search.
+struct SearchResult {
+    gain: i64,
+    /// kept move prefix, in journal order: `(node, target block)`
+    applied: Vec<(u32, u32)>,
+    /// every node the search journaled (incl. rolled-back moves) — all
+    /// are consumed for the round, exactly like the serial path
+    touched: Vec<u32>,
+}
+
+/// A [`WorkerBufs`] checked out of the shared pool; returns itself on
+/// drop so batches and rounds reuse the O(n) allocations.
+struct PooledBufs<'a> {
+    bufs: Option<WorkerBufs>,
+    pool: &'a std::sync::Mutex<Vec<WorkerBufs>>,
+}
+
+impl<'a> PooledBufs<'a> {
+    fn acquire(pool: &'a std::sync::Mutex<Vec<WorkerBufs>>, n: usize, k: u32) -> Self {
+        let bufs = pool.lock().unwrap().pop().unwrap_or_else(|| WorkerBufs::new(n, k));
+        Self { bufs: Some(bufs), pool }
+    }
+
+    fn get(&mut self) -> &mut WorkerBufs {
+        self.bufs.as_mut().expect("pooled bufs present until drop")
+    }
+}
+
+impl Drop for PooledBufs<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.bufs.take() {
+            self.pool.lock().unwrap().push(b);
+        }
+    }
 }
 
 /// One localized FM search seeded at `seed`. The PQ starts with only the
 /// seed; neighbors become eligible as nodes move. Rollback to the best
-/// prefix guarantees non-negative gain.
-fn localized_search(
+/// prefix guarantees non-negative gain. Returns `(gain, best_len)`; the
+/// full journal (kept prefix + rolled-back tail) is left in
+/// `bufs.journal` for the caller's consumed-marking.
+///
+/// Determinism: the search is a pure function of `(g, state, bounds,
+/// seed, unsuccessful_limit)` — buffer reuse, epochs and PQ insertion
+/// stamps are search-local, and no randomness is drawn — which is what
+/// makes the speculative replay in [`refine_par`] exact.
+fn localized_search<S: SearchState>(
     g: &Graph,
-    p: &mut Partition,
+    state: &mut S,
     bounds: &[i64],
     seed: u32,
     unsuccessful_limit: usize,
-    ctx: &mut Ctx,
-) -> i64 {
-    ctx.epoch += 1;
-    let epoch = ctx.epoch;
-    ctx.pq.clear();
-    ctx.journal.clear();
-    let moved = &mut ctx.moved_epoch;
+    bufs: &mut SearchBufs,
+) -> (i64, usize) {
+    bufs.epoch += 1;
+    let epoch = bufs.epoch;
+    bufs.pq.clear();
+    bufs.journal.clear();
+    let moved = &mut bufs.moved_epoch;
 
-    match ctx.scratch.best_move(g, p, seed, bounds) {
-        Some((_, gain)) => ctx.pq.insert(seed, gain),
-        None => return 0,
+    match bufs.scratch.best_move(g, &*state, seed, bounds) {
+        Some((_, gain)) => bufs.pq.insert(seed, gain),
+        None => return (0, 0),
     }
 
     let mut cur = 0i64;
@@ -100,48 +406,47 @@ fn localized_search(
     // localized searches stay small: cap the number of moves
     let move_cap = (unsuccessful_limit * 4).max(16);
 
-    while let Some((v, _)) = ctx.pq.pop() {
+    while let Some((v, _)) = bufs.pq.pop() {
         if moved[v as usize] == epoch {
             continue;
         }
-        let Some((to, gain)) = ctx.scratch.best_move(g, p, v, bounds) else {
+        let Some((to, gain)) = bufs.scratch.best_move(g, &*state, v, bounds) else {
             continue;
         };
-        let from = p.move_node(g, v, to);
+        let from = state.apply_move(g, v, to);
         moved[v as usize] = epoch;
-        ctx.journal.push((v, from));
+        bufs.journal.push((v, from));
         cur += gain;
         if cur > best {
             best = cur;
-            best_len = ctx.journal.len();
+            best_len = bufs.journal.len();
             since_best = 0;
         } else {
             since_best += 1;
-            if since_best > unsuccessful_limit || ctx.journal.len() >= move_cap {
+            if since_best > unsuccessful_limit || bufs.journal.len() >= move_cap {
                 break;
             }
         }
         for &u in g.neighbors(v) {
-            if moved[u as usize] == epoch || ctx.pq.contains(u) {
+            if moved[u as usize] == epoch || bufs.pq.contains(u) {
                 // lazy priorities: queued nodes keep their stale key — the
                 // pop re-validates with a fresh best_move anyway. This
                 // turns the hub-quadratic O(Σ deg(u)·deg(u)) neighbor
                 // refresh on social graphs into O(Σ deg(u)).
                 continue;
             }
-            if let Some((_, ug)) = ctx.scratch.best_move(g, p, u, bounds) {
-                ctx.pq.insert(u, ug);
+            if let Some((_, ug)) = bufs.scratch.best_move(g, &*state, u, bounds) {
+                bufs.pq.insert(u, ug);
             }
         }
     }
-    for &(v, from) in ctx.journal[best_len..].iter().rev() {
-        p.move_node(g, v, from);
+    // roll back past the best prefix (reverse order restores weights and
+    // assignments exactly)
+    for i in (best_len..bufs.journal.len()).rev() {
+        let (v, from) = bufs.journal[i];
+        state.apply_move(g, v, from);
     }
-    // every node this search touched is consumed for the round
-    for &(v, _) in &ctx.journal {
-        ctx.consumed_round[v as usize] = ctx.round;
-    }
-    best
+    (best, best_len)
 }
 
 #[cfg(test)]
@@ -192,5 +497,71 @@ mod tests {
         let gain = refine(&g, &mut p, &vec![bound; 4], 3, 40, &mut rng);
         assert!(gain > 0, "noisy quadrants should improve");
         assert_eq!(metrics::edge_cut(&g, &p), before - gain);
+    }
+
+    /// Tentpole contract: the speculative batched path is byte-identical
+    /// to the serial path at every thread count — same total gain, same
+    /// partition, same post-call RNG state.
+    #[test]
+    fn prop_parallel_matches_serial_exactly() {
+        let cfg = crate::util::quickcheck::Config { cases: 24, seed: 0x1b9_000D };
+        crate::util::quickcheck::forall(&cfg, |case, rng| {
+            let n = 30 + case * 10;
+            let g = generators::random_weighted(n, 3 * n, 1, 3, rng);
+            let k = 2 + (case % 3) as u32;
+            let part: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+            let maxw = {
+                let p = Partition::from_assignment(&g, k, part.clone());
+                p.max_block_weight().max(1)
+            };
+            let bounds = vec![maxw; k as usize];
+            let seed = 800 + case as u64;
+            let mut serial = Partition::from_assignment(&g, k, part.clone());
+            let mut srng = Rng::new(seed);
+            let sgain = refine_par(&g, &mut serial, &bounds, 3, 25, &mut srng, 1);
+            for t in [2usize, 4, 8] {
+                let mut par = Partition::from_assignment(&g, k, part.clone());
+                let mut prng = Rng::new(seed);
+                let pgain = refine_par(&g, &mut par, &bounds, 3, 25, &mut prng, t);
+                crate::prop_assert!(pgain == sgain, "gain diverged at threads={t}");
+                crate::prop_assert!(par == serial, "partition diverged at threads={t}");
+                crate::prop_assert!(
+                    prng.next_u64() == srng.clone().next_u64(),
+                    "rng stream diverged at threads={t}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The noisy-quadrant improvement case, cross-checked at several
+    /// thread counts (exercises multi-batch rounds with real gains, i.e.
+    /// the dirty→recompute path).
+    #[test]
+    fn parallel_improves_identically_to_serial() {
+        let g = generators::grid2d(16, 16);
+        let mut part: Vec<u32> = g
+            .nodes()
+            .map(|v| {
+                let (x, y) = (v % 16, v / 16);
+                (if x < 8 { 0 } else { 1 }) + (if y < 8 { 0 } else { 2 })
+            })
+            .collect();
+        let mut noise = Rng::new(13);
+        for _ in 0..60 {
+            let i = noise.index(part.len());
+            part[i] = noise.below(4) as u32;
+        }
+        let bound = crate::util::block_weight_bound(g.total_node_weight(), 4, 0.10);
+        let bounds = vec![bound; 4];
+        let mut serial = Partition::from_assignment(&g, 4, part.clone());
+        let sgain = refine_par(&g, &mut serial, &bounds, 3, 40, &mut Rng::new(5), 1);
+        assert!(sgain > 0);
+        for t in [2usize, 4, 8] {
+            let mut par = Partition::from_assignment(&g, 4, part.clone());
+            let pgain = refine_par(&g, &mut par, &bounds, 3, 40, &mut Rng::new(5), t);
+            assert_eq!(pgain, sgain, "threads={t}");
+            assert_eq!(par, serial, "threads={t}");
+        }
     }
 }

@@ -100,6 +100,36 @@ fn every_job_kind_is_byte_identical_across_thread_counts() {
     }
 }
 
+/// The strong configurations exercise the phases parallelized by the
+/// localized multi-try PR hardest: `Strong` coarsens by heavy-edge
+/// **matching** (parallel rating pass) and both strong modes run
+/// **multi-try FM** (speculative batched localized searches) plus the
+/// 8-repetition initial-partitioning fan-out. Byte-identical rendered
+/// responses across 1/2/4/8 threads pin all three at once, on top of the
+/// Eco matrix above.
+#[test]
+fn strong_configs_are_byte_identical_across_thread_counts() {
+    for (gname, g) in headline_graphs() {
+        for kind in [JobKind::Partition, JobKind::Separator] {
+            for (seed, mode) in [(11u64, Mode::Strong), (23, Mode::StrongSocial)] {
+                let spec = spec_for(kind, seed, mode);
+                let baseline = execute_with_threads(&g, &spec, THREADS[0])
+                    .unwrap_or_else(|e| panic!("{gname}/{kind:?} seed {seed} failed: {e}"));
+                let want = canonical_line(kind, baseline);
+                for &t in &THREADS[1..] {
+                    let out = execute_with_threads(&g, &spec, t)
+                        .unwrap_or_else(|e| panic!("{gname}/{kind:?} t={t} failed: {e}"));
+                    assert_eq!(
+                        canonical_line(kind, out),
+                        want,
+                        "{gname}/{kind:?} seed {seed} {mode:?}: {t} threads diverged from 1"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Observability must not perturb results: running a job with tracing
 /// captured ([`execute_traced`] with `trace: true`) renders the identical
 /// response line as the untraced run, for every job kind at every thread
